@@ -1,0 +1,54 @@
+"""Fig. 16 analogue: CFD speedup after each optimization step
+(baseline KBK → CKE-with-channel → + kernel balancing), measured and
+modeled, mirroring §7.3.1."""
+from __future__ import annotations
+
+from repro import workloads
+from repro.core import (ChipSpec, compile_plan, cke_timeline,
+                        kbk_timeline, optimize, plan_cke, profile_graph,
+                        ResourceModel, Factors)
+
+from .common import csv_row, time_fn
+
+
+def run() -> list[str]:
+    graph, buffers = workloads.cfd.build(n=1 << 16)
+    graph = profile_graph(graph, buffers)
+    model = ResourceModel(ChipSpec.cpu())
+    plan = plan_cke(graph)
+    compiled, report = optimize(graph, model=ResourceModel(ChipSpec.cpu()))
+
+    kbk = compile_plan(plan, mode="kbk")
+    cke = compile_plan(plan)
+
+    t_kbk = time_fn(kbk, buffers)
+    t_cke = time_fn(cke, buffers)
+
+    times = {s.name: s.profile.time_s for s in graph.stages}
+    utils = {s.name: model.estimate(s, Factors()) for s in graph.stages}
+    tl_kbk = kbk_timeline(graph.topo_order(), times, utils)
+    tl_cke = cke_timeline(plan.groups, times, utils)
+
+    # balanced: stage times divide by granted N_uni (Alg. 1 estimate)
+    n_uni = report.balance.n_uni() if report.balance else {}
+    times_bal = {k: v / max(n_uni.get(k, 1), 1) for k, v in times.items()}
+    tl_bal = cke_timeline(plan.groups, times_bal, utils)
+
+    rows = [
+        csv_row("fig16_cfd_kbk", t_kbk * 1e6, "speedup=1.00"),
+        csv_row("fig16_cfd_channel", t_cke * 1e6,
+                f"speedup={t_kbk/t_cke:.2f};"
+                f"modeled={tl_kbk.makespan/tl_cke.makespan:.2f}"),
+        csv_row("fig16_cfd_balanced", t_cke * 1e6,
+                f"modeled={tl_kbk.makespan/tl_bal.makespan:.2f};"
+                f"n_uni={n_uni}"),
+        csv_row("fig16_cfd_eru", 0.0,
+                f"kbk_eru={tl_kbk.time_weighted_eru:.3f};"
+                f"cke_eru={tl_cke.time_weighted_eru:.3f}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,70 @@
+"""Roofline table from the multi-pod dry-run artifacts (§Roofline).
+
+Per (arch × shape × mesh) cell: the three roofline terms (compute /
+memory / collective, in seconds), the dominant bottleneck, MODEL_FLOPS
+/ HLO_FLOPs usefulness ratio, and a one-line "what would move the
+dominant term" note.  Reads results/dryrun/*.json produced by
+`python -m repro.launch.dryrun --all`.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import csv_row
+
+DRYRUN = pathlib.Path("results/dryrun")
+
+ADVICE = {
+    "compute": ("raise MXU occupancy: larger per-device batch or less TP "
+                "for this size"),
+    "memory": ("cut HBM traffic: Pallas-fuse attention/FFN stage pairs "
+               "(probs stay in VMEM), bf16 intermediates, wider fusion"),
+    "collective": ("cut ICI traffic: bf16 collectives, sequence-parallel "
+                   "norms, DP-over-model for small archs, all-to-all MoE "
+                   "dispatch"),
+}
+
+
+def load(dirpath: pathlib.Path = DRYRUN) -> list[dict]:
+    recs = []
+    for p in sorted(dirpath.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run(dirpath: pathlib.Path = DRYRUN) -> list[str]:
+    rows = []
+    recs = load(dirpath)
+    compiled = [r for r in recs if "skipped" not in r]
+    skipped = [r for r in recs if "skipped" in r]
+    for r in sorted(compiled,
+                    key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["terms_s"]
+        bound = r["bottleneck"]
+        step_s = max(t.values())
+        rows.append(csv_row(
+            f"roofline_{r['arch']}__{r['shape']}__{r['mesh']}",
+            step_s * 1e6,
+            f"compute_s={t['compute']:.4f};memory_s={t['memory']:.4f};"
+            f"collective_s={t['collective']:.4f};bottleneck={bound};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+            f"roofline_fraction={t['compute']/step_s:.3f};"
+            f"advice={ADVICE[bound]}"))
+    for r in sorted(skipped,
+                    key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rows.append(csv_row(
+            f"roofline_{r['arch']}__{r['shape']}__{r['mesh']}", 0.0,
+            f"SKIPPED: {r['skipped'][:80]}"))
+    n_bound = {}
+    for r in compiled:
+        n_bound[r["bottleneck"]] = n_bound.get(r["bottleneck"], 0) + 1
+    rows.append(csv_row("roofline_summary", 0.0,
+                        f"cells={len(compiled)};skipped={len(skipped)};"
+                        f"bottlenecks={n_bound}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,35 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig14_speedup, fig16_cfd, fig17_bp_splitting,
+                   kernels_bench, roofline, table2_resources)
+    sections = [
+        ("fig14 (per-workload speedup)", fig14_speedup),
+        ("table2 (resources/ERU)", table2_resources),
+        ("fig16 (CFD case study)", fig16_cfd),
+        ("fig17/§7.3.2 (BP splitting)", fig17_bp_splitting),
+        ("kernels", kernels_bench),
+        ("roofline (dry-run)", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in sections:
+        print(f"# --- {title} ---")
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Table 2 analogue: per-workload resource utilization and ERU for the
+baseline (naive factors) vs the balanced configuration, on the TPU
+resource model (MXU/HBM-BW/VMEM/HBM-cap/ICI instead of ALUT/FF/RAM/DSP)."""
+from __future__ import annotations
+
+from repro import workloads
+from repro.core import (ChipSpec, Factors, ResourceModel, eru,
+                        optimize, profile_graph)
+
+from .common import csv_row
+
+
+def run() -> list[str]:
+    rows = []
+    model = ResourceModel(ChipSpec.cpu())
+    for name, mod in sorted(workloads.ALL.items()):
+        graph, buffers = mod.build()
+        graph = profile_graph(graph, buffers)
+        _, report = optimize(graph, model=ResourceModel(ChipSpec.cpu()))
+        base_eru = {}
+        opt_eru = {}
+        for s in graph.stages:
+            base_util = model.estimate(s, Factors())
+            base_eru[s.name] = eru(base_util)
+            f = (report.balance.factors.get(s.name, Factors())
+                 if report.balance else Factors())
+            opt_eru[s.name] = eru(model.estimate(s, f))
+        n_uni = report.balance.n_uni() if report.balance else {}
+        rows.append(csv_row(
+            f"table2_{name}", 0.0,
+            f"base_eru={ {k: round(v,3) for k,v in base_eru.items()} };"
+            f"opt_eru={ {k: round(v,3) for k,v in opt_eru.items()} };"
+            f"n_uni={n_uni}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,54 @@
+"""Workgroup-id remapping demo (paper §5.4.4 / Fig. 11) on blocked LUD.
+
+Shows the dependency wavefront, the constructed id_queue, and the modeled
+pipeline makespans with and without remapping; then executes the chunked
+NaN-poisoned plan to prove the queue is dependency-legal.
+
+    PYTHONPATH=src python examples/lud_remapping.py
+"""
+import numpy as np
+
+from repro import workloads
+from repro.core import analyze_graph, build_id_queue, compile_plan, \
+    plan_cke, profile_graph, validate_queue
+from repro.core.depanalysis import merge_deps
+from repro.core.idremap import RemapPlan, pipeline_makespan
+
+
+def main() -> None:
+    nb = 8
+    graph, buffers = workloads.lud.build(nb=nb)
+    infos = analyze_graph(graph)
+    merged = merge_deps(list(infos.values()))
+    print(f"dependency: fan-in={merged.max_fan_in} "
+          f"fan-out={merged.max_fan_out} → {merged.category}")
+
+    q = build_id_queue(merged)
+    assert validate_queue(merged, q)
+    print("\nid_queue (consumer (i,j) in execution order):")
+    coords = [(c // nb, c % nb) for c in q.queue]
+    for row in range(0, len(coords), nb):
+        print("  ", coords[row:row + nb])
+
+    natural = RemapPlan(
+        queue=tuple(range(merged.n_consumer_tiles)),
+        ready_after=tuple(max(merged.deps[c], default=-1) + 1
+                          for c in range(merged.n_consumer_tiles)))
+    for rate in (0.5, 1.0, 2.0):
+        t_nat = pipeline_makespan(merged, natural, producer_rate=rate)
+        t_rem = pipeline_makespan(merged, q, producer_rate=rate)
+        print(f"producer_rate={rate}: natural={t_nat:.1f} "
+              f"remapped={t_rem:.1f} ({t_nat/t_rem:.2f}x)")
+
+    graph = profile_graph(graph, buffers)
+    plan = plan_cke(graph)
+    out = compile_plan(plan)(buffers)
+    ref = graph.run_reference(buffers)
+    np.testing.assert_allclose(np.asarray(out["out"]),
+                               np.asarray(ref["out"]), rtol=1e-5, atol=1e-5)
+    print("\nchunked execution in queue order matches reference ✓ "
+          "(NaN-poisoned buffers prove legality)")
+
+
+if __name__ == "__main__":
+    main()

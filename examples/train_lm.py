@@ -1,0 +1,46 @@
+"""End-to-end training driver example: train a reduced granite-3-8b for a
+few hundred steps on CPU with the full substrate (sharded params, AdamW,
+remat, async checkpointing, restart, straggler monitor).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+This is the (b) end-to-end driver: ~1M-param LM, real tokens, loss curve
+printed; re-running resumes from the checkpoint directory.
+"""
+import argparse
+import logging
+
+from repro.launch.train import build
+from repro.runtime import FTConfig, TrainDriver
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    cfg, mesh, state, step_fn, data = build(
+        args.arch, smoke=True, global_batch=8, seq_len=128, lr=3e-3)
+    print(f"arch={cfg.name}  params={cfg.n_params()/1e6:.2f}M  "
+          f"mesh={dict(mesh.shape)}")
+
+    driver = TrainDriver.resume_or_init(
+        step_fn, data, FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50),
+        state)
+    driver.run(args.steps)
+
+    losses = [m["loss"] for m in driver.metrics_log]
+    stride = max(len(losses) // 10, 1)
+    for i in range(0, len(losses), stride):
+        print(f"  step {driver.metrics_log[i]['step']:4d}  "
+              f"loss {losses[i]:.4f}")
+    print(f"final loss: {losses[-1]:.4f} (started {losses[0]:.4f})")
+    if driver.monitor.events:
+        print(f"stragglers detected: {driver.monitor.events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout: <dir>/step_<N>/{arrays.npz, manifest.json} written to a temp dir
+and atomically renamed, so a crash mid-save never corrupts the latest
+checkpoint.  `CheckpointManager` keeps a bounded history, saves on a
+background thread (training continues), and `restore()` resharding arrays
+onto whatever mesh the restarted job has (elastic restarts).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str | pathlib.Path, step: int, tree: Any,
+                    extra: dict | None = None) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}_{time.time_ns()}"
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic publish
+    return final
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")
+             if (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | pathlib.Path, step: int,
+                    like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of `like`; reshard when given shardings."""
+    path = pathlib.Path(directory) / f"step_{step:08d}"
+    data = np.load(path / "arrays.npz")
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves_paths))
+    out = []
+    for (path_k, leaf), sh in zip(leaves_paths, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint {arr.shape} vs "
+                             f"model {tuple(leaf.shape)}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async bounded-history manager with crash-safe publishes."""
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             blocking: bool = False) -> None:
+        self.wait()                        # one in flight at a time
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+
+        def _run():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:     # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> tuple[int, Any] | None:
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        return step, load_checkpoint(self.directory, step, like, shardings)
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}",
+                          ignore_errors=True)

@@ -1,0 +1,6 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from .registry import ARCHS, get_config, get_smoke, list_archs
+from .shapes import SHAPES, cells, input_specs, skip_reason
+
+__all__ = ["ARCHS", "get_config", "get_smoke", "list_archs",
+           "SHAPES", "cells", "input_specs", "skip_reason"]

@@ -1,0 +1,35 @@
+"""command-r-plus-104b — dense, GQA kv8, no-bias, parallel attn+FFN block.
+[hf:CohereForAI/c4ai-command-r-v01-style]"""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    act="silu",
+    norm="layernorm",
+    parallel_block=True,
+)
+
+SMOKE = ModelConfig(
+    name="command-r-plus-104b-smoke",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=512,
+    act="silu",
+    norm="layernorm",
+    parallel_block=True,
+)

@@ -1,0 +1,35 @@
+"""granite-3-8b — dense, GQA kv8, tied embeddings.
+[hf:ibm-granite/granite-3.0-style]"""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=12800,
+    vocab_size=49155,
+    act="silu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="granite-3-8b-smoke",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=515,            # deliberately odd: exercises vocab padding
+    act="silu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+)

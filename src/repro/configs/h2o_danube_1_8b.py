@@ -1,0 +1,35 @@
+"""h2o-danube-1.8b — dense, GQA kv8, sliding-window attention (mistral mix).
+[arXiv:2401.16818]  Runs long_500k: SWA keeps the KV state bounded."""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.SWA),),
+    n_repeats=24,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=32000,
+    window=4096,
+    act="silu",
+    norm="rmsnorm",
+)
+
+SMOKE = ModelConfig(
+    name="h2o-danube-1.8b-smoke",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.SWA),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=512,
+    window=32,
+    act="silu",
+    norm="rmsnorm",
+)

@@ -1,0 +1,36 @@
+"""internvl2-76b — VLM backbone (InternLM2-style LM); the InternViT vision
+tower is a STUB: input_specs provide precomputed patch embeddings.
+[arXiv:2404.16821]"""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    act="silu",
+    norm="rmsnorm",
+    num_patches=256,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-76b-smoke",
+    family="vlm",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=512,
+    act="silu",
+    norm="rmsnorm",
+    num_patches=4,
+)

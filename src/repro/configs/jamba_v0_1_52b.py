@@ -1,0 +1,60 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 7:1 interleave, MoE every 2nd
+layer (16 experts top-2).  [arXiv:2403.19887]
+
+Pattern of 8 layers repeated 4× = 32 layers; attention sits at pattern
+position 4 (the paper's 1:7 ratio), MoE on odd positions.  The Mamba mixer
+is the unified Mamba-2 SSD block (Jamba v0.1 used Mamba-1 with d_state=16;
+we keep d_state=16 but the SSD formulation — documented in DESIGN.md)."""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+_PATTERN = tuple(
+    LayerSpec(
+        kind=LayerKind.ATTN if i == 4 else LayerKind.MAMBA,
+        moe=(i % 2 == 1),
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    pattern=_PATTERN,
+    n_repeats=4,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    act="silu",
+    norm="rmsnorm",
+    num_experts=16,
+    experts_per_tok=2,
+    moe_d_ff=14336,
+    ssm_state=16,
+    ssm_head_dim=64,
+    ssm_expand=2,
+)
+
+SMOKE = ModelConfig(
+    name="jamba-v0.1-52b-smoke",
+    family="hybrid",
+    pattern=tuple(
+        LayerSpec(kind=LayerKind.ATTN if i == 1 else LayerKind.MAMBA,
+                  moe=(i % 2 == 1)) for i in range(4)),
+    n_repeats=1,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    act="silu",
+    norm="rmsnorm",
+    num_experts=4,
+    experts_per_tok=2,
+    moe_d_ff=128,
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_expand=2,
+)

@@ -1,0 +1,41 @@
+"""llama4-scout-17b-a16e — MoE 16 experts top-1 + shared expert.
+[hf:meta-llama/Llama-4-Scout-17B-16E]  40 q-heads → padded to 48 for TP=16."""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    pattern=(LayerSpec(kind=LayerKind.ATTN, moe=True),),
+    n_repeats=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    act="silu",
+    norm="rmsnorm",
+    num_experts=16,
+    experts_per_tok=1,
+    moe_d_ff=8192,
+    moe_shared_expert=True,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-scout-17b-a16e-smoke",
+    family="moe",
+    pattern=(LayerSpec(kind=LayerKind.ATTN, moe=True),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=5,               # deliberately odd: exercises head padding
+    num_kv_heads=1,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=512,
+    act="silu",
+    norm="rmsnorm",
+    num_experts=4,
+    experts_per_tok=1,
+    moe_d_ff=96,
+    moe_shared_expert=True,
+)

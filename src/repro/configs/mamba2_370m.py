@@ -1,0 +1,42 @@
+"""mamba2-370m — pure SSM (SSD, state-space duality), attention-free,
+no FFN blocks.  [arXiv:2405.21060]  d_inner = 2·1024 = 2048, head_dim 64
+→ 32 SSD heads, d_state=128.  Runs long_500k (constant decode state)."""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    pattern=(LayerSpec(kind=LayerKind.MAMBA, ffn=False),),
+    n_repeats=48,
+    d_model=1024,
+    num_heads=8,               # unused (attention-free); kept for config API
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=50280,
+    act="silu",
+    norm="rmsnorm",
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-370m-smoke",
+    family="ssm",
+    pattern=(LayerSpec(kind=LayerKind.MAMBA, ffn=False),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=0,
+    vocab_size=512,
+    act="silu",
+    norm="rmsnorm",
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_expand=2,
+    tie_embeddings=True,
+)

@@ -1,0 +1,34 @@
+"""nemotron-4-15b — dense, GQA kv8, squared-ReLU MLP, LayerNorm.
+[arXiv:2402.16819]"""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=256000,
+    act="relu2",
+    norm="layernorm",
+    rope_theta=10000.0,
+)
+
+SMOKE = ModelConfig(
+    name="nemotron-4-15b-smoke",
+    family="dense",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=256,
+    vocab_size=512,
+    act="relu2",
+    norm="layernorm",
+)

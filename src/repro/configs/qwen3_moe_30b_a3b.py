@@ -1,0 +1,41 @@
+"""qwen3-moe-30b-a3b — MoE 128 experts top-8, GQA kv4, qk-norm.
+[hf:Qwen/Qwen3-30B-A3B]  head_dim=128 is explicit (d_model/heads ≠ 128)."""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    pattern=(LayerSpec(kind=LayerKind.ATTN, moe=True),),
+    n_repeats=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    vocab_size=151936,
+    qk_norm=True,
+    act="silu",
+    norm="rmsnorm",
+    num_experts=128,
+    experts_per_tok=8,
+    moe_d_ff=768,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-30b-a3b-smoke",
+    family="moe",
+    pattern=(LayerSpec(kind=LayerKind.ATTN, moe=True),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=512,
+    qk_norm=True,
+    act="silu",
+    norm="rmsnorm",
+    num_experts=8,
+    experts_per_tok=2,
+    moe_d_ff=96,
+)

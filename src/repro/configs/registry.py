@@ -1,0 +1,37 @@
+"""Maps ``--arch <id>`` to its config module."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ModelConfig
+
+ARCHS: dict[str, str] = {
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "whisper-base": "repro.configs.whisper_base",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch])
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

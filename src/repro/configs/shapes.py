@@ -1,0 +1,93 @@
+"""Input-shape cells: the 4 assigned shapes × 10 archs and their specs.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input — weak-type-correct, shardable, no device allocation.  `skip_reason`
+implements the documented cell skips (long_500k needs sub-quadratic
+attention state; pure full-attention archs skip it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ALL_SHAPES, LayerKind, ModelConfig,
+                                 ShapeSpec)
+from repro.models.transformer import init_cache
+
+SHAPES: dict[str, ShapeSpec] = {s.name: s for s in ALL_SHAPES}
+
+
+def _subquadratic(cfg: ModelConfig) -> bool:
+    """True if decode state is bounded (SSM / SWA) or attention layers are
+    few enough that a 500k KV cache fits (hybrid: jamba has 4 attn layers)."""
+    kinds = {s.kind for s in cfg.pattern}
+    if kinds == {LayerKind.MAMBA}:
+        return True                                    # pure SSM
+    if LayerKind.ATTN not in kinds:
+        return True                                    # SWA only
+    return cfg.family == "hybrid"                      # few full-attn layers
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    if shape.name == "long_500k" and not _subquadratic(cfg):
+        return ("full-attention arch: 500k dense KV cache is the quadratic "
+                "regime this shape excludes (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def cells(cfg: ModelConfig) -> list[tuple[ShapeSpec, str | None]]:
+    return [(s, skip_reason(cfg, s)) for s in ALL_SHAPES]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.num_patches:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), dt)
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), dt)
+        return specs
+
+    # decode: one new token against a cache of seq_len
+    specs = {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": init_cache(cfg, B, S, abstract=True),
+    }
+    return specs
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Materialized small-scale inputs (smoke tests use reduced configs)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        if cfg.num_patches:
+            out["patch_embeds"] = jnp.asarray(
+                rng.normal(size=(B, cfg.num_patches, cfg.d_model)), dt)
+        if cfg.is_encdec:
+            out["frames"] = jnp.asarray(
+                rng.normal(size=(B, cfg.enc_frames, cfg.d_model)), dt)
+        return out
+    return {
+        "token": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)),
+                             jnp.int32),
+        "cache": init_cache(cfg, B, S, abstract=False),
+    }

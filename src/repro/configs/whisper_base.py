@@ -1,0 +1,39 @@
+"""whisper-base — encoder-decoder; the conv frontend is a STUB (input_specs
+provide precomputed frame embeddings, 1500 frames).  Decoder self-attention
+uses RoPE instead of learned positions (documented simplification).
+[arXiv:2212.04356]"""
+from repro.models.common import LayerKind, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=6,                  # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,               # MHA
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    act="gelu",
+    norm="layernorm",
+    enc_layers=6,
+    enc_frames=1500,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-base-smoke",
+    family="audio",
+    pattern=(LayerSpec(kind=LayerKind.ATTN),),
+    n_repeats=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    act="gelu",
+    norm="layernorm",
+    enc_layers=2,
+    enc_frames=32,
+)

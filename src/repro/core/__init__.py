@@ -1,0 +1,26 @@
+"""MKPipe core: the paper's multi-kernel pipeline compiler, on TPU/JAX."""
+from .graph import AffineTileMap, Stage, StageGraph, StageProfile
+from .depanalysis import DepInfo, analyze_edge, analyze_graph
+from .idremap import RemapPlan, build_id_queue, validate_queue
+from .decision import EdgePlan, ExecutionPlan, plan_cke
+from .balancing import (BalanceResult, Factors, auto_tune, realize_factors,
+                        resource_balance, throughput_balance)
+from .resources import ChipSpec, ResourceModel, RESOURCE_KEYS
+from .eru import Timeline, cke_timeline, eru, kbk_timeline
+from .splitting import SplitDecision, explore_split
+from .executor import CompiledPlan, compile_plan
+from .planner import MKPipeReport, optimize, profile_graph
+
+__all__ = [
+    "AffineTileMap", "Stage", "StageGraph", "StageProfile",
+    "DepInfo", "analyze_edge", "analyze_graph",
+    "RemapPlan", "build_id_queue", "validate_queue",
+    "EdgePlan", "ExecutionPlan", "plan_cke",
+    "BalanceResult", "Factors", "auto_tune", "realize_factors",
+    "resource_balance", "throughput_balance",
+    "ChipSpec", "ResourceModel", "RESOURCE_KEYS",
+    "Timeline", "cke_timeline", "eru", "kbk_timeline",
+    "SplitDecision", "explore_split",
+    "CompiledPlan", "compile_plan",
+    "MKPipeReport", "optimize", "profile_graph",
+]

@@ -1,0 +1,227 @@
+"""Kernel balancing (paper §5.5): Algorithms 1 & 2 + Fig. 13 factor split.
+
+Algorithm 1 (throughput balancing, §5.5.1): kernels in one CKE pipeline.
+Iteratively grant +1 unified performance factor (N_uni) to the stage with
+the lowest estimated throughput until some chip resource saturates.
+Throughput of a stage with factor N is estimated as N × naive throughput.
+
+Algorithm 2 (resource balancing, §5.5.2): kernels separated by global
+synchronization.  Iteratively grant +1 N_uni to the kernel with the highest
+marginal benefit ΔT/ΔU, where ΔT = T/(N(N+1)) and ΔU is the increase in the
+critical resource's utilization, until the critical resource saturates.
+
+Fig. 13: realize N_uni as (Unroll, SIMD, CU) in increasing resource-cost
+order; SIMD must be a power of two (→ when the next grant lands on SIMD it
+doubles N_uni rather than incrementing it — the "×2 if SIMD is used" note in
+both algorithms).
+
+Both algorithms finish with the paper's auto-tuning pass: re-evaluate
+factors in [N_uni − p, N_uni + p] with the *measured* evaluator when one is
+supplied (ours: lowered-HLO cost analysis instead of full synthesis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping, Sequence
+
+from .graph import Stage
+from .resources import Factors, ResourceModel, RESOURCE_KEYS
+
+MAX_STEPS = 512
+
+
+@dataclasses.dataclass
+class BalanceResult:
+    factors: dict[str, Factors]
+    totals: dict[str, float]          # final aggregate utilization
+    trace: list[dict]                 # per-iteration log (for EXPERIMENTS.md)
+
+    def n_uni(self) -> dict[str, int]:
+        return {k: f.n_uni for k, f in self.factors.items()}
+
+
+def realize_factors(stage: Stage, n_uni: int,
+                    max_unroll: int, vectorizable: bool,
+                    max_cu: int = 4) -> Factors:
+    """Fig. 13: split N_uni into unroll × simd × cu, cheapest first.
+
+    unroll takes as much as it can (bounded by the loop trip count /
+    MAX_UNROLL_FACTOR); SIMD covers the next power-of-two chunk when the
+    kernel is vectorizable; CU replication absorbs the rest.
+    """
+    unroll = min(n_uni, max_unroll)
+    rest = max(1, n_uni // max(unroll, 1))
+    simd = 1
+    if vectorizable and rest > 1:
+        simd = 1 << min(int(math.log2(rest)), 4)   # SIMD power of two, ≤16
+        rest = max(1, rest // simd)
+    cu = min(rest, max_cu)
+    return Factors(unroll=unroll, simd=simd, cu=cu)
+
+
+def _grant(n_uni: int, stage: Stage, max_unroll: int) -> int:
+    """+1 N_uni, or ×2 when the increment would be realized by SIMD
+    (paper: 'x2 if SIMD is used')."""
+    if n_uni >= max_unroll and (stage.profile is None
+                                or stage.profile.vectorizable):
+        return n_uni * 2
+    return n_uni + 1
+
+
+def throughput_balance(
+    stages: Sequence[Stage],
+    model: ResourceModel,
+    max_unroll: Mapping[str, int] | None = None,
+    resident_bytes: Mapping[str, float] | None = None,
+) -> BalanceResult:
+    """Algorithm 1 — throughput balancing for a multi-stage pipeline."""
+    max_unroll = dict(max_unroll or {})
+    resident = dict(resident_bytes or {})
+    n_uni = {s.name: 1 for s in stages}
+    trace: list[dict] = []
+
+    def factors_of(s: Stage) -> Factors:
+        return realize_factors(
+            s, n_uni[s.name],
+            max_unroll.get(s.name, model.chip.max_unroll_lanes),
+            s.profile.vectorizable if s.profile else True,
+        )
+
+    def totals() -> dict[str, float]:
+        per = {
+            s.name: model.estimate(s, factors_of(s),
+                                   resident_bytes=resident.get(s.name, 0.0))
+            for s in stages
+        }
+        return model.total(per)
+
+    for _ in range(MAX_STEPS):
+        tp = {
+            s.name: n_uni[s.name] * (s.profile.throughput if s.profile else 1.0)
+            for s in stages
+        }
+        # find stage j with lowest estimated throughput
+        j = min(stages, key=lambda s: tp[s.name])
+        candidate = dict(n_uni)
+        candidate[j.name] = _grant(
+            n_uni[j.name], j, max_unroll.get(j.name, model.chip.max_unroll_lanes))
+        saved = n_uni
+        n_uni = candidate
+        tot = totals()
+        if model.saturated(tot):
+            n_uni = saved          # roll back the grant that overflowed
+            break
+        trace.append({"granted": j.name, "n_uni": dict(n_uni),
+                      "min_throughput": tp[j.name], "totals": tot})
+    return BalanceResult(
+        factors={s.name: factors_of(s) for s in stages},
+        totals=totals(),
+        trace=trace,
+    )
+
+
+def resource_balance(
+    stages: Sequence[Stage],
+    model: ResourceModel,
+    max_unroll: Mapping[str, int] | None = None,
+    resident_bytes: Mapping[str, float] | None = None,
+) -> BalanceResult:
+    """Algorithm 2 — resource balancing across globally-synchronized kernels.
+
+    Note the aggregation difference vs Alg. 1: globally-synchronized kernels
+    never *run* concurrently, so rate resources (mxu/hbm_bw/ici) are bounded
+    by the max over kernels, while static residency (vmem/hbm_cap) still adds
+    — matching the FPGA situation where all kernels' logic is synthesized
+    simultaneously but only one is active.
+    """
+    max_unroll = dict(max_unroll or {})
+    resident = dict(resident_bytes or {})
+    n_uni = {s.name: 1 for s in stages}
+    trace: list[dict] = []
+
+    def factors_of(s: Stage) -> Factors:
+        return realize_factors(
+            s, n_uni[s.name],
+            max_unroll.get(s.name, model.chip.max_unroll_lanes),
+            s.profile.vectorizable if s.profile else True,
+        )
+
+    def totals() -> dict[str, float]:
+        per = {
+            s.name: model.estimate(s, factors_of(s),
+                                   resident_bytes=resident.get(s.name, 0.0))
+            for s in stages
+        }
+        out = {}
+        for k in RESOURCE_KEYS:
+            vals = [u[k] for u in per.values()]
+            out[k] = sum(vals) if k in ("vmem", "hbm_cap") else max(vals)
+        return out
+
+    for _ in range(MAX_STEPS):
+        tot = totals()
+        crit = model.critical_resource(tot)
+        best, best_ratio, best_candidate = None, -1.0, None
+        for s in stages:
+            cand = dict(n_uni)
+            cand[s.name] = _grant(
+                n_uni[s.name], s,
+                max_unroll.get(s.name, model.chip.max_unroll_lanes))
+            if cand[s.name] == n_uni[s.name]:
+                continue
+            # ΔT = T/(N(N+1)) — paper line 4
+            t = s.profile.time_s if s.profile else 1.0
+            n = n_uni[s.name]
+            dT = t / (n * (cand[s.name]))
+            saved = n_uni[s.name]
+            n_uni[s.name] = cand[s.name]
+            new_tot = totals()
+            n_uni[s.name] = saved
+            # ΔU on the critical resource (paper line 3); on FPGA every
+            # grant consumes area so ΔU>0 — on TPU a grant may not move the
+            # critical *rate* resource, so fall back to the largest
+            # utilization increase to keep the greedy well-defined.
+            dU = max(new_tot[crit] - tot[crit],
+                     max(new_tot[k] - tot[k] for k in RESOURCE_KEYS),
+                     1e-9)
+            if model.saturated(new_tot):
+                continue
+            if dT / dU > best_ratio:
+                best, best_ratio, best_candidate = s, dT / dU, cand[s.name]
+        if best is None:
+            break
+        n_uni[best.name] = best_candidate
+        trace.append({"granted": best.name, "n_uni": dict(n_uni),
+                      "ratio": best_ratio, "critical": crit})
+    return BalanceResult(
+        factors={s.name: factors_of(s) for s in stages},
+        totals=totals(),
+        trace=trace,
+    )
+
+
+def auto_tune(
+    result: BalanceResult,
+    evaluate: Callable[[Mapping[str, int]], float],
+    p: int = 2,
+) -> tuple[dict[str, int], float, list[dict]]:
+    """Paper §5.5.1 auto-tuning: search N_uni ± p per kernel with a measured
+    evaluator (lower = better, e.g. modeled step time from lowered HLO).
+    Kernels are tuned coordinate-wise (each kernel's 2p+1 candidates can be
+    evaluated in parallel in a real deployment — §5.8)."""
+    base = result.n_uni()
+    best = dict(base)
+    best_score = evaluate(best)
+    log = [{"n_uni": dict(best), "score": best_score, "phase": "baseline"}]
+    for name in sorted(base):
+        for delta in range(-p, p + 1):
+            if delta == 0:
+                continue
+            cand = dict(best)
+            cand[name] = max(1, base[name] + delta)
+            score = evaluate(cand)
+            log.append({"n_uni": dict(cand), "score": score, "phase": name})
+            if score < best_score:
+                best, best_score = cand, score
+    return best, best_score, log

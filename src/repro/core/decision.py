@@ -1,0 +1,207 @@
+"""The Fig. 5 decision tree: choose how to enable multi-kernel pipelining.
+
+Order of checks (paper §5.4):
+  1. dominant kernel (>95% of total time)   → no CKE; resource balancing only
+  2. per producer→consumer edge, classify dependency:
+       many-to-many / many-to-few          → global synchronization (KBK cut)
+       few-to-many                         → CKE through global memory
+                                             (+ id remapping variants)
+       few-to-few, long execution time     → kernel fusion
+       few-to-few, short execution time    → CKE with channels
+  3. fusion feasibility (paper §5.4.1): NDRange stages fuse only when their
+     grids match; otherwise fall back to channels.
+Host-carried dependencies (§5.2) are excluded from CKE before any of this.
+
+The output groups stages into *concurrency groups* (pipelines) separated by
+global syncs, each annotated with its CKE mechanism — the executor lowers
+groups to jitted callables and the balancer tunes factors per group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from .depanalysis import (DepInfo, analyze_graph, merge_deps,
+                          merge_edge_infos)
+from .graph import StageGraph
+from .idremap import RemapPlan, build_id_queue, is_identity
+
+DOMINANT_FRACTION = 0.95
+# Fusion-vs-channel threshold (paper Fig. 8: channels win on *short* runs by
+# reducing launch overhead; fusion wins on long runs via deeper loop
+# optimization).  FPGA launch overhead ~ms; XLA dispatch ~10s of µs — the
+# constant is re-measured for TPU but the rule is the paper's.
+CHANNEL_TIME_THRESHOLD_S = 5e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgePlan:
+    producer: str
+    consumer: str
+    category: str
+    mechanism: str                  # fuse | channel | globalmem | sync
+    remap: RemapPlan | None = None  # for globalmem edges
+    remap_level: str = "none"       # none | workgroup | workitem
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    graph: StageGraph
+    edges: tuple[EdgePlan, ...]
+    groups: tuple[tuple[str, ...], ...]     # concurrency groups, topo order
+    dominant: str | None
+    balancing: str                          # "throughput" | "resource" | "mixed"
+
+    def mechanism(self, producer: str, consumer: str) -> str:
+        for e in self.edges:
+            if e.producer == producer and e.consumer == consumer:
+                return e.mechanism
+        return "sync"
+
+    def edge(self, producer: str, consumer: str) -> EdgePlan | None:
+        for e in self.edges:
+            if e.producer == producer and e.consumer == consumer:
+                return e
+        return None
+
+
+def _grids_match(graph: StageGraph, a: str, b: str) -> bool:
+    sa, sb = graph.stage(a), graph.stage(b)
+    if sa.mode == "single" and sb.mode == "single":
+        return True      # single-workitem kernels merge by loop fusion
+    return sa.grid == sb.grid and sa.mode == sb.mode
+
+
+def plan_cke(graph: StageGraph,
+             dep_infos: Mapping[tuple[str, str, str], DepInfo] | None = None,
+             channel_threshold_s: float = CHANNEL_TIME_THRESHOLD_S,
+             ) -> ExecutionPlan:
+    dep_infos = dep_infos if dep_infos is not None else analyze_graph(graph)
+    times = {s.name: (s.profile.time_s if s.profile else 1.0)
+             for s in graph.stages}
+    total = sum(times.values())
+
+    # Step 1: dominant-kernel check.
+    dominant = None
+    for name, t in times.items():
+        if total > 0 and t / total >= DOMINANT_FRACTION:
+            dominant = name
+
+    # collapse per-buffer infos per stage pair
+    pair_infos: dict[tuple[str, str], list[DepInfo]] = {}
+    for (p, c, _b), info in dep_infos.items():
+        pair_infos.setdefault((p, c), []).append(info)
+
+    host_dep = set(graph.host_dependencies)
+
+    def crosses_loop_boundary(p: str, c: str) -> bool:
+        """Paper §7.3.2 (BP): a host loop imposes global synchronization at
+        its boundary — kernels inside a loop cannot pipeline with kernels
+        outside it (the loop re-invokes its members every iteration)."""
+        if graph.in_same_loop(p, c) is not None:
+            return False
+        in_loop = {m for _l, (ms, _t) in graph.loops.items() for m in ms}
+        return (p in in_loop) != (c in in_loop) or (
+            p in in_loop and c in in_loop)
+
+    edge_plans: list[EdgePlan] = []
+    for (p, c), infos in sorted(pair_infos.items()):
+        category = merge_edge_infos(infos)
+        if (dominant is not None or (p, c) in host_dep
+                or crosses_loop_boundary(p, c)):
+            edge_plans.append(EdgePlan(p, c, category, "sync"))
+            continue
+        if category in ("many-to-many", "many-to-few"):
+            mech = "sync"
+            remap, level = None, "none"
+        elif category == "few-to-many":
+            mech = "globalmem"
+            # id queue from the union of dependency sets over all shared
+            # buffers (a consumer waits for every buffer it reads)
+            remap = build_id_queue(merge_deps(infos))
+            level = "none" if is_identity(remap) else "workgroup"
+        else:  # few-to-few
+            exec_time = times[p] + times[c]
+            if _grids_match(graph, p, c) and exec_time >= channel_threshold_s:
+                mech = "fuse"
+            else:
+                mech = "channel"     # incl. grid-mismatch fallback (§5.4.1)
+            remap, level = None, "none"
+        edge_plans.append(EdgePlan(p, c, category, mech, remap, level))
+
+    # An edge cannot pipeline if its endpoints are already serialized by a
+    # global sync on another path (BP: K1→K4 crosses the K2/K3 loop's sync).
+    sync_pairs = {(e.producer, e.consumer) for e in edge_plans
+                  if e.mechanism == "sync"}
+
+    def serialized_via_sync(src: str, dst: str) -> bool:
+        # DFS over graph edges; true if every... any path src→dst passes a
+        # sync edge that is not the direct (src,dst) edge itself.
+        stack = [(src, False)]
+        seen = set()
+        while stack:
+            node, via_sync = stack.pop()
+            for p, c, _b in graph.edges():
+                if p != node:
+                    continue
+                vs = via_sync or ((p, c) in sync_pairs)
+                if c == dst and vs and (p, c) != (src, dst):
+                    return True
+                if (c, vs) not in seen and c != dst:
+                    seen.add((c, vs))
+                    stack.append((c, vs))
+        return False
+
+    edge_plans = [
+        dataclasses.replace(e, mechanism="sync")
+        if e.mechanism != "sync"
+        and serialized_via_sync(e.producer, e.consumer) else e
+        for e in edge_plans
+    ]
+
+    # Build concurrency groups: union stages joined by non-sync edges,
+    # then order groups topologically.
+    parent: dict[str, str] = {s.name: s.name for s in graph.stages}
+
+    def find(x: str) -> str:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a: str, b: str) -> None:
+        parent[find(a)] = find(b)
+
+    for e in edge_plans:
+        if e.mechanism != "sync":
+            union(e.producer, e.consumer)
+
+    topo = graph.topo_order()
+    group_of: dict[str, list[str]] = {}
+    for name in topo:
+        group_of.setdefault(find(name), []).append(name)
+    seen: set[str] = set()
+    groups: list[tuple[str, ...]] = []
+    for name in topo:
+        r = find(name)
+        if r not in seen:
+            seen.add(r)
+            groups.append(tuple(group_of[r]))
+
+    if dominant is not None:
+        balancing = "resource"
+    elif len(groups) == 1:
+        balancing = "throughput"
+    elif all(len(g) == 1 for g in groups):
+        balancing = "resource"
+    else:
+        balancing = "mixed"   # paper's CFD case: Alg.2 across groups,
+                              # Alg.1 inside each pipeline group
+
+    return ExecutionPlan(
+        graph=graph,
+        edges=tuple(edge_plans),
+        groups=tuple(groups),
+        dominant=dominant,
+        balancing=balancing,
+    )

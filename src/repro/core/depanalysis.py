@@ -1,0 +1,244 @@
+"""Cross-kernel dependency analysis (paper §5.3).
+
+The paper runs polyhedral analysis (Candl) over affine array indices to find
+which producer workitems each consumer workitem depends on, then classifies
+the relationship as few-to-few / few-to-many / many-to-few / many-to-many.
+
+Here stages expose rectangular affine tile maps (`AffineTileMap`), so the
+dependency set is computed *exactly* by interval intersection per buffer
+dimension: consumer tile `ic` depends on producer tile `ip` iff the write
+region of `ip` intersects the read region of `ic` on the shared buffer.
+
+For the affine maps used in practice the per-dimension problem
+``a1*ip + b1 <= x < a1*ip + b1 + s1``  ∩  ``a2*ic + b2 <= x < a2*ic + b2 + s2``
+is solved in closed form per consumer tile (a strided-interval overlap), so
+the analysis is O(#consumer tiles · fan-in) rather than O(#p · #c).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+import numpy as np
+
+from .graph import AffineTileMap, Stage, StageGraph
+
+# Fan thresholds for the paper's classification.  "few" == bounded constant
+# fan; the paper's examples use one-to-one and one-to-many, we keep a small
+# constant so e.g. halo reads (fan-in 2-3) still count as "few".
+FEW = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class DepInfo:
+    producer: str
+    consumer: str
+    buffer: str
+    # dependency sets: per consumer tile id, sorted producer tile ids
+    deps: tuple[tuple[int, ...], ...]
+    max_fan_in: int          # producers needed by one consumer tile
+    max_fan_out: int         # consumers fed by one producer tile
+    n_producer_tiles: int
+    n_consumer_tiles: int
+
+    @property
+    def category(self) -> str:
+        fi = self.max_fan_in >= min(FEW + 1, self.n_producer_tiles)
+        fo = self.max_fan_out >= min(FEW + 1, self.n_consumer_tiles)
+        fan_in_many = self.max_fan_in > FEW
+        fan_out_many = self.max_fan_out > FEW
+        if not fan_in_many and not fan_out_many:
+            return "few-to-few"
+        if not fan_in_many and fan_out_many:
+            return "few-to-many"
+        if fan_in_many and not fan_out_many:
+            return "many-to-few"
+        return "many-to-many"
+
+    @property
+    def one_to_one(self) -> bool:
+        return self.max_fan_in <= 1 and self.max_fan_out <= 1
+
+
+def _intersecting_tiles_1d(
+    a1: int, b1: int, s1: int, n1: int, lo: int, hi: int
+) -> range:
+    """Producer tiles ip in [0, n1) with [a1*ip+b1, a1*ip+b1+s1) ∩ [lo,hi) ≠ ∅.
+
+    Needs a1*ip + b1 < hi  and  a1*ip + b1 + s1 > lo.
+    """
+    if a1 == 0:
+        # every tile touches the same band
+        if b1 < hi and b1 + s1 > lo:
+            return range(0, n1)
+        return range(0)
+    if a1 > 0:
+        lo_ip = math.ceil((lo - s1 + 1 - b1) / a1)
+        hi_ip = math.floor((hi - 1 - b1) / a1)
+    else:
+        lo_ip = math.ceil((hi - 1 - b1) / a1)
+        hi_ip = math.floor((lo - s1 + 1 - b1) / a1)
+    lo_ip = max(lo_ip, 0)
+    hi_ip = min(hi_ip, n1 - 1)
+    return range(lo_ip, hi_ip + 1)
+
+
+def dependency_sets(
+    producer: Stage,
+    consumer: Stage,
+    buffer: str,
+) -> list[set[int]]:
+    """For each consumer tile (by row-major id): set of producer tile ids."""
+    wmap = producer.tile_maps[buffer]
+    rmap = consumer.tile_maps[buffer]
+    p_tiles = producer.tiles()
+    c_tiles = consumer.tiles()
+    ndim = len(wmap.const)
+
+    # Row-major strides to convert producer tile tuples to flat ids.
+    p_strides = np.ones(len(producer.grid), dtype=np.int64)
+    for d in range(len(producer.grid) - 2, -1, -1):
+        p_strides[d] = p_strides[d + 1] * producer.grid[d + 1]
+
+    deps: list[set[int]] = []
+    for ic in c_tiles:
+        r = rmap.region(ic)
+        # Per buffer-dim: candidate producer tile coordinates along each grid
+        # dim.  The general case couples grid dims; the maps we build keep at
+        # most one grid dim per buffer dim (pure-rectangular), which covers
+        # all workloads here — fall back to enumeration otherwise.
+        per_grid_dim: list[set[int] | None] = [None] * len(producer.grid)
+        feasible = True
+        for d in range(ndim):
+            (lo, hi) = r[d]
+            coefs = wmap.coeff[d]
+            nz = [k for k, c in enumerate(coefs) if c != 0]
+            if len(nz) == 0:
+                if not (wmap.const[d] < hi and wmap.const[d] + wmap.block[d] > lo):
+                    feasible = False
+                    break
+                continue
+            if len(nz) > 1:
+                # coupled dims: enumerate producer tiles (exact, slower)
+                return _dependency_sets_enum(producer, consumer, buffer)
+            k = nz[0]
+            rng = _intersecting_tiles_1d(
+                coefs[k], wmap.const[d], wmap.block[d], producer.grid[k], lo, hi
+            )
+            s = set(rng)
+            per_grid_dim[k] = s if per_grid_dim[k] is None else (per_grid_dim[k] & s)
+            if not per_grid_dim[k]:
+                feasible = False
+                break
+        if not feasible:
+            deps.append(set())
+            continue
+        # Cartesian product over grid dims (unconstrained dims → full range).
+        axes = [
+            sorted(per_grid_dim[k]) if per_grid_dim[k] is not None
+            else list(range(producer.grid[k]))
+            for k in range(len(producer.grid))
+        ]
+        ids: set[int] = set()
+        def rec(k: int, acc: int) -> None:
+            if k == len(axes):
+                ids.add(acc)
+                return
+            for v in axes[k]:
+                rec(k + 1, acc + v * int(p_strides[k]))
+        rec(0, 0)
+        deps.append(ids)
+    return deps
+
+
+def _dependency_sets_enum(
+    producer: Stage, consumer: Stage, buffer: str
+) -> list[set[int]]:
+    """Exact fallback by full enumeration (used for coupled affine maps)."""
+    wmap = producer.tile_maps[buffer]
+    rmap = consumer.tile_maps[buffer]
+    p_regions = [wmap.region(t) for t in producer.tiles()]
+    deps: list[set[int]] = []
+    for ic in consumer.tiles():
+        r = rmap.region(ic)
+        s = set()
+        for pid, w in enumerate(p_regions):
+            if all(w[d][0] < r[d][1] and w[d][1] > r[d][0] for d in range(len(r))):
+                s.add(pid)
+        deps.append(s)
+    return deps
+
+
+def analyze_edge(graph: StageGraph, producer: str, consumer: str,
+                 buffer: str) -> DepInfo:
+    p, c = graph.stage(producer), graph.stage(consumer)
+    if buffer not in p.tile_maps or buffer not in c.tile_maps:
+        # No tile information: conservatively many-to-many (global sync),
+        # mirroring the paper's fallback when polyhedral analysis fails.
+        nt_p, nt_c = p.n_tiles(), c.n_tiles()
+        deps = tuple(tuple(range(nt_p)) for _ in range(nt_c))
+        return DepInfo(producer, consumer, buffer, deps,
+                       max_fan_in=nt_p, max_fan_out=nt_c,
+                       n_producer_tiles=nt_p, n_consumer_tiles=nt_c)
+    dsets = dependency_sets(p, c, buffer)
+    fan_out: dict[int, int] = {}
+    for s in dsets:
+        for pid in s:
+            fan_out[pid] = fan_out.get(pid, 0) + 1
+    return DepInfo(
+        producer=producer,
+        consumer=consumer,
+        buffer=buffer,
+        deps=tuple(tuple(sorted(s)) for s in dsets),
+        max_fan_in=max((len(s) for s in dsets), default=0),
+        max_fan_out=max(fan_out.values(), default=0),
+        n_producer_tiles=p.n_tiles(),
+        n_consumer_tiles=c.n_tiles(),
+    )
+
+
+def analyze_graph(graph: StageGraph) -> dict[tuple[str, str, str], DepInfo]:
+    """DepInfo for every producer→consumer edge in the graph."""
+    out = {}
+    for p, c, b in graph.edges():
+        out[(p, c, b)] = analyze_edge(graph, p, c, b)
+    return out
+
+
+def merge_deps(infos: Iterable[DepInfo]) -> DepInfo:
+    """Union the dependency sets of one stage pair across all shared buffers
+    (a consumer tile must wait for *every* buffer it reads)."""
+    infos = list(infos)
+    first = infos[0]
+    n_c = first.n_consumer_tiles
+    merged = [set() for _ in range(n_c)]
+    for info in infos:
+        assert info.n_consumer_tiles == n_c, "inconsistent consumer grids"
+        for cid, ps in enumerate(info.deps):
+            merged[cid] |= set(ps)
+    fan_out: dict[int, int] = {}
+    for s in merged:
+        for pid in s:
+            fan_out[pid] = fan_out.get(pid, 0) + 1
+    return DepInfo(
+        producer=first.producer,
+        consumer=first.consumer,
+        buffer="+".join(sorted({i.buffer for i in infos})),
+        deps=tuple(tuple(sorted(s)) for s in merged),
+        max_fan_in=max((len(s) for s in merged), default=0),
+        max_fan_out=max(fan_out.values(), default=0),
+        n_producer_tiles=first.n_producer_tiles,
+        n_consumer_tiles=n_c,
+    )
+
+
+def merge_edge_infos(infos: Iterable[DepInfo]) -> str:
+    """Combine categories across multiple shared buffers of one stage pair:
+    the *most restrictive* (largest-fan) category wins."""
+    order = ["few-to-few", "few-to-many", "many-to-few", "many-to-many"]
+    worst = "few-to-few"
+    for i in infos:
+        if order.index(i.category) > order.index(worst):
+            worst = i.category
+    return worst

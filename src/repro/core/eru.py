@@ -1,0 +1,81 @@
+"""Effective Resource Utilization (paper Eq. 1) and ERU-over-time timelines.
+
+ERU = max over per-resource utilizations — identical in spirit to a roofline
+bottleneck fraction.  The timeline reproduces Fig. 2: under KBK each stage
+occupies its own time segment with its own ERU; under CKE concurrent stages
+share a segment whose utilization is the sum of theirs (and whose duration
+is set by the slowest stage / pipeline makespan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from .resources import RESOURCE_KEYS
+
+
+def eru(util: Mapping[str, float]) -> float:
+    """Eq. 1: ERU = Max(U_ALUT, U_FF, U_RAM, U_DSP, U_BW) → TPU resources."""
+    return max(util.get(k, 0.0) for k in RESOURCE_KEYS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    t0: float
+    t1: float
+    stages: tuple[str, ...]
+    util: Mapping[str, float]
+
+    @property
+    def eru(self) -> float:
+        return eru(self.util)
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    segments: tuple[Segment, ...]
+
+    @property
+    def makespan(self) -> float:
+        return self.segments[-1].t1 if self.segments else 0.0
+
+    @property
+    def time_weighted_eru(self) -> float:
+        ms = self.makespan
+        if ms <= 0:
+            return 0.0
+        return sum(s.eru * (s.t1 - s.t0) for s in self.segments) / ms
+
+    def accumulated_eru(self) -> float:
+        """∑ T_i × ERU_i — the quantity in splitting criterion (c)."""
+        return sum(s.eru * (s.t1 - s.t0) for s in self.segments)
+
+
+def kbk_timeline(stage_order: Sequence[str],
+                 times: Mapping[str, float],
+                 utils: Mapping[str, Mapping[str, float]]) -> Timeline:
+    """Fig. 2a: sequential stage execution → stepwise ERU."""
+    t = 0.0
+    segs = []
+    for name in stage_order:
+        dt = times[name]
+        segs.append(Segment(t, t + dt, (name,), dict(utils[name])))
+        t += dt
+    return Timeline(tuple(segs))
+
+
+def cke_timeline(groups: Sequence[Sequence[str]],
+                 times: Mapping[str, float],
+                 utils: Mapping[str, Mapping[str, float]]) -> Timeline:
+    """Fig. 2b: each group runs concurrently (duration = slowest member,
+    i.e. the pipeline drains at the bottleneck stage's rate); groups are
+    separated by global synchronization."""
+    t = 0.0
+    segs = []
+    for group in groups:
+        dt = max(times[n] for n in group)
+        agg = {k: sum(utils[n].get(k, 0.0) for n in group)
+               for k in RESOURCE_KEYS}
+        segs.append(Segment(t, t + dt, tuple(group), agg))
+        t += dt
+    return Timeline(tuple(segs))

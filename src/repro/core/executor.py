@@ -1,0 +1,200 @@
+"""Lower an ExecutionPlan to a single jitted callable (paper §5.4/§5.7).
+
+Mechanisms and their TPU realizations:
+
+KBK        stage fns composed with `lax.optimization_barrier` between every
+           stage: XLA may not fuse across, intermediates round-trip HBM —
+           the faithful baseline ("kernels executed one after another").
+fuse       stage fns composed freely; XLA/Pallas fuse producer+consumer so
+           the intermediate stays on-chip.  When the consumer registered a
+           fused impl (`impls["fuse"]` consuming the producer's inputs
+           directly), it is used (the kernels/ fused Pallas kernels).
+channel    same dataflow as fusion but tile-granular hand-off; a stage pair
+           may register `impls["channel"]` (one pallas_call with a VMEM
+           revolving buffer).  Falls back to fused composition: on TPU a
+           channel between two always-co-scheduled grids *is* a fused grid.
+globalmem  chunked software pipeline: the producer's tiles are computed in
+           dispatch order, interleaved with consumer tiles in id_queue
+           order; a consumer tile runs as soon as its producers are done
+           (§5.4.3 flags + §5.4.4 remapping).  Intermediate buffers are
+           NaN-poisoned, so any dependency-order bug in the queue poisons
+           the output and fails the correctness tests — the numerics prove
+           queue legality.
+
+All mechanisms compute the same function; `StageGraph.run_reference` is the
+oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .decision import EdgePlan, ExecutionPlan
+from .graph import Stage, StageGraph
+from .idremap import RemapPlan
+
+Array = Any
+
+
+def _barrier(tree):
+    return jax.lax.optimization_barrier(tree)
+
+
+def _run_stage(stage: Stage, env: dict[str, Array]) -> None:
+    outs = stage.fn({k: env[k] for k in stage.reads})
+    env.update(outs)
+
+
+def _tile_offsets(stage: Stage, buffer: str, tile_flat: int) -> tuple[int, ...]:
+    grid = stage.grid
+    idx = []
+    rem = tile_flat
+    for g in reversed(grid):
+        idx.append(rem % g)
+        rem //= g
+    tile = tuple(reversed(idx))
+    region = stage.tile_maps[buffer].region(tile)
+    return tuple(lo for lo, _hi in region), tile
+
+
+def _run_globalmem_pair(
+    producer: Stage,
+    consumer: Stage,
+    remap: RemapPlan,
+    env: dict[str, Array],
+) -> None:
+    """Chunked producer/consumer interleave in id-queue order."""
+    p_tile = producer.impls.get("tile")
+    c_tile = consumer.impls.get("tile")
+    if p_tile is None or c_tile is None:
+        # No tile-wise implementation registered: run composed (still
+        # correct; scheduling benefit is modeled, not executed).
+        _run_stage(producer, env)
+        _run_stage(consumer, env)
+        return
+
+    # Poison producer-written buffers: reads of unproduced tiles → NaN.
+    for b in producer.writes:
+        shape_src = env.get(b)
+        if shape_src is None:
+            # derive the full shape from the tile map over the whole grid
+            tm = producer.tile_maps[b]
+            hi = [0] * len(tm.const)
+            for t in producer.tiles():
+                for d, (_lo, h) in enumerate(tm.region(t)):
+                    hi[d] = max(hi[d], h)
+            env[b] = jnp.full(tuple(hi), jnp.nan, dtype=jnp.float32)
+        else:
+            env[b] = jnp.full_like(shape_src, jnp.nan)
+
+    consumer_acc: dict[str, Array] = {}
+    for b in consumer.writes:
+        tm = consumer.tile_maps[b]
+        hi = [0] * len(tm.const)
+        for t in consumer.tiles():
+            for d, (_lo, h) in enumerate(tm.region(t)):
+                hi[d] = max(hi[d], h)
+        consumer_acc[b] = jnp.full(tuple(hi), jnp.nan, dtype=jnp.float32)
+
+    p_done = 0
+    n_p = producer.n_tiles()
+
+    def produce(tile_flat: int) -> None:
+        outs = p_tile(env, tile_flat)
+        for b, block in outs.items():
+            offs, _ = _tile_offsets(producer, b, tile_flat)
+            env[b] = jax.lax.dynamic_update_slice(
+                env[b], block.astype(env[b].dtype), offs)
+
+    def consume(tile_flat: int) -> None:
+        outs = c_tile(env, tile_flat)
+        for b, block in outs.items():
+            offs, _ = _tile_offsets(consumer, b, tile_flat)
+            consumer_acc[b] = jax.lax.dynamic_update_slice(
+                consumer_acc[b], block.astype(consumer_acc[b].dtype), offs)
+
+    for pos, cid in enumerate(remap.queue):
+        need = remap.ready_after[pos]
+        while p_done < need:
+            produce(p_done)
+            p_done += 1
+        consume(cid)
+    while p_done < n_p:      # drain producers nobody waited on
+        produce(p_done)
+        p_done += 1
+    env.update(consumer_acc)
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    plan: ExecutionPlan
+    mode: str
+    fn: Callable[[Mapping[str, Array]], dict[str, Array]]
+
+    def __call__(self, buffers: Mapping[str, Array]) -> dict[str, Array]:
+        return self.fn(buffers)
+
+
+def compile_plan(plan: ExecutionPlan, mode: str | None = None,
+                 jit: bool = True) -> CompiledPlan:
+    """Build the executable for a plan.
+
+    mode=None follows the plan's per-edge mechanisms; mode="kbk" forces the
+    sequential baseline (used for A/B benchmarking, paper Fig. 14).
+    """
+    graph = plan.graph
+    topo = graph.topo_order()
+    forced_kbk = mode == "kbk"
+
+    def runner(buffers: Mapping[str, Array]) -> dict[str, Array]:
+        env: dict[str, Array] = dict(buffers)
+        done: set[str] = set()
+        for name in topo:
+            if name in done:
+                continue
+            stage = graph.stage(name)
+            handled = False
+            if not forced_kbk:
+                for e in plan.edges:
+                    if e.producer != name:
+                        continue
+                    consumer = graph.stage(e.consumer)
+                    if e.mechanism == "globalmem" and e.remap is not None:
+                        # chunked interleave in id-queue order
+                        _run_globalmem_pair(stage, consumer, e.remap, env)
+                        done.update({name, e.consumer})
+                        handled = True
+                        break
+                    if e.mechanism in ("fuse", "channel"):
+                        # a registered pair kernel replaces producer+consumer
+                        fused = (consumer.impls.get(e.mechanism)
+                                 or consumer.impls.get("fuse"))
+                        if fused is not None:
+                            keys = (set(stage.reads) | set(consumer.reads)) \
+                                - set(stage.writes)
+                            env.update(fused({k: env[k] for k in keys
+                                              if k in env}))
+                            done.update({name, e.consumer})
+                            handled = True
+                            break
+            if handled:
+                continue
+            _run_stage(stage, env)
+            done.add(name)
+            if forced_kbk:
+                # materialize every intermediate: no cross-stage fusion
+                for b in stage.writes:
+                    env[b] = _barrier(env[b])
+            else:
+                # barrier only at global syncs (group boundaries)
+                for e in plan.edges:
+                    if e.producer == name and e.mechanism == "sync":
+                        for b in stage.writes:
+                            env[b] = _barrier(env[b])
+        return {k: env[k] for k in graph.outputs}
+
+    fn = jax.jit(runner) if jit else runner
+    return CompiledPlan(plan=plan, mode=mode or "planned", fn=fn)

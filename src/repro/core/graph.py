@@ -1,0 +1,201 @@
+"""Stage graph: the TPU analogue of MKPipe's kernel data-flow graph.
+
+In the paper (§5.2) the compiler derives a kernel data-flow graph from the
+OpenCL host code: kernels are nodes, and an edge exists when one kernel
+writes a global-memory buffer that another reads.  Here a *Stage* is the
+kernel analogue (a pure JAX-traceable op group), buffers are named arrays,
+and the graph is derived from each stage's declared read/write sets — the
+same information `clSetKernelArg` provides to the paper's compiler.
+
+Each stage also carries an abstract *tile grid* and per-buffer affine tile
+maps (the workitem/workgroup structure the paper's polyhedral pass analyses).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineTileMap:
+    """Affine map from a stage's tile index to a rectangular buffer region.
+
+    For tile index ``i`` (tuple over grid dims) the accessed region of the
+    buffer along output dim ``d`` is::
+
+        offset[d] = sum_k coeff[d][k] * i[k] + const[d]
+        region[d] = [offset[d], offset[d] + block[d])
+
+    This is the restricted (rectangular, per-dim affine) polyhedral form —
+    the same class of index expressions the paper handles ("array indices in
+    OpenCL workloads are typically affine functions of workitem ids").
+    """
+
+    coeff: tuple[tuple[int, ...], ...]   # [buffer_dim][grid_dim]
+    const: tuple[int, ...]               # [buffer_dim]
+    block: tuple[int, ...]               # [buffer_dim]
+
+    @staticmethod
+    def identity_1d(block: int) -> "AffineTileMap":
+        return AffineTileMap(coeff=((block,),), const=(0,), block=(block,))
+
+    @staticmethod
+    def broadcast(ndim_grid: int, shape: Sequence[int]) -> "AffineTileMap":
+        """Whole-buffer access from every tile (e.g. read-only weights)."""
+        return AffineTileMap(
+            coeff=tuple((0,) * ndim_grid for _ in shape),
+            const=tuple(0 for _ in shape),
+            block=tuple(int(s) for s in shape),
+        )
+
+    def region(self, tile: Sequence[int]) -> tuple[tuple[int, int], ...]:
+        """Half-open interval per buffer dim accessed by ``tile``."""
+        out = []
+        for d in range(len(self.const)):
+            off = self.const[d] + sum(
+                c * int(t) for c, t in zip(self.coeff[d], tile)
+            )
+            out.append((off, off + self.block[d]))
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageProfile:
+    """Profiling data for a *naive* stage (paper §5.1: execution time and
+    throughput of each naive kernel; throughput = output bytes / time)."""
+
+    time_s: float
+    out_bytes: int = 0
+    flops: float = 0.0
+    hbm_bytes: float = 0.0          # bytes moved to/from HBM ("global memory")
+    vectorizable: bool = True       # the paper's per-kernel `VEC` boolean
+
+    @property
+    def throughput(self) -> float:
+        return self.out_bytes / max(self.time_s, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One kernel analogue.
+
+    ``fn(buffers: dict) -> dict`` consumes the buffers named in ``reads`` and
+    returns the buffers named in ``writes``.  ``mode`` mirrors the paper's
+    NDRange vs single-workitem distinction: ``ndrange`` stages have a
+    parallel tile grid, ``single`` stages are sequential loops (their "grid"
+    is the loop trip count).
+    """
+
+    name: str
+    fn: Callable[[Mapping[str, Array]], Mapping[str, Array]]
+    reads: tuple[str, ...]
+    writes: tuple[str, ...]
+    grid: tuple[int, ...] = (1,)
+    mode: str = "ndrange"                      # "ndrange" | "single"
+    tile_maps: Mapping[str, AffineTileMap] = dataclasses.field(
+        default_factory=dict
+    )
+    profile: StageProfile | None = None
+    # Registered fused/pallas implementations, keyed by plan kind.
+    impls: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
+
+    def tiles(self) -> np.ndarray:
+        """All tile indices in dispatch (row-major id) order — the paper's
+        'workitems with increasing ids are dispatched in sequential order'."""
+        grids = [np.arange(g) for g in self.grid]
+        mesh = np.meshgrid(*grids, indexing="ij")
+        return np.stack([m.reshape(-1) for m in mesh], axis=-1)
+
+    def n_tiles(self) -> int:
+        return int(np.prod(self.grid))
+
+
+@dataclasses.dataclass
+class StageGraph:
+    """Kernel data-flow graph + host-side structure annotations."""
+
+    stages: list[Stage]
+    # Buffers that live before/after the graph (host I/O).
+    inputs: tuple[str, ...]
+    outputs: tuple[str, ...]
+    # Stages inside a host-side loop (paper Fig. 17: BP's K2..K3 loop), as
+    # {loop_name: (stage names, trip_count)}.  Used by splitting criterion (a).
+    loops: dict[str, tuple[tuple[str, ...], int]] = dataclasses.field(
+        default_factory=dict
+    )
+    # Dependencies carried through the host CPU (paper §5.2 exclusion rule),
+    # as edges (producer, consumer) that must NOT be made concurrent.
+    host_dependencies: tuple[tuple[str, str], ...] = ()
+
+    def __post_init__(self) -> None:
+        names = [s.name for s in self.stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stage names: {names}")
+        self._by_name = {s.name: s for s in self.stages}
+        writers: dict[str, str] = {}
+        for s in self.stages:
+            for b in s.writes:
+                if b in writers:
+                    raise ValueError(
+                        f"buffer {b!r} written by both {writers[b]} and {s.name}"
+                    )
+                writers[b] = s.name
+        self.writers = writers
+
+    def stage(self, name: str) -> Stage:
+        return self._by_name[name]
+
+    def edges(self) -> list[tuple[str, str, str]]:
+        """(producer, consumer, buffer) edges — data flows through buffers."""
+        out = []
+        for consumer in self.stages:
+            for b in consumer.reads:
+                p = self.writers.get(b)
+                if p is not None and p != consumer.name:
+                    out.append((p, consumer.name, b))
+        return out
+
+    def predecessors(self, name: str) -> list[str]:
+        return sorted({p for p, c, _ in self.edges() if c == name})
+
+    def successors(self, name: str) -> list[str]:
+        return sorted({c for p, c, _ in self.edges() if p == name})
+
+    def topo_order(self) -> list[str]:
+        order: list[str] = []
+        seen: set[str] = set()
+        edges = self.edges()
+        indeg = {s.name: 0 for s in self.stages}
+        for _, c, _ in edges:
+            indeg[c] += 1
+        ready = [s.name for s in self.stages if indeg[s.name] == 0]
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            seen.add(n)
+            for p, c, _ in edges:
+                if p == n:
+                    indeg[c] -= 1
+                    if indeg[c] == 0 and c not in seen and c not in ready:
+                        ready.append(c)
+        if len(order) != len(self.stages):
+            raise ValueError("stage graph has a cycle")
+        return order
+
+    def in_same_loop(self, a: str, b: str) -> str | None:
+        for lname, (members, _trip) in self.loops.items():
+            if a in members and b in members:
+                return lname
+        return None
+
+    def run_reference(self, buffers: dict[str, Array]) -> dict[str, Array]:
+        """Plain sequential (KBK) execution — the correctness oracle."""
+        env = dict(buffers)
+        for name in self.topo_order():
+            s = self.stage(name)
+            env.update(s.fn({k: env[k] for k in s.reads}))
+        return {k: env[k] for k in self.outputs}

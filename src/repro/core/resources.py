@@ -1,0 +1,135 @@
+"""TPU resource model — the analogue of the paper's FPGA resource vector.
+
+The paper tracks static resources (ALUTs, FFs, RAMs, DSPs) plus dynamic DRAM
+bandwidth, reading estimates from the OpenCL compiler's log.  The TPU
+analogue is the roofline resource vector of one chip:
+
+    mxu      — bf16 matmul throughput          (the DSP analogue)
+    hbm_bw   — HBM bandwidth                   (the DRAM-BW analogue)
+    vmem     — on-chip VMEM capacity           (the RAM-block analogue)
+    hbm_cap  — HBM capacity                    (a hard feasibility limit)
+    ici      — inter-chip interconnect BW      (no FPGA analogue; needed at
+                                                multi-chip scale)
+
+Utilizations are fractions in [0, 1]; ERU = max over them (Eq. 1).
+`estimate()` plays the role of the paper's "resource estimate extracted from
+the OpenCL compiler log": a fast analytic model over a stage's tile shape and
+its optimization factors, used inside the balancing loops.  The *compiled*
+numbers from the dry-run (`cost_analysis`/HLO parsing) calibrate/validate it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from .graph import Stage, StageProfile
+
+# TPU v5e-like hardware constants (per chip), per the assignment spec.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW_PER_LINK = 50e9            # bytes/s/link
+VMEM_BYTES = 128 * 1024 * 1024    # 128 MiB VMEM (v5e-class)
+HBM_BYTES = 16 * 1024**3          # 16 GiB HBM
+
+RESOURCE_KEYS = ("mxu", "hbm_bw", "vmem", "hbm_cap", "ici")
+
+
+@dataclasses.dataclass(frozen=True)
+class Factors:
+    """The paper's per-kernel optimization factors (Fig. 13).
+
+    unroll — inner-loop unroll (deepens the pipeline; cheapest resource-wise)
+    simd   — lane widening; must be a power of two (on TPU: minor-dim tile
+             multiple of 128 lanes)
+    cu     — compute-unit replication (grid replication across cores;
+             the most resource-hungry)
+    """
+
+    unroll: int = 1
+    simd: int = 1
+    cu: int = 1
+
+    @property
+    def n_uni(self) -> int:
+        return self.unroll * self.simd * self.cu
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    vmem: float = VMEM_BYTES
+    hbm_cap: float = HBM_BYTES
+    ici_bw: float = ICI_BW_PER_LINK
+    max_unroll_lanes: int = 8      # VPU sublanes usable for unrolling
+    n_cores: int = 1               # grid replication budget ("CUs")
+
+    @staticmethod
+    def cpu() -> "ChipSpec":
+        """Roofline constants of the machine the workload suite is
+        *profiled* on — utilizations derived from CPU wall-clock profiles
+        must be normalized against CPU peaks, not TPU peaks (the paper's
+        profiling step measures on the same device it deploys to)."""
+        return ChipSpec(peak_flops=2e11, hbm_bw=3e10,
+                        vmem=32 * 1024 * 1024, hbm_cap=8 * 1024**3,
+                        ici_bw=1e10)
+
+
+class ResourceModel:
+    """Analytic per-stage resource estimates under optimization factors."""
+
+    def __init__(self, chip: ChipSpec | None = None):
+        self.chip = chip or ChipSpec()
+
+    def estimate(self, stage: Stage, factors: Factors,
+                 resident_bytes: float = 0.0,
+                 ici_bytes: float = 0.0) -> dict[str, float]:
+        """Utilization fractions for one stage under the given factors.
+
+        Scaling rules mirror the paper's observations:
+        - throughput scales ~linearly with N_uni = unroll*simd*cu;
+        - HBM-bandwidth demand scales with N_uni (paper: "utilization is the
+          bandwidth of the naive kernel times the unified performance
+          factor");
+        - compute (MXU/VPU) demand scales with N_uni;
+        - VMEM footprint scales with unroll*simd per CU, times cu overall
+          (each replica holds its own working set);
+        - HBM capacity is factor-independent (weights/activations resident).
+        """
+        prof = stage.profile or StageProfile(time_s=1.0)
+        n = factors.n_uni
+        t_naive = max(prof.time_s, 1e-12)
+        flops_rate = (prof.flops / t_naive) * n
+        bw_rate = (prof.hbm_bytes / t_naive) * n
+        # working set per tile ~ hbm_bytes / n_tiles, widened by unroll*simd
+        tile_bytes = prof.hbm_bytes / max(stage.n_tiles(), 1)
+        vmem_foot = tile_bytes * factors.unroll * factors.simd * factors.cu * 2
+        return {
+            "mxu": flops_rate / self.chip.peak_flops,
+            "hbm_bw": bw_rate / self.chip.hbm_bw,
+            "vmem": vmem_foot / self.chip.vmem,
+            "hbm_cap": resident_bytes / self.chip.hbm_cap,
+            "ici": (ici_bytes / t_naive) * n / self.chip.ici_bw,
+        }
+
+    def total(self, per_stage: Mapping[str, Mapping[str, float]]
+              ) -> dict[str, float]:
+        """Aggregate utilization across co-resident stages.
+
+        Static-like resources (vmem, hbm_cap) add up — every co-resident
+        stage's working set occupies the chip simultaneously, exactly like
+        the paper's ALUT/FF/RAM synthesis area.  Rate resources (mxu, hbm_bw,
+        ici) also add for *concurrently executing* stages; the caller passes
+        only the stages of one concurrent group.
+        """
+        out = {k: 0.0 for k in RESOURCE_KEYS}
+        for util in per_stage.values():
+            for k in RESOURCE_KEYS:
+                out[k] += util.get(k, 0.0)
+        return out
+
+    def saturated(self, total: Mapping[str, float]) -> bool:
+        return any(total[k] > 1.0 for k in RESOURCE_KEYS)
+
+    def critical_resource(self, total: Mapping[str, float]) -> str:
+        return max(RESOURCE_KEYS, key=lambda k: total[k])

@@ -1,0 +1,129 @@
+"""Program ("bitstream") splitting — paper §5.6, Eq. 2.
+
+The FPGA tradeoff: two bitstreams give each kernel the whole chip (so more
+aggressive per-kernel optimization) but cost reprogramming (T_r ≈ 1400 ms)
+plus host↔device data movement (T_d).  The TPU analogue: compile the stage
+graph into one XLA executable vs two, where swapping executables costs
+recompile/load plus weight/activation re-transfer.  Serving systems face
+exactly this choice for prefill vs decode programs.
+
+Bi-partitioning criteria (paper):
+  (a) loops are not split unless one iteration's time ≫ reprogram overhead;
+  (b) a CKE pipeline is never broken by a partition;
+  (c) among legal partitions minimize |T1·ERU1 − T2·ERU2| (isolate the
+      long-running resource-constrained kernels).
+
+Decision (Eq. 2): keep co-residence iff
+      T1 + T2 < T1·ERU1 + T2·ERU2 + T_r + T_d
+where Ti·ERUi estimates the *improved* time of partition i when it
+monopolizes the chip (critical-resource headroom 1/ERU → time × ERU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Mapping, Sequence
+
+from .eru import eru as eru_fn
+from .graph import StageGraph
+
+# Program-swap overheads (TPU analogue of the measured 1400 ms reprogram).
+DEFAULT_T_REPROGRAM = 1.4      # s: executable swap + compile-cache load
+DEFAULT_T_DTRANSFER = 0.0      # s: extra host<->device transfer; workload-set
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitDecision:
+    split: bool
+    partition: tuple[tuple[str, ...], tuple[str, ...]] | None
+    t_coreside: float
+    t_split: float
+    candidates: tuple[dict, ...]    # scored legal partitions (for the log)
+
+
+def _legal(graph: StageGraph,
+           part_a: frozenset[str],
+           part_b: frozenset[str],
+           pipelines: Sequence[Sequence[str]],
+           times: Mapping[str, float],
+           t_reprogram: float) -> bool:
+    # (b) never break a CKE pipeline
+    for pipe in pipelines:
+        s = set(pipe)
+        if s & part_a and s & part_b:
+            return False
+    # (a) don't split a loop unless per-iteration time >> reprogram overhead
+    for _name, (members, trips) in graph.loops.items():
+        m = set(members)
+        if m & part_a and m & part_b:
+            iter_time = sum(times[x] for x in m)
+            if not (iter_time > 10.0 * t_reprogram):
+                return False
+    # partitions must respect dataflow direction (a clean cut: no edge from
+    # B back to A when A runs first) — choose orientation A→B
+    for p, c, _ in graph.edges():
+        if p in part_b and c in part_a:
+            return False
+    return True
+
+
+def explore_split(
+    graph: StageGraph,
+    times: Mapping[str, float],
+    utils: Mapping[str, Mapping[str, float]],
+    pipelines: Sequence[Sequence[str]] = (),
+    t_reprogram: float = DEFAULT_T_REPROGRAM,
+    t_dtransfer: float = DEFAULT_T_DTRANSFER,
+    loop_trip_multiplier: bool = True,
+) -> SplitDecision:
+    """Exhaustively score all bi-partitions (the paper notes kernel counts
+    are small, so exhaustive search is fine)."""
+    names = [s.name for s in graph.stages]
+    # effective time of each stage including host-loop trip counts
+    eff_times = dict(times)
+    if loop_trip_multiplier:
+        for _lname, (members, trips) in graph.loops.items():
+            for m in members:
+                eff_times[m] = times[m] * trips
+
+    candidates = []
+    n = len(names)
+    for mask in range(1, 2 ** n - 1):
+        a = frozenset(names[i] for i in range(n) if mask >> i & 1)
+        b = frozenset(names) - a
+        if not _legal(graph, a, b, pipelines, eff_times, t_reprogram):
+            continue
+        ta = sum(eff_times[x] for x in a)
+        tb = sum(eff_times[x] for x in b)
+        # partition ERU: time-weighted max utilization of members
+        def part_eru(part: frozenset[str], t_part: float) -> float:
+            if t_part <= 0:
+                return 0.0
+            return sum(eff_times[x] * eru_fn(utils[x]) for x in part) / t_part
+        ea, eb = part_eru(a, ta), part_eru(b, tb)
+        # reprogram count: loops crossing the partition pay per iteration;
+        # we only allow that when legal per (a), with the measured times.
+        swaps = 1
+        balance = abs(ta * ea - tb * eb)          # criterion (c)
+        candidates.append({
+            "a": tuple(sorted(a)), "b": tuple(sorted(b)),
+            "t1": ta, "t2": tb, "eru1": ea, "eru2": eb,
+            "t_split": ta * ea + tb * eb + swaps * (t_reprogram + t_dtransfer),
+            "balance": balance,
+        })
+
+    t_coreside = sum(eff_times[x] for x in names)
+    if not candidates:
+        return SplitDecision(False, None, t_coreside, float("inf"), ())
+
+    # criterion (c): pick the balance-minimizing legal partition...
+    best = min(candidates, key=lambda c: c["balance"])
+    # ...then apply Eq. 2 to decide split vs co-reside.
+    split = not (t_coreside < best["t_split"])
+    return SplitDecision(
+        split=split,
+        partition=(best["a"], best["b"]),
+        t_coreside=t_coreside,
+        t_split=best["t_split"],
+        candidates=tuple(sorted(candidates, key=lambda c: c["balance"])[:8]),
+    )

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLM, TokenFileDataset, make_dataset
+
+__all__ = ["DataConfig", "SyntheticLM", "TokenFileDataset", "make_dataset"]

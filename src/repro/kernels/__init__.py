@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; `interpret=False` on real TPUs).
+
+flash_attention — id-queue-remapped block-skipping flash attention
+fused_mlp       — up/act/down fusion through VMEM
+moe_gmm         — expert-batched grouped matmul
+ssd_chunk       — Mamba-2 SSD intra-chunk fusion
+fused_rmsnorm   — one-pass RMSNorm
+"""
+from .flash_attention import flash_attention, flash_attention_ref
+from .fused_mlp import fused_mlp, fused_mlp_ref
+from .moe_gmm import moe_gmm, moe_gmm_ref
+from .ssd_chunk import ssd_chunk, ssd_chunk_ref
+from .fused_rmsnorm import fused_rmsnorm, fused_rmsnorm_ref
+
+__all__ = [
+    "flash_attention", "flash_attention_ref",
+    "fused_mlp", "fused_mlp_ref",
+    "moe_gmm", "moe_gmm_ref",
+    "ssd_chunk", "ssd_chunk_ref",
+    "fused_rmsnorm", "fused_rmsnorm_ref",
+]

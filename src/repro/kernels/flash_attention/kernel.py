@@ -1,0 +1,161 @@
+"""Flash attention Pallas TPU kernel with id-queue grid remapping.
+
+The grid's pair dimension enumerates ONLY the visible (q-block, kv-block)
+pairs — the same `visible_pairs` schedule the MKPipe dependency analysis
+produces (§5.4.4 workgroup-id remapping, applied as causal/SWA block
+skipping).  Masked-out blocks are never scheduled, so the kernel does the
+exact lower-triangle / window FLOPs, and the intermediate probabilities
+never leave VMEM (the paper's "fusion removes global-memory round-trips").
+
+Grid: (batch × kv_heads, n_pairs) via PrefetchScalarGridSpec — the pair
+tables are scalar-prefetch operands consumed by the BlockSpec index maps
+(the Pallas version of the paper's constant-memory id_queue).  Pairs are
+row-major in q, so each output block is revisited by consecutive steps;
+online-softmax state (acc, m, l) persists in VMEM scratch and resets at
+each row's first pair.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.models.layers import visible_pairs
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(pair_i_ref, pair_j_ref, row_start_ref, row_end_ref,
+                 q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, *,
+                 q_blk: int, kv_blk: int, causal: bool, window: int,
+                 kv_offset: int, scale: float):
+    p = pl.program_id(1)
+    i = pair_i_ref[p]
+    j = pair_j_ref[p]
+
+    @pl.when(row_start_ref[p] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (g*q_blk, d)
+    k = k_ref[0].astype(jnp.float32)            # (kv_blk, d)
+    v = v_ref[0].astype(jnp.float32)            # (kv_blk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % q_blk
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    qpos = i * q_blk + rows + kv_offset
+    kpos = j * kv_blk + cols
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p_ = jnp.exp(s - m_new)
+    p_ = jnp.where(mask, p_, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p_.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p_, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(row_end_ref[p] == 1)
+    def _():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def build_pair_tables(nq, nk, *, causal, window, q_blk, kv_blk, kv_offset):
+    pairs = visible_pairs(nq, nk, causal=causal, window=window,
+                          q_chunk=q_blk, kv_chunk=kv_blk,
+                          kv_offset=kv_offset)
+    pair_i = np.asarray([p[0] for p in pairs], np.int32)
+    pair_j = np.asarray([p[1] for p in pairs], np.int32)
+    row_start = np.zeros(len(pairs), np.int32)
+    row_end = np.zeros(len(pairs), np.int32)
+    seen: set[int] = set()
+    last_of: dict[int, int] = {}
+    for idx, (i, _j) in enumerate(pairs):
+        if i not in seen:
+            row_start[idx] = 1
+            seen.add(i)
+        last_of[i] = idx
+    for idx in last_of.values():
+        row_end[idx] = 1
+    return pair_i, pair_j, row_start, row_end
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           q_blk: int = 256, kv_blk: int = 256,
+                           kv_offset: int = 0,
+                           interpret: bool = True):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D).  Returns (B, Sq, Hq, D).
+
+    (batch, kv_head) fold into grid dim 0; the g query heads of a KV group
+    ride along in the q block (rows are g-major).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Skv)
+    assert Sq % q_blk == 0 and Skv % kv_blk == 0
+    nq, nk = Sq // q_blk, Skv // kv_blk
+    scale = 1.0 / math.sqrt(D)
+
+    pair_i, pair_j, row_start, row_end = build_pair_tables(
+        nq, nk, causal=causal, window=window, q_blk=q_blk, kv_blk=kv_blk,
+        kv_offset=kv_offset)
+
+    qf = (q.reshape(B, Sq, Hkv, g, D).transpose(0, 2, 1, 3, 4)
+          .reshape(B * Hkv, nq, q_blk, g, D)
+          .transpose(0, 1, 3, 2, 4).reshape(B * Hkv, nq * g * q_blk, D))
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+
+    grid = (B * Hkv, len(pair_i))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g * q_blk, D),
+                         lambda b, p, pi, pj, rs, re: (b, pi[p], 0)),
+            pl.BlockSpec((1, kv_blk, D),
+                         lambda b, p, pi, pj, rs, re: (b, pj[p], 0)),
+            pl.BlockSpec((1, kv_blk, D),
+                         lambda b, p, pi, pj, rs, re: (b, pj[p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g * q_blk, D),
+                               lambda b, p, pi, pj, rs, re: (b, pi[p], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * q_blk, D), jnp.float32),
+            pltpu.VMEM((g * q_blk, 1), jnp.float32),
+            pltpu.VMEM((g * q_blk, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, q_blk=q_blk, kv_blk=kv_blk, causal=causal,
+            window=window, kv_offset=kv_offset, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, nq * g * q_blk, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pair_i), jnp.asarray(pair_j),
+      jnp.asarray(row_start), jnp.asarray(row_end), qf, kf, vf)
+
+    out = (out.reshape(B, Hkv, nq, g, q_blk, D).transpose(0, 2, 4, 1, 3, 5)
+           .reshape(B, Sq, Hq, D))
+    return out

@@ -1,0 +1,15 @@
+"""Jitted public wrapper for the flash attention kernel."""
+import functools
+
+import jax
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_blk", "kv_blk", "kv_offset", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_blk=256,
+                    kv_blk=256, kv_offset=0, interpret=True):
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, q_blk=q_blk, kv_blk=kv_blk,
+        kv_offset=kv_offset, interpret=interpret)

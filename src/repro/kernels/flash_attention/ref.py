@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from repro.models.layers import attention_ref
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_offset=0):
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         kv_offset=kv_offset)

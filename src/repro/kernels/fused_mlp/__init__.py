@@ -1,0 +1,4 @@
+from .ops import fused_mlp
+from .ref import fused_mlp_ref
+
+__all__ = ["fused_mlp", "fused_mlp_ref"]

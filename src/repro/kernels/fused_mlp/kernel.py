@@ -1,0 +1,112 @@
+"""Fused MLP Pallas kernel: up-proj → activation (gated or plain) →
+down-proj in one pass — the hidden (tokens × d_ff) activation never leaves
+VMEM (MKPipe kernel-fusion plan applied to the FFN stage pair).
+
+Grid (m_blocks, ff_blocks): each step computes one (bm × bff) hidden tile
+from the resident x tile, multiplies into the down projection, and
+accumulates the (bm × d) output tile in VMEM scratch across ff blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _act(h, kind):
+    if kind == "silu":
+        return jax.nn.silu(h)
+    if kind == "relu2":
+        r = jnp.maximum(h, 0.0)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(kind)
+
+
+def _mlp_kernel(x_ref, wu_ref, wd_ref, o_ref, acc_ref, *, nff, act):
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    h = jax.lax.dot_general(x, wu_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = _act(h, act)
+    acc_ref[...] += jax.lax.dot_general(
+        h, wd_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f == nff - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _mlp_gated_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+                      nff, act):
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    g = jax.lax.dot_general(x, wg_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = _act(g, act) * u
+    acc_ref[...] += jax.lax.dot_general(
+        h, wd_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f == nff - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_mlp_kernel(x, w_up, w_down, w_gate=None, *, act="silu",
+                     bm: int = 128, bff: int = 512, interpret: bool = True):
+    """x: (T, d); w_up/w_gate: (d, ff); w_down: (ff, d) → (T, d)."""
+    T, d = x.shape
+    ff = w_up.shape[1]
+    bm = min(bm, T)
+    bff = min(bff, ff)
+    assert T % bm == 0 and ff % bff == 0
+    grid = (T // bm, ff // bff)
+
+    if w_gate is not None:
+        kernel = functools.partial(_mlp_gated_kernel, nff=grid[1], act=act)
+        in_specs = [
+            pl.BlockSpec((bm, d), lambda i, f: (i, 0)),
+            pl.BlockSpec((d, bff), lambda i, f: (0, f)),
+            pl.BlockSpec((d, bff), lambda i, f: (0, f)),
+            pl.BlockSpec((bff, d), lambda i, f: (f, 0)),
+        ]
+        args = (x, w_gate, w_up, w_down)
+    else:
+        kernel = functools.partial(_mlp_kernel, nff=grid[1], act=act)
+        in_specs = [
+            pl.BlockSpec((bm, d), lambda i, f: (i, 0)),
+            pl.BlockSpec((d, bff), lambda i, f: (0, f)),
+            pl.BlockSpec((bff, d), lambda i, f: (f, 0)),
+        ]
+        args = (x, w_up, w_down)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, d), lambda i, f: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,13 @@
+"""Jitted public wrapper for the fused MLP kernel."""
+import functools
+
+import jax
+
+from .kernel import fused_mlp_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bff", "interpret"))
+def fused_mlp(x, w_up, w_down, w_gate=None, *, act="silu", bm=128, bff=512,
+              interpret=True):
+    return fused_mlp_kernel(x, w_up, w_down, w_gate, act=act, bm=bm,
+                            bff=bff, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused MLP kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def _act(h, kind):
+    if kind == "silu":
+        return jax.nn.silu(h)
+    if kind == "relu2":
+        r = jnp.maximum(h, 0.0)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(kind)
+
+
+def fused_mlp_ref(x, w_up, w_down, w_gate=None, *, act="silu"):
+    x32 = x.astype(jnp.float32)
+    u = x32 @ w_up.astype(jnp.float32)
+    if w_gate is not None:
+        h = _act(x32 @ w_gate.astype(jnp.float32), act) * u
+    else:
+        h = _act(u, act)
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,31 @@
+"""Fused RMSNorm Pallas kernel: variance, rsqrt, scale in one VMEM pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def fused_rmsnorm_kernel(x, scale, *, eps: float = 1e-6, bm: int = 256,
+                         interpret: bool = True):
+    """x: (T, d); scale: (d,) → (T, d)."""
+    T, d = x.shape
+    bm = min(bm, T)
+    assert T % bm == 0
+    import functools
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(T // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

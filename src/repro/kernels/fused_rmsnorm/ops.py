@@ -1,0 +1,12 @@
+"""Jitted public wrapper for the fused RMSNorm kernel."""
+import functools
+
+import jax
+
+from .kernel import fused_rmsnorm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def fused_rmsnorm(x, scale, *, eps=1e-6, bm=256, interpret=True):
+    return fused_rmsnorm_kernel(x, scale, eps=eps, bm=bm,
+                                interpret=interpret)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from repro.models.layers import rmsnorm
+
+
+def fused_rmsnorm_ref(x, scale, *, eps=1e-6):
+    return rmsnorm(x, scale, eps=eps)

@@ -1,0 +1,56 @@
+"""MoE grouped (expert-batched) matmul Pallas kernel.
+
+Computes y[e] = buf[e] @ w[e] over the capacity-buffer layout
+(E, C, d) × (E, d, f) → (E, C, f) with one expert per grid row — the
+perf-critical inner matmul of the MoE block.  Per-expert tiles stream
+through VMEM; the d contraction is tiled and accumulated in scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nd):
+    kblk = pl.program_id(3)
+
+    @pl.when(kblk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kblk == nd - 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm_kernel(buf, w, *, bc: int = 128, bf: int = 256, bd: int = 256,
+                   interpret: bool = True):
+    """buf: (E, C, d); w: (E, d, f) → (E, C, f)."""
+    E, C, d = buf.shape
+    _, _, f = w.shape
+    bc = min(bc, C)
+    bf = min(bf, f)
+    bd = min(bd, d)
+    assert C % bc == 0 and f % bf == 0 and d % bd == 0
+    grid = (E, C // bc, f // bf, d // bd)
+
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, nd=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, c, fb, kb: (e, c, kb)),
+            pl.BlockSpec((1, bd, bf), lambda e, c, fb, kb: (e, kb, fb)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, c, fb, kb: (e, c, fb)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(buf, w)

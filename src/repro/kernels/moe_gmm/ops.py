@@ -1,0 +1,11 @@
+"""Jitted public wrapper for the grouped matmul kernel."""
+import functools
+
+import jax
+
+from .kernel import moe_gmm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def moe_gmm(buf, w, *, bc=128, bf=256, bd=256, interpret=True):
+    return moe_gmm_kernel(buf, w, bc=bc, bf=bf, bd=bd, interpret=interpret)

@@ -1,0 +1,90 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+For one (batch·chunk, head) grid cell it computes the chunk-local quadratic
+term and the chunk's input-state contribution:
+
+  y[i]  = Σ_{j≤i} (C_i·B_j) · exp(cum_i − cum_j) · dt_j · x_j
+  s_in  = Σ_j  exp(cum_end − cum_j) · dt_j · B_j ⊗ x_j
+
+(cum = within-chunk cumulative log-decay, per head).  The decay matrix and
+the masked score matrix stay in VMEM — this is the fusion of the SSD
+"attention-like" stage pair.  The cross-chunk recurrence (a tiny scan over
+nc states) remains in XLA where it belongs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, s_ref):
+    h = pl.program_id(1)
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (1, Q)
+    bm = b_ref[0].astype(jnp.float32)          # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)          # (Q, N)
+    A = a_ref[h]                               # scalar (negative)
+
+    la = dt[0] * A                             # (Q,)
+    cum = jnp.cumsum(la)                       # (Q,)
+    # decay L[i,j] = exp(cum_i - cum_j) for j<=i else 0
+    ci = cum[:, None]
+    cj = cum[None, :]
+    Q = x.shape[0]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    L = jnp.where(tri, jnp.exp(jnp.clip(ci - cj, -60.0, 0.0)), 0.0)
+    sc = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    att = sc * L * dt[0][None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # input state: (N, P) = (B ⊙ dt·decay_to_end)ᵀ @ x
+    dte = jnp.exp(jnp.clip(cum[-1] - cum, -60.0, 0.0)) * dt[0]   # (Q,)
+    bw = bm * dte[:, None]                                       # (Q, N)
+    s = jax.lax.dot_general(bw, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (N, P)
+    s_ref[0, 0] = s.astype(s_ref.dtype)
+
+
+def ssd_chunk_kernel(xh, dt, A, bmat, cmat, *, interpret: bool = True):
+    """Intra-chunk SSD.
+
+    xh:   (BC, H, Q, P)  — BC = batch·num_chunks
+    dt:   (BC, H, 1, Q)
+    A:    (H,) negative decay rates (scalar-prefetch)
+    bmat: (BC, Q, N), cmat: (BC, Q, N)
+    Returns (y (BC, H, Q, P), s_in (BC, H, N, P)).
+    """
+    BC, H, Q, P = xh.shape
+    N = bmat.shape[-1]
+    grid = (BC, H)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda bc, h, a: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda bc, h, a: (bc, h, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda bc, h, a: (bc, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda bc, h, a: (bc, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda bc, h, a: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bc, h, a: (bc, h, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, H, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A, xh, dt, bmat, cmat)

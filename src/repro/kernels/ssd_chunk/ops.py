@@ -1,0 +1,11 @@
+"""Jitted public wrapper for the SSD chunk kernel."""
+import functools
+
+import jax
+
+from .kernel import ssd_chunk_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(xh, dt, A, bmat, cmat, *, interpret=True):
+    return ssd_chunk_kernel(xh, dt, A, bmat, cmat, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xh, dt, A, bmat, cmat):
+    """Same contract as ssd_chunk_kernel (see kernel.py)."""
+    BC, H, Q, P = xh.shape
+    x = xh.astype(jnp.float32)
+    d = dt.astype(jnp.float32)[:, :, 0]              # (BC, H, Q)
+    la = d * A[None, :, None]                        # (BC, H, Q)
+    cum = jnp.cumsum(la, axis=-1)
+    ci, cj = cum[..., :, None], cum[..., None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None], jnp.exp(jnp.clip(ci - cj, -60.0, 0.0)),
+                  0.0)                               # (BC, H, Q, Q)
+    sc = jnp.einsum("bin,bjn->bij", cmat.astype(jnp.float32),
+                    bmat.astype(jnp.float32))        # (BC, Q, Q)
+    att = sc[:, None] * L * d[..., None, :]          # (BC, H, Q, Q)
+    y = jnp.einsum("bhij,bhjp->bhip", att, x)
+    dte = jnp.exp(jnp.clip(cum[..., -1:] - cum, -60.0, 0.0)) * d
+    s = jnp.einsum("bhq,bqn,bhqp->bhnp", dte, bmat.astype(jnp.float32), x)
+    return y, s

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (the two lines above MUST run before any jax import — jax locks the device
+#  count on first init; everything else, including repro imports, follows)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, per device: HLO FLOPs and bytes
+(cost_analysis), memory footprint (memory_analysis), and collective traffic
+(optimized-HLO parse incl. loop trip counts) — the three roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # every cell, subprocess-isolated
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+import jax
+
+from repro.configs import (SHAPES, get_config, input_specs, list_archs,
+                           skip_reason)
+from repro.dist.context import sharding_context
+from repro.dist.sharding import (batch_spec, cache_specs, data_axes,
+                                 param_specs, shard_tree_specs)
+from repro.launch.hloanalysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import tp_align
+from repro.models.transformer import abstract_params
+from repro.train.optimizer import adamw_init
+from repro.train.step import (make_prefill_step, make_serve_step,
+                              make_train_step, zero1_specs)
+
+# TPU v5e-like constants (per chip) — the assignment's hardware model.
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = pathlib.Path("results/dryrun")
+
+
+def _named(specs_tree, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               zero1: bool = False, grad_accum: int = 1,
+               remat: bool = True, variants: tuple[str, ...] = ()):
+    """Lower + compile one cell; returns the stats record.
+
+    variants: optimization flags ("ar_bf16", "seq_shard",
+    "decode_bf16_scores", ...) consumed by the model layers through the
+    sharding context — the §Perf hillclimb knobs.
+    """
+    shape = SHAPES[shape_name]
+    cfg = tp_align(get_config(arch), tp=16)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "skipped": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    daxes = data_axes(mesh)
+
+    params_abs = abstract_params(cfg)
+    pspecs = param_specs(params_abs)
+    params_sds = shard_tree_specs(params_abs, pspecs, mesh)
+    specs = input_specs(cfg, shape)
+
+    t0 = time.perf_counter()
+    with mesh, sharding_context(mesh, flags=tuple(variants)):
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            ospecs = {"m": pspecs, "v": pspecs,
+                      "count": jax.sharding.PartitionSpec()}
+            if zero1:
+                ospecs = {"m": zero1_specs(pspecs, params_abs, mesh),
+                          "v": zero1_specs(pspecs, params_abs, mesh),
+                          "count": jax.sharding.PartitionSpec()}
+            opt_sds = shard_tree_specs(opt_abs, ospecs, mesh)
+            bspecs = {
+                k: batch_spec(mesh, v.shape[0], v.ndim)
+                for k, v in specs.items()
+            }
+            batch_sds = shard_tree_specs(specs, bspecs, mesh)
+            z1 = _named(ospecs["m"], mesh) if zero1 else None
+            step = make_train_step(cfg, grad_accum=grad_accum, remat=remat,
+                                   zero1_constraints=z1)
+            lowered = jax.jit(
+                step,
+                out_shardings=(_named(pspecs, mesh), _named(ospecs, mesh),
+                               None),
+                donate_argnums=(0, 1),
+            ).lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            bspecs = {k: batch_spec(mesh, v.shape[0], v.ndim)
+                      for k, v in specs.items()}
+            batch_sds = shard_tree_specs(specs, bspecs, mesh)
+            step = make_prefill_step(cfg)
+            lowered = jax.jit(step).lower(params_sds, batch_sds)
+        else:  # decode
+            cspecs = cache_specs(specs["cache"], mesh, shape.global_batch)
+            cache_sds = shard_tree_specs(specs["cache"], cspecs, mesh)
+            tok_sds = shard_tree_specs(
+                {"t": specs["token"]},
+                {"t": batch_spec(mesh, shape.global_batch, 2)}, mesh)["t"]
+            step = make_serve_step(cfg)
+            lowered = jax.jit(
+                step, out_shardings=(None, _named(cspecs, mesh)),
+                donate_argnums=(1,),
+            ).lower(params_sds, cache_sds, tok_sds)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = analyze_hlo(compiled.as_text())
+
+    # loop-aware accounting (XLA cost_analysis counts while bodies once)
+    flops_dev = hlo.flops
+    bytes_dev = hlo.hbm_bytes
+    coll_dev = hlo.collective_bytes
+
+    # MODEL_FLOPS (whole-step, all devices): 6·N·D train / 2·N·D inference,
+    # active params for MoE.
+    n_active = cfg.n_params(active_only=True)
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill")
+              else shape.global_batch)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multipod" if multi_pod else "pod",
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "variants": sorted(variants) + (["zero1"] if zero1 else [])
+        + ([f"ga{grad_accum}"] if grad_accum > 1 else [])
+        + ([] if remat else ["noremat"]),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collective_breakdown": hlo.coll_bytes_by_op,
+            "collective_counts": hlo.coll_count_by_op,
+            "xla_cost_analysis_flops": float(ca.get("flops", 0.0)),
+            "xla_cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
+        },
+        "memory": None if ma is None else {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "terms_s": {
+            "compute": flops_dev / PEAK_FLOPS,
+            "memory": bytes_dev / HBM_BW,
+            "collective": coll_dev / ICI_BW,
+        },
+        "model_flops_total": model_flops,
+        "hlo_flops_total": flops_dev * n_dev,
+        "useful_flops_ratio": (model_flops / (flops_dev * n_dev)
+                               if flops_dev else 0.0),
+        "params_total": cfg.n_params(),
+        "params_active": n_active,
+    }
+    terms = rec["terms_s"]
+    rec["bottleneck"] = max(terms, key=terms.get)
+    return rec
+
+
+def run_all(meshes: list[str], out_dir: pathlib.Path,
+            parallel: int = 2, timeout: int = 3600) -> int:
+    """Run every cell in isolated subprocesses; returns #failures."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    jobs = []
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            for mesh in meshes:
+                tag = f"{arch}__{shape_name}__{mesh}"
+                if (out_dir / f"{tag}.json").exists():
+                    continue
+                jobs.append((arch, shape_name, mesh, tag))
+    procs: list[tuple[subprocess.Popen, str, float]] = []
+    fails = 0
+
+    def reap(block=False):
+        nonlocal fails
+        for p, tag, start in list(procs):
+            if p.poll() is None and not block:
+                continue
+            if p.poll() is None and block and time.time() - start < timeout:
+                continue
+            if p.poll() is None:
+                p.kill()
+            p.wait()
+            if p.returncode != 0:
+                fails += 1
+                print(f"[dryrun] FAIL {tag} rc={p.returncode}", flush=True)
+            else:
+                print(f"[dryrun] ok   {tag}", flush=True)
+            procs.remove((p, tag, start))
+
+    for arch, shape_name, mesh, tag in jobs:
+        while len(procs) >= parallel:
+            reap()
+            time.sleep(2)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape_name, "--mesh", mesh,
+               "--out", str(out_dir)]
+        log = open(out_dir / f"{tag}.log", "w")
+        procs.append((subprocess.Popen(
+            cmd, stdout=log, stderr=subprocess.STDOUT), tag, time.time()))
+    while procs:
+        reap(block=True)
+        time.sleep(2)
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--variant", action="append", default=[],
+                    help="optimization flags (repeatable): ar_bf16, "
+                         "seq_shard, decode_bf16_scores")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--parallel", type=int, default=2)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+        fails = run_all(meshes, out_dir, parallel=args.parallel)
+        sys.exit(1 if fails else 0)
+
+    meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    for mesh in meshes:
+        rec = lower_cell(args.arch, args.shape, multi_pod=(mesh == "multipod"),
+                         zero1=args.zero1, grad_accum=args.grad_accum,
+                         remat=not args.no_remat,
+                         variants=tuple(args.variant))
+        tag = f"{args.arch}__{args.shape}__{mesh}"
+        suffix = ""
+        for v in args.variant:
+            suffix += f"__{v}"
+        if args.zero1:
+            suffix += "__zero1"
+        if args.grad_accum > 1:
+            suffix += f"__ga{args.grad_accum}"
+        if args.no_remat:
+            suffix += "__noremat"
+        path = out_dir / f"{tag}{suffix}.json"
+        path.write_text(json.dumps(rec, indent=2))
+        print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

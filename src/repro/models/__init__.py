@@ -1,0 +1,10 @@
+"""Model substrate: unified LM covering the ten assigned architectures."""
+from .common import LayerKind, LayerSpec, ModelConfig, ShapeSpec, tp_align
+from .transformer import (Model, init_params, abstract_params, forward,
+                          loss_fn, init_cache, decode_step)
+
+__all__ = [
+    "LayerKind", "LayerSpec", "ModelConfig", "ShapeSpec", "tp_align",
+    "Model", "init_params", "abstract_params", "forward", "loss_fn",
+    "init_cache", "decode_step",
+]

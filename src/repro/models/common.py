@@ -1,0 +1,187 @@
+"""Model configuration + TP-alignment transforms.
+
+One config class describes all ten assigned architectures.  Layers are
+given as a repeating *pattern* of LayerSpecs (`pattern × n_repeats` =
+num_layers) so the forward pass can `lax.scan` over repeats — keeping the
+lowered HLO O(pattern) instead of O(layers), which is what makes 80-layer
+dry-runs compile fast on the CPU backend.
+
+`tp_align` applies the documented semantics-preserving padding transforms
+(DESIGN.md §5): vocab padded to a multiple of tp×128, query heads padded to
+a multiple of tp (zero o-proj rows → inert), KV heads duplicated to exactly
+tp (bit-identical attention, shardable KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+
+class LayerKind(str, enum.Enum):
+    ATTN = "attn"          # full attention
+    SWA = "swa"            # sliding-window attention
+    MAMBA = "mamba"        # Mamba-2 SSD mixer
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: LayerKind = LayerKind.ATTN
+    moe: bool = False      # MoE FFN instead of dense
+    ffn: bool = True       # False → mixer-only block (pure Mamba archs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense|moe|vlm|audio|hybrid|ssm
+    pattern: tuple[LayerSpec, ...]
+    n_repeats: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention
+    window: int = 0                    # >0 for SWA layers
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    # activation / norm / block style
+    act: str = "silu"                  # silu|relu2|gelu
+    norm: str = "rmsnorm"              # rmsnorm|layernorm
+    parallel_block: bool = False       # Cohere-style parallel attn+FFN
+    tie_embeddings: bool = False
+    # MoE
+    num_experts: int = 0
+    experts_per_tok: int = 0
+    moe_d_ff: int = 0
+    moe_shared_expert: bool = False    # llama4: shared expert alongside MoE
+    capacity_factor: float = 1.25
+    # SSM (Mamba-2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # encoder-decoder (whisper): encoder layers are full-attn, non-causal
+    enc_layers: int = 0
+    enc_frames: int = 1500             # stub frontend sequence length
+    # VLM: prefix patch embeddings from the stubbed vision tower
+    num_patches: int = 0
+    # padding applied by tp_align (0 = unpadded)
+    padded_vocab: int = 0
+    padded_heads: int = 0
+    padded_kv_heads: int = 0
+    dtype: str = "bfloat16"
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.n_repeats
+
+    @property
+    def d_inner(self) -> int:          # Mamba-2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def vocab(self) -> int:
+        return self.padded_vocab or self.vocab_size
+
+    @property
+    def q_heads(self) -> int:
+        return self.padded_heads or self.num_heads
+
+    @property
+    def kv_heads(self) -> int:
+        return self.padded_kv_heads or self.num_kv_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    def n_params(self, active_only: bool = False) -> float:
+        """Approximate parameter count (unpadded semantics), for 6·N·D."""
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d                       # embeddings
+        if not self.tie_embeddings:
+            n += self.vocab_size * d                  # head
+        for spec in self.pattern:
+            per = 0
+            if spec.kind in (LayerKind.ATTN, LayerKind.SWA):
+                per += d * (self.num_heads * self.head_dim) * 2   # q, o
+                per += d * (self.num_kv_heads * self.head_dim) * 2
+            else:
+                di = self.d_inner
+                per += d * (2 * di + 2 * self.ssm_heads * self.ssm_state
+                            + self.ssm_heads) + di * d
+            if spec.ffn:
+                if spec.moe:
+                    e = self.num_experts if not active_only \
+                        else self.experts_per_tok
+                    per += 3 * d * self.moe_d_ff * e
+                    if self.moe_shared_expert:
+                        per += 3 * d * self.moe_d_ff
+                else:
+                    mult = 3 if self.act == "silu" else 2
+                    per += mult * d * self.d_ff
+            per += 2 * d                               # norms
+            n += per * self.n_repeats
+        if self.is_encdec:
+            # encoder self-attn + ffn, decoder cross-attn
+            enc = self.enc_layers * (4 * d * d + 2 * d * self.d_ff + 2 * d)
+            cross = L * (4 * d * d)
+            n += enc + cross
+        return float(n)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def tp_align(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Pad vocab/heads so every model-axis-sharded dim divides `tp`.
+
+    - vocab → multiple of tp·128 (Megatron's make-vocab-size-divisible-by);
+    - q heads → multiple of tp (zero o-proj rows for padded heads);
+    - kv heads → duplicated to exactly tp when kv < tp (requires tp % kv == 0;
+      attention outputs are bit-identical).
+    """
+    padded_vocab = _round_up(cfg.vocab_size, tp * 128)
+    padded_heads = _round_up(cfg.num_heads, tp)
+    if cfg.num_kv_heads >= tp:
+        if cfg.num_kv_heads % tp:
+            raise ValueError(f"kv={cfg.num_kv_heads} not divisible by tp={tp}")
+        padded_kv = cfg.num_kv_heads
+    else:
+        if tp % cfg.num_kv_heads:
+            raise ValueError(f"tp={tp} not a multiple of kv={cfg.num_kv_heads}")
+        padded_kv = tp
+    # q heads must be divisible by kv heads (grouping)
+    padded_heads = _round_up(padded_heads, padded_kv)
+    return dataclasses.replace(
+        cfg, padded_vocab=padded_vocab, padded_heads=padded_heads,
+        padded_kv_heads=padded_kv)
+
+
+def kv_dup_factor(cfg: ModelConfig) -> int:
+    """How many times each original KV head is duplicated."""
+    return cfg.kv_heads // cfg.num_kv_heads
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)

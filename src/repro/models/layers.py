@@ -1,0 +1,785 @@
+"""Layer implementations (pure JAX / XLA path).
+
+Attention (train/prefill) is a *triangle scan*: a `lax.scan` over the static
+list of visible (q-chunk, kv-chunk) pairs with an online-softmax state.
+Compared to a masked dense implementation this (a) has exact
+lower-triangular / sliding-window FLOPs — the compiled HLO matches the
+model FLOPs, which keeps the roofline honest — and (b) executes chunk pairs
+in exactly the dependency-resolution order an MKPipe id_queue would emit
+(the Pallas flash kernel applies the same order as a grid remap).
+
+MoE is GShard-style capacity dispatch via scatter-add (dropping, capacity
+factor from the config), with a dense all-experts fallback used as the
+correctness oracle.  Mamba-2 is the chunked SSD algorithm with a
+cross-chunk state scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import LayerKind, ModelConfig
+from repro.dist.context import constrain, flag, moe_groups
+
+Array = Any
+
+
+def _row_parallel_einsum(expr: str, a: Array, w: Array, out_dtype) -> Array:
+    """Row-parallel (psum-producing) projection.  Under the `ar_bf16`
+    hillclimb flag the partial products are emitted in bf16, so the
+    GSPMD-inserted all-reduce moves half the bytes (accuracy note: the
+    cross-shard reduction then accumulates in bf16)."""
+    if flag("ar_bf16"):
+        return jnp.einsum(expr, a, w,
+                          preferred_element_type=jnp.bfloat16
+                          ).astype(out_dtype)
+    return jnp.einsum(expr, a, w).astype(out_dtype)
+
+
+# ----------------------------------------------------------------- basics
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x: Array, scale: Array, kind: str) -> Array:
+    return rmsnorm(x, scale) if kind == "rmsnorm" else layernorm(x, scale)
+
+
+def activation(x: Array, act: str) -> Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "relu2":                     # nemotron: squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(act)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------ attention (chunked)
+def visible_pairs(nq: int, nk: int, *, causal: bool, window: int,
+                  q_chunk: int, kv_chunk: int, kv_offset: int = 0
+                  ) -> list[tuple[int, int]]:
+    """Static chunk-pair schedule — the id_queue of the attention stage."""
+    pairs = []
+    for i in range(nq):
+        q_lo, q_hi = i * q_chunk + kv_offset, (i + 1) * q_chunk - 1 + kv_offset
+        for j in range(nk):
+            k_lo, k_hi = j * kv_chunk, (j + 1) * kv_chunk - 1
+            if causal and k_lo > q_hi:
+                continue                       # fully above the diagonal
+            if window and k_hi < q_lo - window + 1:
+                continue                       # fully outside the window
+            pairs.append((i, j))
+    return pairs
+
+
+def _pair_mask(i, j, q_chunk, kv_chunk, causal, window, kv_offset):
+    qpos = i * q_chunk + jnp.arange(q_chunk) + kv_offset
+    kpos = j * kv_chunk + jnp.arange(kv_chunk)
+    mask = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask
+
+
+def _flash_fwd_scan(q, k, v, causal, window, q_chunk, kv_chunk, kv_offset):
+    """Online-softmax forward over visible chunk pairs.
+    Returns (out f32 (B,Sq,Hq,D), lse f32 (B,Sq,Hkv,g))."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / math.sqrt(D)
+
+    pairs = visible_pairs(nq, nk, causal=causal, window=window,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk,
+                          kv_offset=kv_offset)
+    qs = q.reshape(B, nq, q_chunk, Hkv, g, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    acc = jnp.zeros((nq, B, q_chunk, Hkv, g, D), jnp.float32)
+    m = jnp.full((nq, B, q_chunk, Hkv, g), -jnp.inf, jnp.float32)
+    l = jnp.zeros((nq, B, q_chunk, Hkv, g), jnp.float32)
+    pair_arr = jnp.asarray(pairs, jnp.int32)
+
+    def step(state, ij):
+        acc, m, l = state
+        i, j = ij[0], ij[1]
+        qi = jax.lax.dynamic_index_in_dim(qs, i, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(ks, j, 0, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vs, j, 0, keepdims=False)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        mask = _pair_mask(i, j, q_chunk, kv_chunk, causal, window, kv_offset)
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(mask[:, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(mi), jnp.exp(mi - safe_m), 0.0)
+        l_new = li * corr + p.sum(axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vj.astype(jnp.float32))
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc, m, l), pair_arr)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, D)
+    lse = jnp.where(l > 0, jnp.where(jnp.isfinite(m), m, 0.0) + jnp.log(
+        jnp.maximum(l, 1e-30)), jnp.inf)
+    lse = lse.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hkv, g)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_chunk, kv_chunk, kv_offset):
+    out, _ = _flash_fwd_scan(q, k, v, causal, window, q_chunk, kv_chunk,
+                             kv_offset)
+    return out.astype(q.dtype)
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_chunk, kv_chunk, kv_offset):
+    out, lse = _flash_fwd_scan(q, k, v, causal, window, q_chunk, kv_chunk,
+                               kv_offset)
+    # residuals: q, k, v, out, lse — NO per-pair probabilities (the flash
+    # backward recomputes them chunk-by-chunk; this is what keeps the
+    # training memory footprint linear in sequence length)
+    return out.astype(q.dtype), (q, k, v, out.astype(q.dtype), lse)
+
+
+def _flash_vjp_bwd(causal, window, q_chunk, kv_chunk, kv_offset,
+                   res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / math.sqrt(D)
+
+    pairs = visible_pairs(nq, nk, causal=causal, window=window,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk,
+                          kv_offset=kv_offset)
+    pair_arr = jnp.asarray(pairs, jnp.int32)
+
+    qs = q.reshape(B, nq, q_chunk, Hkv, g, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    dos = dout.reshape(B, nq, q_chunk, Hkv, g, D).transpose(1, 0, 2, 3, 4, 5)
+    lses = lse.reshape(B, nq, q_chunk, Hkv, g).transpose(1, 0, 2, 3, 4)
+    # D_i = rowsum(dout ⊙ out)
+    delta = jnp.einsum("bshgd,bshgd->bshg",
+                       dout.reshape(B, Sq, Hkv, g, D).astype(jnp.float32),
+                       out.reshape(B, Sq, Hkv, g, D).astype(jnp.float32))
+    deltas = delta.reshape(B, nq, q_chunk, Hkv, g).transpose(1, 0, 2, 3, 4)
+
+    dq = jnp.zeros((nq, B, q_chunk, Hkv, g, D), jnp.float32)
+    dk = jnp.zeros((nk, B, kv_chunk, Hkv, D), jnp.float32)
+    dv = jnp.zeros((nk, B, kv_chunk, Hkv, D), jnp.float32)
+
+    def step(state, ij):
+        dq, dk, dv = state
+        i, j = ij[0], ij[1]
+        qi = jax.lax.dynamic_index_in_dim(qs, i, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(ks, j, 0, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vs, j, 0, keepdims=False)
+        doi = jax.lax.dynamic_index_in_dim(dos, i, 0, keepdims=False
+                                           ).astype(jnp.float32)
+        lsei = jax.lax.dynamic_index_in_dim(lses, i, 0, keepdims=False)
+        di = jax.lax.dynamic_index_in_dim(deltas, i, 0, keepdims=False)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        mask = _pair_mask(i, j, q_chunk, kv_chunk, causal, window, kv_offset)
+        safe_lse = jnp.where(jnp.isfinite(lsei), lsei, 0.0)
+        p = jnp.exp(s - safe_lse[..., None])
+        p = jnp.where(mask[:, None, None, :] & jnp.isfinite(
+            lsei)[..., None], p, 0.0)
+        dvj = jnp.einsum("bqhgk,bqhgd->bkhd", p, doi)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", doi, vj.astype(jnp.float32))
+        ds = p * (dp - di[..., None]) * scale
+        dqi = jnp.einsum("bqhgk,bkhd->bqhgd", ds, kj.astype(jnp.float32))
+        dkj = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qi.astype(jnp.float32))
+        dq = dq.at[i].add(dqi)
+        dk = dk.at[j].add(dkj)
+        dv = dv.at[j].add(dvj)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq, dk, dv), pair_arr)
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, D).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, D).astype(k.dtype)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      window: int = 0, q_chunk: int = 512,
+                      kv_chunk: int = 512, kv_offset: int = 0,
+                      use_custom_vjp: bool = True) -> Array:
+    """Flash attention over visible chunk pairs (XLA path).
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    kv_offset: absolute position of q[0] relative to k[0] (cache decoding).
+    use_custom_vjp=False falls back to autodiff-through-scan (stores
+    per-pair probabilities — the memory-hungry baseline; kept for A/B).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, _, _ = k.shape
+    # largest divisors ≤ requested chunk (handles Skv=1500 cross-attn etc.)
+    q_chunk = min(q_chunk, Sq)
+    while Sq % q_chunk:
+        q_chunk -= 1
+    kv_chunk = min(kv_chunk, Skv)
+    while Skv % kv_chunk:
+        kv_chunk -= 1
+    if use_custom_vjp:
+        return _flash(q, k, v, causal, window, q_chunk, kv_chunk, kv_offset)
+    out, _ = _flash_fwd_scan(q, k, v, causal, window, q_chunk, kv_chunk,
+                             kv_offset)
+    return out.astype(q.dtype)
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool,
+                  window: int = 0, kv_offset: int = 0) -> Array:
+    """Dense masked attention — small-shape oracle for the chunked path."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qs = q.reshape(B, Sq, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qs, k.astype(jnp.float32))
+    s /= math.sqrt(D)
+    qpos = jnp.arange(Sq) + kv_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     n_valid: Array) -> Array:
+    """Single-token attention against a cache.
+
+    q: (B, 1, Hq, D); caches: (B, S, Hkv, D); n_valid: scalar count of
+    valid cache slots (ring buffers pass the full size once warm).
+
+    Under the `decode_bf16_scores` flag the cache is consumed in its
+    native dtype with f32 MXU accumulation (no materialized f32 copy of
+    the full KV cache — the dominant HBM traffic of large-batch decode).
+    """
+    B, _, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    if flag("decode_bf16_scores"):
+        # preferred bf16 keeps the cache-consuming dot natively 16-bit (the
+        # MXU still accumulates f32 internally); asking for f32 here makes
+        # XLA maintain a hoisted f32 twin of the whole cache
+        qs = q.reshape(B, Hkv, g, D).astype(k_cache.dtype)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qs, k_cache,
+                       preferred_element_type=k_cache.dtype
+                       ).astype(jnp.float32)
+    else:
+        qs = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qs, k_cache.astype(jnp.float32))
+    s /= math.sqrt(D)
+    mask = jnp.arange(S) < n_valid
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    if flag("decode_bf16_scores"):
+        out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=v_cache.dtype)
+    else:
+        out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------- attn block
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": (jax.random.normal(k1, (d, hq, hd)) * std).astype(dt),
+        "wk": (jax.random.normal(k2, (d, hkv, hd)) * std).astype(dt),
+        "wv": (jax.random.normal(k3, (d, hkv, hd)) * std).astype(dt),
+        "wo": (jax.random.normal(k4, (hq, hd, d)) * std).astype(dt),
+    }
+    if cfg.padded_heads and cfg.padded_heads > cfg.num_heads:
+        # zero o-proj rows for padded heads → they contribute nothing
+        mask = (jnp.arange(cfg.q_heads) < cfg.num_heads)[:, None, None]
+        p["wo"] = p["wo"] * mask.astype(dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attention_block(p: dict, x: Array, cfg: ModelConfig, *, causal: bool,
+                    window: int = 0, positions: Array | None = None,
+                    kv: Array | None = None, use_rope: bool = True) -> Array:
+    """Full attention block (projections + chunked attention).
+
+    kv: source sequence for cross-attention (encoder states); defaults to x.
+    """
+    B, S, _ = x.shape
+    src = x if kv is None else kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if use_rope:
+        pos_q = positions if positions is not None else jnp.arange(S)
+        q = rope(q, pos_q, cfg.rope_theta)
+        k = rope(k, jnp.arange(src.shape[1]), cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            use_custom_vjp=not flag("no_flash_vjp"))
+    return _row_parallel_einsum("bshk,hkd->bsd", out, p["wo"], x.dtype)
+
+
+# ----------------------------------------------------------------- dense FFN
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 0.02
+    dt = jnp.dtype(cfg.dtype)
+    p = {"w_up": (jax.random.normal(k1, (d, ff)) * std).astype(dt),
+         "w_down": (jax.random.normal(k2, (ff, d)) * std).astype(dt)}
+    if cfg.act == "silu":                     # gated (SwiGLU)
+        p["w_gate"] = (jax.random.normal(k3, (d, ff)) * std).astype(dt)
+    return p
+
+
+def mlp_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    h = x @ p["w_up"]
+    if "w_gate" in p:
+        h = activation(x @ p["w_gate"], cfg.act) * h
+    else:
+        h = activation(h, cfg.act)
+    return _row_parallel_einsum("tf,fd->td" if h.ndim == 2 else
+                                "btf,fd->btd", h, p["w_down"], x.dtype)
+
+
+# ---------------------------------------------------------------------- MoE
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dispatch_gather(xinfo, xg, inv, valid):
+    """buf[g,e,c,:] = xg[g, inv[g,e,c], :] · valid — MoE dispatch.
+    xinfo: static (Tg, dtype-name) so the backward needn't save xg."""
+    G, E, C = inv.shape
+    gidx3 = jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, E, C))
+    return xg[gidx3, inv] * valid[..., None].astype(xg.dtype)
+
+
+def _dispatch_gather_fwd(xinfo, xg, inv, valid):
+    return _dispatch_gather(xinfo, xg, inv, valid), (inv, valid)
+
+
+def _dispatch_gather_bwd(xinfo, res, d_buf):
+    Tg, xdtype = xinfo
+    (inv, valid) = res
+    G, E, C = inv.shape
+    d = d_buf.shape[-1]
+    gidx3 = jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, E, C))
+    upd = d_buf * valid[..., None].astype(d_buf.dtype)
+    acc_dtype = jnp.dtype(xdtype) if flag("ar_bf16") else d_buf.dtype
+    d_xg = jnp.zeros((G, Tg, d), acc_dtype).at[gidx3, inv].add(
+        upd.astype(acc_dtype))
+    # token grads sum over the k experts a token visited (possibly on
+    # different model shards) → one TP all-reduce of activation size; the
+    # constraint stops GSPMD from inventing a full (G,E,C,d) reduction
+    d_xg = constrain(d_xg, "dp", None, None).astype(jnp.dtype(xdtype))
+    return d_xg, None, None
+
+
+_dispatch_gather.defvjp(_dispatch_gather_fwd, _dispatch_gather_bwd)
+
+
+def _slot_gathers(yb, idg, pos_t, keep_t, wg, dtype):
+    """Σ_slot w·yb[g, id_slot, pos_slot] with yb tp-replicated so every
+    slot gather is shard-local (one AG of yb instead of k partial-ARs)."""
+    G, E, C, d = yb.shape
+    Tg, k = idg.shape[1], idg.shape[2]
+    yb = constrain(yb, "dp", None, None, None)
+    gidx_t = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tg))
+    y = jnp.zeros((G, Tg, d), dtype)
+    for slot in range(k):
+        vals = yb[gidx_t, idg[:, :, slot],
+                  jnp.minimum(pos_t[:, :, slot], C - 1)]
+        scale = (wg[:, :, slot] * keep_t[:, :, slot]).astype(dtype)
+        y = y + vals.astype(dtype) * scale[..., None]
+    return y
+
+
+@jax.custom_vjp
+def _combine_gather(yb, inv, valid, w_buf, idg, pos_t, keep_t, wg):
+    """y[g,t,:] = Σ_slot w[g,t,slot] · yb[g, id[g,t,slot], pos[g,t,slot], :]
+
+    inv/valid/w_buf are the slot→token inverse map and per-slot weights in
+    (G,E,C) layout: the backward uses them to express d_yb as a *gather*
+    from dy (shard-local under dp), avoiding scatter partial-sum
+    all-reduces across the model axis entirely.
+    """
+    return _slot_gathers(yb, idg, pos_t, keep_t, wg, yb.dtype)
+
+
+def _combine_gather_fwd(yb, inv, valid, w_buf, idg, pos_t, keep_t, wg):
+    y = _combine_gather(yb, inv, valid, w_buf, idg, pos_t, keep_t, wg)
+    return y, (yb, inv, valid, w_buf, idg, pos_t, keep_t, wg)
+
+
+def _combine_gather_bwd(res, dy):
+    yb, inv, valid, w_buf, idg, pos_t, keep_t, wg = res
+    G, E, C, d = yb.shape
+    gidx3 = jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, E, C))
+    dy_rep = constrain(dy, "dp", None, None)
+    # d_yb[g,e,c] = dy[g, inv[g,e,c]] · w_buf[g,e,c] — pure gather
+    d_yb = (dy_rep[gidx3, inv]
+            * (w_buf * valid.astype(w_buf.dtype))[..., None].astype(dy.dtype))
+    d_yb = constrain(d_yb, "dp", "tp", None, None).astype(yb.dtype)
+    # d_w[g,t,slot] = <dy[g,t], yb[g, id_slot, pos_slot]>
+    Tg, k = idg.shape[1], idg.shape[2]
+    yb_rep = constrain(yb, "dp", None, None, None)
+    gidx_t = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tg))
+    d_wg_slots = []
+    dy32 = dy.astype(jnp.float32)
+    for slot in range(k):
+        vals = yb_rep[gidx_t, idg[:, :, slot],
+                      jnp.minimum(pos_t[:, :, slot], C - 1)]
+        d_w = jnp.einsum("gtd,gtd->gt", dy32, vals.astype(jnp.float32))
+        d_wg_slots.append(d_w * keep_t[:, :, slot])
+    d_wg = jnp.stack(d_wg_slots, axis=-1).astype(wg.dtype)
+    return d_yb, None, None, None, None, None, None, d_wg
+
+
+_combine_gather.defvjp(_combine_gather_fwd, _combine_gather_bwd)
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std = 0.02
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "router": (jax.random.normal(k1, (d, e)) * std).astype(jnp.float32),
+        "we_up": (jax.random.normal(k2, (e, d, ff)) * std).astype(dt),
+        "we_gate": (jax.random.normal(k3, (e, d, ff)) * std).astype(dt),
+        "we_down": (jax.random.normal(k4, (e, ff, d)) * std).astype(dt),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = init_mlp(k5, cfg, d_ff=cfg.moe_d_ff)
+    return p
+
+
+def _router(p: dict, xf: Array, cfg: ModelConfig):
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.experts_per_tok)       # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros_like(me).at[ids.reshape(-1)].add(
+        jnp.ones((ids.size,), jnp.float32)) / ids.size
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return w, ids, aux
+
+
+def moe_block(p: dict, x: Array, cfg: ModelConfig,
+              impl: str = "scatter", n_groups: int = 16
+              ) -> tuple[Array, Array]:
+    """Returns (output, aux_loss).
+
+    The scatter path uses GShard-style *grouped* dispatch: tokens are split
+    into `n_groups` groups aligned with the data-parallel shards, so the
+    dispatch scatter and the expert matmuls carry a leading batch dim that
+    GSPMD shards over "data" while experts shard over "model" — without
+    grouping, the capacity dim replicates and every data shard redundantly
+    computes all expert tokens (a 16× compute bug the dry-run exposed).
+    """
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    w, ids, aux = _router(p, xf, cfg)
+    k = cfg.experts_per_tok
+    E = cfg.num_experts
+
+    if impl == "dense":
+        # all-experts oracle: every expert computes every token
+        h = jnp.einsum("td,edf->tef", xf, p["we_up"])
+        g = jnp.einsum("td,edf->tef", xf, p["we_gate"])
+        y_all = jnp.einsum("tef,efd->ted", activation(g, "silu") * h,
+                           p["we_down"])                       # (T, E, d)
+        sel = jnp.zeros((T, E), xf.dtype).at[
+            jnp.arange(T)[:, None], ids].add(w.astype(xf.dtype))
+        y = jnp.einsum("ted,te->td", y_all, sel)
+    else:
+        G = math.gcd(T, moe_groups(n_groups))
+        Tg = T // G
+        TK = Tg * k
+        C = max(int(cfg.capacity_factor * k * Tg / E), 1)
+        xg = constrain(xf.reshape(G, Tg, d), "dp", None, None)
+        idg = ids.reshape(G, Tg, k)
+        wg = w.reshape(G, Tg, k)
+        ids_f = constrain(idg.reshape(G, TK), "dp", None)      # (G, Tg*k)
+        gidx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, TK))
+        # position-within-expert via stable sort (the one-hot cumsum
+        # alternative materializes a (G, Tg·k, E) scan — 17 GB at qwen3
+        # scale; rank-minus-start is O(Tg·k) and parallel)
+        order = jnp.argsort(ids_f, axis=1, stable=True)        # (G, TK)
+        ranks = jnp.zeros((G, TK), jnp.int32).at[gidx, order].set(
+            jnp.broadcast_to(jnp.arange(TK, dtype=jnp.int32), (G, TK)))
+        counts = jnp.zeros((G, E), jnp.int32).at[gidx, ids_f].add(1)
+        starts = jnp.cumsum(counts, axis=1) - counts           # (G, E) excl.
+        pos = ranks - jnp.take_along_axis(starts, ids_f, axis=1)
+        keep = pos < C                                         # (G, Tg*k)
+        # dropped slots scatter out-of-bounds → mode="drop" discards them;
+        # the dispatch itself is an int32 inverse map (slot → token), so the
+        # (G,TK,d) "k copies of every token" tensor never materializes.
+        pos_s = jnp.where(keep, pos, C)
+        tok_of_slot = jnp.broadcast_to(
+            jnp.arange(Tg, dtype=jnp.int32)[None, :, None],
+            (G, Tg, k)).reshape(G, TK)
+        inv = jnp.zeros((G, E, C), jnp.int32).at[
+            gidx, ids_f, pos_s].set(tok_of_slot, mode="drop")
+        valid = jnp.zeros((G, E, C), bool).at[
+            gidx, ids_f, pos_s].set(True, mode="drop")
+        buf = _dispatch_gather((Tg, str(xg.dtype)), xg, inv, valid)
+        # groups shard over data (each DP shard dispatches its own tokens),
+        # experts shard over model (EP)
+        buf = constrain(buf, "dp", "tp", None, None)
+        h = jnp.einsum("gecd,edf->gecf", buf, p["we_up"])
+        g = jnp.einsum("gecd,edf->gecf", buf, p["we_gate"])
+        yb = jnp.einsum("gecf,efd->gecd", activation(g, "silu") * h,
+                        p["we_down"])
+        yb = constrain(yb, "dp", "tp", None, None).astype(xf.dtype)
+        # combine: one (G,Tg,d) gather per top-k slot — never (G,TK,d)
+        pos_t = pos.reshape(G, Tg, k)
+        keep_t = keep.reshape(G, Tg, k)
+        w_buf = jnp.zeros((G, E, C), jnp.float32).at[
+            gidx, ids_f, pos_s].set(
+            wg.reshape(G, TK).astype(jnp.float32), mode="drop")
+        y = _combine_gather(yb, inv, valid, w_buf, idg, pos_t, keep_t, wg)
+        y = constrain(y, "dp", None, None).reshape(T, d)
+
+    if cfg.moe_shared_expert:
+        y = y + mlp_block(p["shared"], xf, dataclasses.replace(
+            cfg, act="silu")).reshape(T, d)
+    return y.reshape(B, S, d), aux
+
+
+# ------------------------------------------------------------------ Mamba-2
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    """Separate projections (not one packed in_proj) so each tensor has a
+    clean TP sharding: z/x/out on d_inner, small B/C/dt replicated."""
+    d, di = cfg.d_model, cfg.d_inner
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    ks = jax.random.split(key, 9)
+    std = 0.02
+    dt = jnp.dtype(cfg.dtype)
+    w = cfg.ssm_conv_width
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di)) * std).astype(dt),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * std).astype(dt),
+        "w_B": (jax.random.normal(ks[2], (d, N)) * std).astype(dt),
+        "w_C": (jax.random.normal(ks[3], (d, N)) * std).astype(dt),
+        "w_dt": (jax.random.normal(ks[4], (d, H)) * std).astype(dt),
+        "conv_x": (jax.random.normal(ks[5], (w, di)) * std).astype(dt),
+        "conv_B": (jax.random.normal(ks[6], (w, N)) * std).astype(dt),
+        "conv_C": (jax.random.normal(ks[7], (w, N)) * std).astype(dt),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_bB": jnp.zeros((N,), dt),
+        "conv_bC": jnp.zeros((N,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, float(H), H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[8], (di, d)) * std).astype(dt),
+        "norm": jnp.ones((di,), dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 state: Array | None = None) -> Array:
+    """Depthwise causal conv along seq. x: (B,S,C), w: (W,C), b: (C,)."""
+    W = w.shape[0]
+    pad = x if state is None else jnp.concatenate([state, x], axis=1)
+    pad = jnp.pad(pad, ((0, 0), (W - 1 if state is None else 0, 0), (0, 0)))
+    S = x.shape[1]
+    windows = jnp.stack([pad[:, i:i + S] for i in range(W)], axis=2)
+    return jnp.einsum("bswc,wc->bsc", windows, w) + b
+
+
+def _ssd_chunked(xh: Array, dt: Array, A: Array, bmat: Array, cmat: Array,
+                 D: Array, chunk: int, init_state: Array | None = None):
+    """Chunked SSD (Mamba-2 state-space duality).
+
+    xh:   (B, S, H, P)    inputs per head
+    dt:   (B, S, H)       softplus'd step sizes
+    A:    (H,)            negative decay rates
+    bmat: (B, S, N), cmat: (B, S, N)   shared across heads (single group)
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = xh.shape
+    N = bmat.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xc = xh.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = bmat.reshape(B, nc, chunk, N)
+    cc = cmat.reshape(B, nc, chunk, N)
+
+    la = dtc * A[None, None, None, :]            # log decay per step (≤0)
+    cum = jnp.cumsum(la, axis=2)                 # (B,nc,Q,H) within-chunk
+    seg_end = cum[:, :, -1, :]                   # (B,nc,H)
+
+    # intra-chunk (the quadratic "attention-like" term)
+    li, lj = cum[:, :, :, None, :], cum[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gate = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    sc = jnp.einsum("bcin,bcjn->bcij", cc, bc)                # (B,nc,Q,Q)
+    att = sc[..., None] * gate * dtc[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+
+    # per-chunk input states
+    decay_to_end = jnp.exp(jnp.clip(seg_end[:, :, None, :] - cum, -60.0, 0.0))
+    s_in = jnp.einsum("bcqh,bcqn,bcqhp->bchnp",
+                      dtc * decay_to_end, bc, xc)             # (B,nc,H,N,P)
+
+    # cross-chunk recurrence
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, N, P), s_in.dtype))
+
+    def scan_fn(carry, inp):
+        s_prev = carry
+        s_c, g_end = inp                       # (B,H,N,P), (B,H)
+        s_new = s_prev * jnp.exp(jnp.clip(g_end, -60.0, 0.0)
+                                 )[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    (final_state, s_prevs) = jax.lax.scan(
+        scan_fn, s0,
+        (s_in.transpose(1, 0, 2, 3, 4), seg_end.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                # (B,nc,H,N,P)
+
+    # inter-chunk contribution
+    y_off = jnp.einsum("bcqn,bchnp->bcqhp",
+                       cc, s_prevs) * jnp.exp(
+        jnp.clip(cum, -60.0, 0.0))[..., None]
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + xh * D[None, None, :, None]
+    return y, final_state
+
+
+def mamba_block(p: dict, x: Array, cfg: ModelConfig,
+                init_state: Array | None = None,
+                conv_state: Array | None = None):
+    """Full Mamba-2 mixer. Returns (y, (ssm_state, conv_state))."""
+    B, S, d = x.shape
+    di, H, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+    z = x @ p["w_z"]
+    xs_raw = x @ p["w_x"]
+    b_raw = x @ p["w_B"]
+    c_raw = x @ p["w_C"]
+    dt_raw = x @ p["w_dt"]
+    cs = (None, None, None) if conv_state is None else conv_state
+    xs = jax.nn.silu(_causal_conv(xs_raw, p["conv_x"], p["conv_bx"], cs[0]))
+    bmat = jax.nn.silu(_causal_conv(b_raw, p["conv_B"], p["conv_bB"], cs[1]))
+    cmat = jax.nn.silu(_causal_conv(c_raw, p["conv_C"], p["conv_bC"], cs[2]))
+    new_conv_state = None
+    if w > 1:
+        new_conv_state = (xs_raw[:, S - (w - 1):],
+                          b_raw[:, S - (w - 1):], c_raw[:, S - (w - 1):])
+
+    xh = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, state = _ssd_chunked(xh.astype(jnp.float32), dt, A,
+                            bmat.astype(jnp.float32),
+                            cmat.astype(jnp.float32),
+                            p["D"], cfg.ssm_chunk,
+                            init_state=init_state)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], (state, new_conv_state)
+
+
+def mamba_decode_step(p: dict, x: Array, cfg: ModelConfig,
+                      ssm_state: Array, conv_state: Array):
+    """One-token Mamba-2 step. x: (B,1,d); conv_state: (B, W-1, di+2N)
+    packed [x | B | C]. Returns (y, new states)."""
+    B, _, d = x.shape
+    di, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    x0 = x[:, 0]
+    z = x0 @ p["w_z"]
+    xbc_raw = jnp.concatenate(
+        [x0 @ p["w_x"], x0 @ p["w_B"], x0 @ p["w_C"]], axis=-1)
+    dt_raw = x0 @ p["w_dt"]
+    conv_in = jnp.concatenate([conv_state, xbc_raw[:, None]], axis=1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=1)
+    conv_b = jnp.concatenate([p["conv_bx"], p["conv_bB"], p["conv_bC"]])
+    xbc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_in, conv_w) + conv_b)
+    new_conv = conv_in[:, 1:]
+    xs, bmat, cmat = jnp.split(xbc, [di, di + N], axis=-1)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None, :])          # (B,H)
+    s_new = (ssm_state * a[:, :, None, None]
+             + jnp.einsum("bh,bn,bhp->bhnp", dt,
+                          bmat.astype(jnp.float32), xh))
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), s_new)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return (y @ p["out_proj"])[:, None], (s_new, new_conv)

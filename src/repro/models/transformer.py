@@ -1,0 +1,384 @@
+"""Unified LM covering all ten assigned architectures.
+
+The layer stack is `lax.scan`'d over `n_repeats` of the config's layer
+*pattern*, so lowered HLO size is O(|pattern|), independent of depth —
+an 80-layer dry-run compiles as fast as an 8-layer one.  Heterogeneous
+stacks (jamba's mamba/attn 7:1 interleave with MoE every 2nd layer) are
+expressed as an 8-entry pattern repeated 4×.
+
+Params are plain pytrees; per-pattern-position params are stacked along a
+leading repeats axis.  `abstract_params` builds the same tree as
+ShapeDtypeStructs (no allocation) for dry-run lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import LayerKind, LayerSpec, ModelConfig
+from . import layers as L
+from repro.dist.context import constrain, flag
+
+Array = Any
+
+
+def pick_chunk(s: int, target: int = 512) -> int:
+    """Largest divisor of s that is ≤ target (chunked attention tiling)."""
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ------------------------------------------------------------------- params
+def _init_block(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p: dict = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if spec.kind in (LayerKind.ATTN, LayerKind.SWA):
+        p["mixer"] = L.init_attention(ks[0], cfg)
+    else:
+        p["mixer"] = L.init_mamba(ks[0], cfg)
+    if cfg.is_encdec:
+        p["cross"] = L.init_attention(ks[1], cfg, cross=True)
+        p["ln_cross"] = jnp.ones((cfg.d_model,), dt)
+    if spec.ffn:
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = L.init_moe(ks[2], cfg) if spec.moe else L.init_mlp(ks[2], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    # per pattern position: stack over repeats with vmap'd init
+    layer_params = []
+    pos_keys = jax.random.split(keys[1], len(cfg.pattern))
+    for pos, spec in enumerate(cfg.pattern):
+        rep_keys = jax.random.split(pos_keys[pos], cfg.n_repeats)
+        layer_params.append(jax.vmap(
+            lambda k, _spec=spec: _init_block(k, cfg, _spec))(rep_keys))
+    params["layers"] = layer_params
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            keys[2], (cfg.d_model, cfg.vocab)) * 0.02).astype(dt)
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[3], cfg.enc_layers)
+        enc_spec = LayerSpec(kind=LayerKind.ATTN, ffn=True)
+        enc_cfg = dataclasses.replace(cfg, pattern=(enc_spec,),
+                                      n_repeats=cfg.enc_layers)
+        params["enc"] = {
+            "layers": jax.vmap(
+                lambda k: {
+                    "ln1": jnp.ones((cfg.d_model,), dt),
+                    "mixer": L.init_attention(k, cfg),
+                    "ln2": jnp.ones((cfg.d_model,), dt),
+                    "ffn": L.init_mlp(k, cfg),
+                })(enc_keys),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+    if cfg.num_patches:
+        params["patch_proj"] = (jax.random.normal(
+            keys[4], (cfg.d_model, cfg.d_model)) * 0.02).astype(dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct tree — dry-run stand-in, no device allocation."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(init_params, cfg), key)
+
+
+# ------------------------------------------------------------------ forward
+def _apply_block(p: dict, spec: LayerSpec, cfg: ModelConfig, x: Array,
+                 enc_out: Array | None = None):
+    """One block, full-sequence. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.norm(x, p["ln1"], cfg.norm)
+    if spec.kind in (LayerKind.ATTN, LayerKind.SWA):
+        window = cfg.window if spec.kind == LayerKind.SWA else 0
+        mix = L.attention_block(p["mixer"], h, cfg, causal=True,
+                                window=window)
+    else:
+        mix, _state = L.mamba_block(p["mixer"], h, cfg)
+    if cfg.parallel_block and spec.ffn:
+        # Cohere-style: attn and FFN both read the same normed input
+        y = L.mlp_block(p["ffn"], h, cfg)
+        return x + mix + y, aux
+    x = x + mix
+    if cfg.is_encdec and enc_out is not None:
+        hc = L.norm(x, p["ln_cross"], cfg.norm)
+        x = x + L.attention_block(p["cross"], hc, cfg, causal=False,
+                                  kv=enc_out, use_rope=False)
+    if spec.ffn:
+        h2 = L.norm(x, p["ln2"], cfg.norm)
+        if spec.moe:
+            y, a = L.moe_block(p["ffn"], h2, cfg)
+            aux += a
+        else:
+            y = L.mlp_block(p["ffn"], h2, cfg)
+        x = x + y
+    return x, aux
+
+
+def _sinusoidal(seq: int, d: int) -> Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def encode(params: dict, cfg: ModelConfig, frames: Array) -> Array:
+    """Whisper-style encoder over stubbed frame embeddings (B, F, d)."""
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, p):
+        h = L.norm(x, p["ln1"], cfg.norm)
+        x = x + L.attention_block(p["mixer"], h, cfg, causal=False,
+                                  use_rope=False)
+        h = L.norm(x, p["ln2"], cfg.norm)
+        x = x + L.mlp_block(p["ffn"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"]["layers"])
+    return L.norm(x, params["enc"]["final_norm"], cfg.norm)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array,
+            patch_embeds: Array | None = None,
+            frames: Array | None = None,
+            remat: bool = False) -> tuple[Array, Array]:
+    """Full-sequence forward → (hidden (B, S_total, d), aux_loss).
+
+    patch_embeds: (B, P, d) VLM prefix (stub vision tower output).
+    frames: (B, F, d) audio frames (stub conv frontend) for enc-dec.
+    remat: checkpoint each scanned block (activation recomputation).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if patch_embeds is not None:
+        px = patch_embeds @ params["patch_proj"]
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+    x = constrain(x, "dp", None, None)
+    enc_out = encode(params, cfg, frames) if frames is not None else None
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for pos, spec in enumerate(cfg.pattern):
+        stacked = params["layers"][pos]
+
+        def body(carry, p, _spec=spec):
+            x, aux = carry
+            x, a = _apply_block(p, _spec, cfg, x, enc_out)
+            # `seq_shard` (Megatron-SP analogue): the residual stream is
+            # sequence-sharded over the model axis between blocks, turning
+            # the TP all-reduces into reduce-scatter/all-gather pairs and
+            # cutting resident activation memory by tp×
+            seq_axis = "tp" if flag("seq_shard") else None
+            return (constrain(x, "dp", seq_axis, None), aux + a), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+    return L.norm(x, params["final_norm"], cfg.norm), aux_total
+
+
+def logits_from_hidden(params: dict, cfg: ModelConfig, h: Array) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = h @ w
+    if cfg.padded_vocab and cfg.padded_vocab > cfg.vocab_size:
+        neg = jnp.full((), -1e9, logits.dtype)
+        logits = jnp.where(
+            jnp.arange(cfg.vocab) < cfg.vocab_size, logits, neg)
+    return logits
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
+            ce_chunk: int = 512, remat: bool = False) -> Array:
+    """Next-token CE, chunked over the sequence so (B, chunk, V) is the
+    peak logits footprint (a 256k vocab never materializes (B, S, V))."""
+    h, aux = forward(params, cfg, batch["tokens"],
+                     patch_embeds=batch.get("patch_embeds"),
+                     frames=batch.get("frames"), remat=remat)
+    labels = batch["labels"]
+    if h.shape[1] != labels.shape[1]:          # VLM prefix: loss on tokens
+        h = h[:, h.shape[1] - labels.shape[1]:]
+    B, S, _ = h.shape
+    c = pick_chunk(S, ce_chunk)
+    hc = h.reshape(B, S // c, c, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, S // c, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(hx, lx):
+        logits = logits_from_hidden(params, cfg, hx).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    def body(tot, xs):
+        hx, lx = xs
+        return tot + chunk_loss(hx, lx), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    n_tok = B * S
+    return total / n_tok + 0.01 * aux
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               abstract: bool = False) -> dict:
+    """Decode caches per pattern position, stacked over repeats."""
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d))
+    dt = jnp.dtype(cfg.dtype)
+    R = cfg.n_repeats
+    cache: dict = {"cur": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                           else jnp.zeros((), jnp.int32))}
+    for pos, spec in enumerate(cfg.pattern):
+        if spec.kind == LayerKind.ATTN:
+            s = max_seq
+            cache[f"pos{pos}"] = {
+                "k": mk((R, batch, s, cfg.kv_heads, cfg.head_dim), dt),
+                "v": mk((R, batch, s, cfg.kv_heads, cfg.head_dim), dt),
+            }
+        elif spec.kind == LayerKind.SWA:
+            w = min(cfg.window, max_seq)
+            cache[f"pos{pos}"] = {
+                "k": mk((R, batch, w, cfg.kv_heads, cfg.head_dim), dt),
+                "v": mk((R, batch, w, cfg.kv_heads, cfg.head_dim), dt),
+            }
+        else:
+            cache[f"pos{pos}"] = {
+                "ssm": mk((R, batch, cfg.ssm_heads, cfg.ssm_state,
+                           cfg.ssm_head_dim), jnp.float32),
+                "conv": mk((R, batch, cfg.ssm_conv_width - 1,
+                            cfg.d_inner + 2 * cfg.ssm_state), dt),
+            }
+    if cfg.is_encdec:
+        cache["enc_out"] = mk((batch, cfg.enc_frames, cfg.d_model), dt)
+    return cache
+
+
+def _decode_attn(p: dict, cfg: ModelConfig, x: Array, cpos: dict, r: Array,
+                 cur: Array, window: int = 0) -> tuple[Array, dict]:
+    """One attention decode step against the *stacked* cache (R, B, S, H, D).
+
+    The cache is a scan carry: the new K/V land via an in-place slot write
+    (`at[r, :, slot]`), and the attention read is a per-layer dynamic
+    slice.  Threading per-layer slices through scan ys instead copies the
+    whole cache every token — a 64× HBM-traffic bug the dry-run exposed.
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"])
+        k = L.rmsnorm(k, p["k_norm"])
+    pos = cur[None]
+    q = L.rope(q, jnp.broadcast_to(pos, (B, 1)), cfg.rope_theta)
+    k = L.rope(k, jnp.broadcast_to(pos, (B, 1)), cfg.rope_theta)
+    S = cpos["k"].shape[2]
+    slot = cur % S if window else jnp.minimum(cur, S - 1)
+    # dynamic_update_slice (not scatter): XLA aliases the carried buffer,
+    # so the write is one slot, not a cache copy
+    zero = jnp.zeros((), jnp.int32)
+    upd = lambda full, new: jax.lax.dynamic_update_slice(
+        full, new[:, None].astype(full.dtype)[None],
+        (r, zero, slot, zero, zero))
+    k_full = upd(cpos["k"], k[:, 0])
+    v_full = upd(cpos["v"], v[:, 0])
+    kc = jax.lax.dynamic_index_in_dim(k_full, r, 0, keepdims=False)
+    vc = jax.lax.dynamic_index_in_dim(v_full, r, 0, keepdims=False)
+    n_valid = jnp.minimum(cur + 1, S)
+    out = L.decode_attention(q, kc, vc, n_valid)
+    return (L._row_parallel_einsum("bshk,hkd->bsd", out, p["wo"], x.dtype),
+            {"k": k_full, "v": v_full})
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                token: Array) -> tuple[Array, dict]:
+    """One decode step. token: (B, 1) int32 → (logits (B,1,V), new cache)."""
+    cur = cache["cur"]
+    x = jnp.take(params["embed"], token, axis=0)
+    enc_out = cache.get("enc_out")
+    new_cache: dict = {"cur": cur + 1}
+    if enc_out is not None:
+        new_cache["enc_out"] = enc_out
+
+    for pos, spec in enumerate(cfg.pattern):
+        stacked_p = params["layers"][pos]
+        cache_pos = cache[f"pos{pos}"]
+        R = cfg.n_repeats
+
+        def body(carry, pr, _spec=spec):
+            x, cpos = carry
+            p, r = pr
+            h = L.norm(x, p["ln1"], cfg.norm)
+            if _spec.kind == LayerKind.ATTN:
+                mix, cpos = _decode_attn(p["mixer"], cfg, h, cpos, r, cur)
+            elif _spec.kind == LayerKind.SWA:
+                mix, cpos = _decode_attn(p["mixer"], cfg, h, cpos, r, cur,
+                                         window=cfg.window)
+            else:
+                ssm_r = jax.lax.dynamic_index_in_dim(cpos["ssm"], r, 0,
+                                                     keepdims=False)
+                conv_r = jax.lax.dynamic_index_in_dim(cpos["conv"], r, 0,
+                                                      keepdims=False)
+                mix, (s_new, conv_new) = L.mamba_decode_step(
+                    p["mixer"], h, cfg, ssm_r, conv_r)
+                cpos = {
+                    "ssm": jax.lax.dynamic_update_index_in_dim(
+                        cpos["ssm"], s_new, r, 0),
+                    "conv": jax.lax.dynamic_update_index_in_dim(
+                        cpos["conv"], conv_new.astype(cpos["conv"].dtype),
+                        r, 0),
+                }
+            if cfg.parallel_block and _spec.ffn:
+                y = L.mlp_block(p["ffn"], h, cfg)
+                return (x + mix + y, cpos), None
+            x = x + mix
+            if cfg.is_encdec and enc_out is not None:
+                hc = L.norm(x, p["ln_cross"], cfg.norm)
+                x = x + L.attention_block(p["cross"], hc, cfg, causal=False,
+                                          kv=enc_out, use_rope=False)
+            if _spec.ffn:
+                h2 = L.norm(x, p["ln2"], cfg.norm)
+                if _spec.moe:
+                    y, _ = L.moe_block(p["ffn"], h2, cfg)
+                else:
+                    y = L.mlp_block(p["ffn"], h2, cfg)
+                x = x + y
+            return (x, cpos), None
+
+        (x, cache_pos), _ = jax.lax.scan(
+            body, (x, cache_pos),
+            (stacked_p, jnp.arange(R, dtype=jnp.int32)))
+        new_cache[f"pos{pos}"] = cache_pos
+
+    h = L.norm(x, params["final_norm"], cfg.norm)
+    return logits_from_hidden(params, cfg, h), new_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Convenience bundle for the public API."""
+    cfg: ModelConfig
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def loss(self, params, batch):
+        return loss_fn(params, self.cfg, batch)
+
+    def decode(self, params, cache, token):
+        return decode_step(params, self.cfg, cache, token)

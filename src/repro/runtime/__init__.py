@@ -1,0 +1,4 @@
+from .elastic import reshard_tree
+from .ft import FTConfig, StragglerMonitor, TrainDriver
+
+__all__ = ["reshard_tree", "FTConfig", "StragglerMonitor", "TrainDriver"]

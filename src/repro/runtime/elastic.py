@@ -1,0 +1,47 @@
+"""Elastic re-meshing: move a sharded pytree onto a different mesh.
+
+On pod loss (or growth) the driver rebuilds the mesh from the surviving
+devices and reshards params/optimizer state; the step function re-jits
+against the new shardings.  Data parallelism re-splits by the determinism
+contract of the data pipeline, so training resumes at the same step with
+a smaller/larger global batch per the caller's policy.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def reshard_tree(tree: Any, specs: Any, new_mesh: Mesh) -> Any:
+    """device_put every leaf onto `new_mesh` with its PartitionSpec.
+
+    Works across device *sets* (survivor subsets), not just permutations:
+    leaves are pulled to host then re-placed (production would use
+    jax.device_put with compatible shardings for a DMA path; the host
+    round-trip is the safe universal fallback).
+    """
+    def move(leaf, spec):
+        sharding = NamedSharding(new_mesh, spec)
+        return jax.device_put(np.asarray(leaf), sharding)
+
+    return jax.tree.map(move, tree, specs)
+
+
+def shrink_mesh(mesh: Mesh, failed_devices: set[int],
+                axis: str) -> Mesh | None:
+    """Drop the slices of `axis` containing failed devices; returns the
+    surviving mesh or None if nothing survives."""
+    devs = mesh.devices
+    axis_idx = mesh.axis_names.index(axis)
+    keep = []
+    for i in range(devs.shape[axis_idx]):
+        sl = np.take(devs, i, axis=axis_idx)
+        if not any(d.id in failed_devices for d in sl.flatten()):
+            keep.append(i)
+    if not keep:
+        return None
+    new_devs = np.take(devs, keep, axis=axis_idx)
+    return Mesh(new_devs, mesh.axis_names)

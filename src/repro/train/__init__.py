@@ -1,0 +1,6 @@
+"""Training/serving substrate."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from .step import make_serve_step, make_train_step, zero1_specs
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "make_serve_step", "make_train_step", "zero1_specs"]

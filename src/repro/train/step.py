@@ -1,0 +1,114 @@
+"""Train/serve step factories.
+
+`make_train_step` builds the full step: (params, opt_state, batch) →
+(params, opt_state, metrics) with
+  - chunked-CE loss (+ MoE aux), per-block remat,
+  - optional microbatch gradient accumulation via `lax.scan` — the MKPipe
+    GLOBALMEM plan at pod scale: producer microbatch k+1's forward overlaps
+    consumer microbatch k's gradient DMA,
+  - grad-norm clipping + AdamW,
+  - optional ZeRO-1: optimizer moments get sharding constraints that
+    scatter them over the data axis, turning the gradient all-reduce into
+    reduce-scatter + all-gather in the compiled collective schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import decode_step, loss_fn
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+Array = Any
+
+
+def zero1_specs(param_specs_tree: Any, params_tree: Any, mesh: Mesh,
+                axis: str = "data") -> Any:
+    """Optimizer-moment specs: additionally shard the first still-
+    replicated, divisible dim over the data axis (ZeRO-1)."""
+    dp = mesh.shape[axis]
+
+    def z(spec: P, leaf) -> P:
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (e, dim) in enumerate(zip(entries, leaf.shape)):
+            if e is None and dim % dp == 0 and dim >= dp:
+                entries[i] = axis
+                return P(*entries)
+        return P(*entries)
+
+    return jax.tree.map(z, param_specs_tree, params_tree)
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig | None = None,
+                    grad_accum: int = 1, remat: bool = True,
+                    zero1_constraints: Any = None):
+    """Returns train_step(params, opt_state, batch) → (p, s, metrics)."""
+    opt = opt or AdamWConfig()
+
+    def loss_of(params, batch):
+        return loss_fn(params, cfg, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            # microbatch software pipeline (GLOBALMEM-plan analogue)
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grad_acc, g)), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        new_params, new_state, metrics = adamw_update(
+            opt, grads, opt_state, params)
+        if zero1_constraints is not None:
+            new_state = dict(new_state)
+            new_state["m"] = jax.lax.with_sharding_constraint(
+                new_state["m"], zero1_constraints)
+            new_state["v"] = jax.lax.with_sharding_constraint(
+                new_state["v"], zero1_constraints)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward over the full prompt → last-token logits (inference)."""
+    from repro.models.transformer import forward, logits_from_hidden
+
+    def prefill(params, batch):
+        h, _ = forward(params, cfg, batch["tokens"],
+                       patch_embeds=batch.get("patch_embeds"),
+                       frames=batch.get("frames"))
+        return logits_from_hidden(params, cfg, h[:, -1:])
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, token) → (logits, cache)."""
+
+    def serve(params, cache, token):
+        return decode_step(params, cfg, cache, token)
+
+    return serve
+
+
+def init_train_state(cfg: ModelConfig, params: Any):
+    return adamw_init(params)

@@ -1,0 +1,22 @@
+"""The paper's evaluation suite (Table 1), rebuilt as JAX stage graphs.
+
+| workload | key characteristic          | expected key optimization   |
+|----------|-----------------------------|-----------------------------|
+| bfs      | dominant kernel             | kernel (resource) balancing |
+| hist     | one-to-one, long            | kernel fusion               |
+| cfd      | one-to-one, short           | CKE with channels           |
+| lud      | one-to-many                 | CKE with global memory      |
+| bp       | splitting beneficial        | program splitting           |
+| tdm      | dependency through host CPU | kernel balancing            |
+| color    | one-to-one, long            | kernel fusion               |
+| dijkstra | one-to-one, short           | CKE with channels           |
+
+Each module exposes ``build(n) -> (StageGraph, buffers)`` plus the workload's
+expected decision, used by tests and the Fig. 14 benchmark.
+"""
+from . import bfs, bp, cfd, color, dijkstra, hist, lud, tdm
+
+ALL = {
+    "bfs": bfs, "hist": hist, "cfd": cfd, "lud": lud,
+    "bp": bp, "tdm": tdm, "color": color, "dijkstra": dijkstra,
+}

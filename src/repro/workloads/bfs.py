@@ -1,0 +1,55 @@
+"""BFS (Spector) analogue — dominant-kernel case ⇒ balancing only.
+
+The frontier-expansion kernel takes ~96% of the time (paper: 95.8%), so the
+Fig. 5 tree short-circuits: CKE has no leverage; MKPipe applies resource
+balancing across the kernels instead (paper speedup 1.1×).
+
+Graph: `expand` (dense frontier × adjacency matmul — the hot kernel) and
+`update` (visited-mask update).  Implemented densely so times are stable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import AffineTileMap, Stage, StageGraph
+
+EXPECTED = {"dominant": "expand"}
+
+
+def build(n: int = 2048, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    adj = (rng.uniform(size=(n, n)) < 0.05).astype(np.float32)
+    buffers = {
+        "adj": jnp.asarray(adj),
+        "frontier": jnp.asarray(
+            (rng.uniform(size=n) < 0.1).astype(np.float32)),
+        "visited": jnp.zeros(n, jnp.float32),
+    }
+
+    def expand(env):
+        f = env["frontier"]
+        # several sparse-to-dense hops to make this the dominant kernel
+        for _ in range(24):
+            f = jnp.tanh(env["adj"] @ f)
+        return {"reached": f}
+
+    def update(env):
+        nv = jnp.maximum(env["visited"], (env["reached"] > 0.05) * 1.0)
+        return {"visited_out": nv}
+
+    one = AffineTileMap(coeff=((n,),), const=(0,), block=(n,))
+    stages = [
+        Stage("expand", expand, reads=("adj", "frontier"),
+              writes=("reached",), grid=(1,),
+              tile_maps={"adj": AffineTileMap.broadcast(1, (n, n)),
+                         "frontier": one, "reached": one}),
+        Stage("update", update, reads=("visited", "reached"),
+              writes=("visited_out",), grid=(1,),
+              tile_maps={"visited": one, "reached": one,
+                         "visited_out": one}),
+    ]
+    graph = StageGraph(stages=stages,
+                       inputs=("adj", "frontier", "visited"),
+                       outputs=("visited_out",))
+    return graph, buffers

@@ -1,0 +1,86 @@
+"""CFD (Rodinia) analogue — paper Figs. 1/4/6/7 and §7.3.1.
+
+Three kernels: K1 `compute_step_factor` (ends with a global sync — its
+output feeds *all* downstream iterations), K2 `compute_flux`, K3 `time_step`.
+K2→K3 is one-to-one at the iteration level (`fluxes[i]` produced by i,
+consumed by i), so MKPipe enables CKE between K2 and K3 — choosing channels
+when the execution time is short (§5.4.2) — while K1 keeps its sync.
+
+The arithmetic is a faithful miniature of Rodinia CFD's Euler solver update:
+per-element flux from density/momentum/energy plus a relaxation time step.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import AffineTileMap, Stage, StageGraph
+
+BLOCK = 256
+EXPECTED = {"K2->K3": ("few-to-few", ("channel", "fuse"))}
+
+
+def _one_to_one(n: int) -> AffineTileMap:
+    return AffineTileMap(coeff=((BLOCK,),), const=(0,), block=(BLOCK,))
+
+
+def build(n: int = 4096, seed: int = 0):
+    assert n % BLOCK == 0
+    rng = np.random.default_rng(seed)
+    buffers = {
+        "density": jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32),
+        "momentum": jnp.asarray(rng.uniform(-1.0, 1.0, n), jnp.float32),
+        "energy": jnp.asarray(rng.uniform(1.0, 3.0, n), jnp.float32),
+    }
+    grid = (n // BLOCK,)
+
+    def k1(env):
+        # step factor ~ CFL condition: 0.5 / (speed of sound-ish)
+        c = jnp.sqrt(jnp.abs(1.4 * env["energy"] / env["density"]) + 1e-6)
+        return {"step_factor": 0.5 / (c + jnp.abs(env["momentum"]))}
+
+    def k2(env):
+        v = env["momentum"] / env["density"]
+        p = 0.4 * (env["energy"] - 0.5 * env["momentum"] * v)
+        return {"fluxes": env["momentum"] * v + p}
+
+    def k3(env):
+        return {"v_out": env["energy"] + env["step_factor"] * env["fluxes"]}
+
+    def k2k3_fused(env):
+        # paper Fig. 6: loop fusion removes the fluxes round-trip
+        v = env["momentum"] / env["density"]
+        p = 0.4 * (env["energy"] - 0.5 * env["momentum"] * v)
+        fluxes = env["momentum"] * v + p
+        return {"v_out": env["energy"] + env["step_factor"] * fluxes,
+                "fluxes": fluxes}
+
+    stages = [
+        Stage("compute_step_factor", k1,
+              reads=("density", "momentum", "energy"),
+              writes=("step_factor",), grid=grid, mode="single",
+              tile_maps={b: _one_to_one(n) for b in
+                         ("density", "momentum", "energy", "step_factor")}),
+        Stage("compute_flux", k2,
+              reads=("density", "momentum", "energy"),
+              writes=("fluxes",), grid=grid, mode="single",
+              tile_maps={b: _one_to_one(n) for b in
+                         ("density", "momentum", "energy", "fluxes")}),
+        Stage("time_step", k3,
+              reads=("energy", "step_factor", "fluxes"),
+              writes=("v_out",), grid=grid, mode="single",
+              tile_maps={b: _one_to_one(n) for b in
+                         ("energy", "step_factor", "fluxes", "v_out")},
+              impls={"fuse": k2k3_fused, "channel": k2k3_fused}),
+    ]
+    graph = StageGraph(
+        stages=stages,
+        inputs=("density", "momentum", "energy"),
+        outputs=("v_out",),
+        # K1 feeds everything downstream in the real solver's outer loop →
+        # the paper ends K1 with a global synchronization (§5.5: "K1 should
+        # be ended with a global synchronization").
+        host_dependencies=(("compute_step_factor", "compute_flux"),
+                           ("compute_step_factor", "time_step")),
+    )
+    return graph, buffers

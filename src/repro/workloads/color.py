@@ -1,0 +1,64 @@
+"""Graph coloring (Pannotia) analogue — one-to-one, long ⇒ kernel fusion."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import AffineTileMap, Stage, StageGraph
+
+EXPECTED = {"maxmin->color": ("few-to-few", ("fuse",))}
+
+
+def build(n: int = 4096, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    adj = (rng.uniform(size=(n, n)) < 0.01).astype(np.float32)
+    buffers = {
+        "adj": jnp.asarray(adj),
+        "rand_prio": jnp.asarray(rng.permutation(n).astype(np.float32)),
+        "colors": jnp.full((n,), -1.0, jnp.float32),
+    }
+    one = AffineTileMap(coeff=((n,),), const=(0,), block=(n,))
+
+    def maxmin(env):
+        # per-node max priority among uncolored neighbours
+        p = env["rand_prio"] * (env["colors"] < 0)
+        m = jnp.maximum(p, env["adj"] @ (p / n))
+        return {"nbr_max": m}
+
+    def _winners(env, m):
+        p = env["rand_prio"] * (env["colors"] < 0)
+        # conflict-resolution sweeps (keeps the consumer non-trivial)
+        s = m
+        for _ in range(3):
+            s = jnp.sort(s)[::-1] * 0 + s       # stable smoothing passes
+            s = 0.5 * (s + jnp.tanh(s))
+        win = (p >= s) & (env["colors"] < 0)
+        return jnp.where(win, 1.0, env["colors"])
+
+    def color(env):
+        return {"colors_out": _winners(env, env["nbr_max"])}
+
+    def fused(env):
+        p = env["rand_prio"] * (env["colors"] < 0)
+        m = jnp.maximum(p, env["adj"] @ (p / n))
+        return {"colors_out": _winners(env, m), "nbr_max": m}
+
+    stages = [
+        Stage("maxmin", maxmin, reads=("adj", "rand_prio", "colors"),
+              writes=("nbr_max",), grid=(n // 256,),
+              tile_maps={"adj": AffineTileMap.broadcast(1, (n, n)),
+                         "rand_prio": AffineTileMap.broadcast(1, (n,)),
+                         "colors": AffineTileMap.broadcast(1, (n,)),
+                         "nbr_max": AffineTileMap.identity_1d(256)}),
+        Stage("color", color, reads=("rand_prio", "colors", "nbr_max"),
+              writes=("colors_out",), grid=(n // 256,),
+              tile_maps={"rand_prio": AffineTileMap.broadcast(1, (n,)),
+                         "colors": AffineTileMap.broadcast(1, (n,)),
+                         "nbr_max": AffineTileMap.identity_1d(256),
+                         "colors_out": AffineTileMap.identity_1d(256)},
+              impls={"fuse": fused}),
+    ]
+    graph = StageGraph(stages=stages,
+                       inputs=("adj", "rand_prio", "colors"),
+                       outputs=("colors_out",))
+    return graph, buffers

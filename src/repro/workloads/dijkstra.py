@@ -1,0 +1,51 @@
+"""Dijkstra / SSSP (Pannotia) analogue — one-to-one, *short* kernels ⇒
+CKE with channels (paper: "Dijkstra benefits from CKE with channel due to
+the low execution time of its kernels", Fig. 8 launch-overhead effect)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import AffineTileMap, Stage, StageGraph
+
+EXPECTED = {"relax->select": ("few-to-few", ("channel",))}
+
+
+def build(n: int = 512, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(1, 10, size=(n, n)).astype(np.float32)
+    w[rng.uniform(size=(n, n)) > 0.05] = 1e9        # sparse-ish
+    buffers = {
+        "w": jnp.asarray(w),
+        "dist": jnp.asarray(
+            np.where(np.arange(n) == 0, 0.0, 1e9).astype(np.float32)),
+    }
+    one = AffineTileMap(coeff=((n,),), const=(0,), block=(n,))
+
+    def relax(env):
+        # one relaxation sweep: cand[v] = min_u dist[u] + w[u,v]
+        return {"cand": jnp.min(env["dist"][:, None] + env["w"], axis=0)}
+
+    def select(env):
+        return {"dist_out": jnp.minimum(env["dist"], env["cand"])}
+
+    def fused(env):
+        cand = jnp.min(env["dist"][:, None] + env["w"], axis=0)
+        return {"dist_out": jnp.minimum(env["dist"], cand), "cand": cand}
+
+    stages = [
+        Stage("relax", relax, reads=("w", "dist"), writes=("cand",),
+              grid=(n // 128,),
+              tile_maps={"w": AffineTileMap.broadcast(1, (n, n)),
+                         "dist": AffineTileMap.broadcast(1, (n,)),
+                         "cand": AffineTileMap.identity_1d(128)}),
+        Stage("select", select, reads=("dist", "cand"),
+              writes=("dist_out",), grid=(n // 128,),
+              tile_maps={"dist": AffineTileMap.broadcast(1, (n,)),
+                         "cand": AffineTileMap.identity_1d(128),
+                         "dist_out": AffineTileMap.identity_1d(128)},
+              impls={"channel": fused, "fuse": fused}),
+    ]
+    graph = StageGraph(stages=stages, inputs=("w", "dist"),
+                       outputs=("dist_out",))
+    return graph, buffers

@@ -1,0 +1,97 @@
+"""LUD (Rodinia) analogue — paper Figs. 9-12: the id-remapping showcase.
+
+Blocked right-looking LU step: a `perimeter` kernel produces the row panel
+and column panel for every block index b, and an `internal` kernel updates
+trailing block (i, j) with `m[i,j] − rowp[i] @ colp[j]`.
+
+Dependency (paper Fig. 11): internal tile (i, j) needs perimeter tiles
+{i, j} → fan-in 2 ("few"), while perimeter tile b feeds every (b, *) and
+(*, b) → fan-out ~2·nb ("many") ⇒ **few-to-many ⇒ CKE through global
+memory**, and the natural row-major consumer order stalls: (0,2) waits for
+perimeter 2 while (1,0),(1,1) are already ready.  The id_queue reorders
+consumers into the wavefront max(i,j) = 0, 1, 2, … exactly as in the paper.
+
+The NaN-poisoned chunked executor makes this executable proof: running
+consumer tiles in queue order against a partially-written panel buffer
+yields bit-correct results only if the queue is dependency-legal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import AffineTileMap, Stage, StageGraph
+
+B = 32                     # block size (paper's BSIZE)
+EXPECTED = {"perimeter->internal": ("few-to-many", ("globalmem",))}
+
+
+def build(nb: int = 8, seed: int = 0):
+    n = nb * B
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    buffers = {"m": m}
+
+    def perimeter(env):
+        mm = env["m"]
+        blocks = mm.reshape(nb, B, nb, B)
+        # row panel for b: normalized diagonal-block transform of block row b
+        diag = jnp.einsum("bibj->bij", blocks)            # (nb, B, B)
+        rowp = jnp.tanh(diag) / B                          # (nb, B, B)
+        colp = jnp.tanh(jnp.swapaxes(diag, 1, 2)) / B      # (nb, B, B)
+        return {"rowp": rowp.reshape(nb * B, B),
+                "colp": colp.reshape(nb * B, B)}
+
+    def internal(env):
+        mm = env["m"]
+        rowp = env["rowp"].reshape(nb, B, B)
+        colp = env["colp"].reshape(nb, B, B)
+        blocks = mm.reshape(nb, B, nb, B).transpose(0, 2, 1, 3)  # (i,j,B,B)
+        upd = blocks - jnp.einsum("iab,jbc->ijac", rowp, colp)
+        return {"out": upd.transpose(0, 2, 1, 3).reshape(n, n)}
+
+    # tile-wise impls for the chunked (global-memory CKE) executor
+    def perimeter_tile(env, b):
+        mm = env["m"]
+        db = jax.lax.dynamic_slice(mm, (b * B, b * B), (B, B))
+        return {"rowp": jnp.tanh(db) / B, "colp": jnp.tanh(db.T) / B}
+
+    def internal_tile(env, flat):
+        i, j = flat // nb, flat % nb
+        mm = env["m"]
+        blk = jax.lax.dynamic_slice(mm, (i * B, j * B), (B, B))
+        ri = jax.lax.dynamic_slice(env["rowp"], (i * B, 0), (B, B))
+        cj = jax.lax.dynamic_slice(env["colp"], (j * B, 0), (B, B))
+        return {"out": blk - ri @ cj}
+
+    stages = [
+        Stage("perimeter", perimeter,
+              reads=("m",), writes=("rowp", "colp"), grid=(nb,),
+              tile_maps={
+                  "m": AffineTileMap(coeff=((B,), (B,)), const=(0, 0),
+                                     block=(B, B)),
+                  "rowp": AffineTileMap(coeff=((B,), (0,)), const=(0, 0),
+                                        block=(B, B)),
+                  "colp": AffineTileMap(coeff=((B,), (0,)), const=(0, 0),
+                                        block=(B, B)),
+              },
+              impls={"tile": perimeter_tile}),
+        Stage("internal", internal,
+              reads=("m", "rowp", "colp"), writes=("out",), grid=(nb, nb),
+              tile_maps={
+                  "m": AffineTileMap(coeff=((B, 0), (0, B)), const=(0, 0),
+                                     block=(B, B)),
+                  # internal (i,j) reads rowp rows of block i …
+                  "rowp": AffineTileMap(coeff=((B, 0), (0, 0)), const=(0, 0),
+                                        block=(B, B)),
+                  # … and colp rows of block j
+                  "colp": AffineTileMap(coeff=((0, B), (0, 0)), const=(0, 0),
+                                        block=(B, B)),
+                  "out": AffineTileMap(coeff=((B, 0), (0, B)), const=(0, 0),
+                                       block=(B, B)),
+              },
+              impls={"tile": internal_tile}),
+    ]
+    graph = StageGraph(stages=stages, inputs=("m",), outputs=("out",))
+    return graph, buffers

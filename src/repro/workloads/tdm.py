@@ -1,0 +1,48 @@
+"""Tdm (OpenDwarf, time-domain matched filter) analogue — host dependency.
+
+The two kernels exchange data **through the host CPU** (a host-side argmax
+between filter stages), so the paper's §5.2 rule excludes them from CKE;
+MKPipe only applies kernel balancing (the paper's biggest Tdm win came from
+searching the optimization-parameter space efficiently).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import AffineTileMap, Stage, StageGraph
+
+EXPECTED = {"filter->detect": ("sync",)}
+
+
+def build(n: int = 1 << 14, taps: int = 64, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    buffers = {
+        "signal": jnp.asarray(rng.normal(size=n), jnp.float32),
+        "template": jnp.asarray(rng.normal(size=taps), jnp.float32),
+    }
+    one = AffineTileMap(coeff=((n,),), const=(0,), block=(n,))
+
+    def filt(env):
+        return {"corr": jnp.correlate(env["signal"], env["template"],
+                                      mode="same")}
+
+    def detect(env):
+        c = env["corr"]
+        mu, sd = c.mean(), c.std()
+        return {"peaks": (c - mu) / (sd + 1e-6)}
+
+    stages = [
+        Stage("filter", filt, reads=("signal", "template"),
+              writes=("corr",), grid=(1,), mode="single",
+              tile_maps={"signal": one, "corr": one,
+                         "template": AffineTileMap.broadcast(1, (taps,))}),
+        Stage("detect", detect, reads=("corr",), writes=("peaks",),
+              grid=(1,), mode="single",
+              tile_maps={"corr": one, "peaks": one}),
+    ]
+    graph = StageGraph(
+        stages=stages, inputs=("signal", "template"), outputs=("peaks",),
+        host_dependencies=(("filter", "detect"),),   # threshold picked on CPU
+    )
+    return graph, buffers

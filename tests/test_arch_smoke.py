@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU; asserts output shapes and no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke, list_archs
+from repro.models import (abstract_params, decode_step, forward, init_cache,
+                          init_params, loss_fn)
+from repro.models.common import LayerKind, ShapeSpec, tp_align
+
+SMOKE_SHAPE = ShapeSpec("smoke", seq_len=64, global_batch=2, kind="train")
+
+
+def _batch(cfg, B=2, S=64, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+    if cfg.num_patches:
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)) * 0.02,
+            cfg.dtype)
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_frames, cfg.d_model)) * 0.02,
+            cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    h, aux = jax.jit(lambda p, b: forward(
+        p, cfg, b["tokens"], b.get("patch_embeds"), b.get("frames")))(
+        params, batch)
+    S_total = 64 + (cfg.num_patches or 0)
+    assert h.shape == (2, S_total, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_no_nans(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, b):
+        loss, grads = jax.value_and_grad(lambda q: loss_fn(q, cfg, b))(p)
+        new_p = jax.tree.map(lambda a, g: a - 1e-3 * g.astype(a.dtype),
+                             p, grads)
+        return loss, new_p
+
+    loss, new_p = step(params, batch)
+    assert np.isfinite(float(loss)), f"{arch} loss={loss}"
+    # loss should start near ln(vocab) for random params
+    assert 0.0 < float(loss) < 2 * np.log(cfg.vocab_size) + 5
+    flat = jax.tree.leaves(new_p)
+    assert all(np.isfinite(np.asarray(x, np.float32)).all() for x in flat)
+    # a second step must change the loss (training is live)
+    loss2, _ = step(new_p, batch)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_step(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.key(0))
+    B, S_max = 2, 32
+    cache = init_cache(cfg, B, S_max)
+    if cfg.is_encdec:
+        cache["enc_out"] = jnp.asarray(
+            np.random.default_rng(0).normal(
+                size=(B, cfg.enc_frames, cfg.d_model)) * 0.02, cfg.dtype)
+    token = jnp.ones((B, 1), jnp.int32)
+    step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    logits, cache = step(params, cache, token)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache["cur"]) == 1
+    # a few more steps: cache advances, logits stay finite
+    for _ in range(3):
+        logits, cache = step(params, cache, token)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache["cur"]) == 4
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_abstract_params_match_real(arch):
+    cfg = get_smoke(arch)
+    abs_tree = abstract_params(cfg)
+    real = init_params(cfg, jax.random.key(0))
+    abs_leaves = jax.tree.leaves(abs_tree)
+    real_leaves = jax.tree.leaves(real)
+    assert len(abs_leaves) == len(real_leaves)
+    for a, r in zip(abs_leaves, real_leaves):
+        assert a.shape == r.shape and a.dtype == r.dtype
+
+
+def test_tp_align_paddings():
+    from repro.configs import get_config
+    cfg = tp_align(get_config("llama4-scout-17b-a16e"), tp=16)
+    assert cfg.q_heads == 48 and cfg.kv_heads == 16
+    assert cfg.vocab % (16 * 128) == 0
+    cfg = tp_align(get_config("whisper-base"), tp=16)
+    assert cfg.q_heads == 16 and cfg.kv_heads == 16
+    cfg = tp_align(get_config("granite-3-8b"), tp=16)
+    assert cfg.vocab % 2048 == 0 and cfg.vocab >= 49155
+
+
+def test_head_padding_is_inert():
+    """Padded q-heads must not change the forward output."""
+    cfg = get_smoke("llama4-scout-17b-a16e")      # 5 heads, kv 1
+    cfg_pad = tp_align(cfg, tp=2)                 # pads heads 5→6, kv 1→2
+    params = init_params(cfg_pad, jax.random.key(0))
+    batch = _batch(cfg_pad)
+    h, _ = forward(params, cfg_pad, batch["tokens"])
+    # zero the padded head's o-proj (init already does) and perturb its
+    # q-proj: output must be identical
+    import jax.tree_util as jtu
+    def perturb(p):
+        wq = p["layers"][0]["mixer"]["wq"]
+        wq = wq.at[:, :, cfg.num_heads:, :].add(1.0)
+        p = jax.tree.map(lambda x: x, p)  # copy
+        p["layers"][0]["mixer"]["wq"] = wq
+        return p
+    h2, _ = forward(perturb(params), cfg_pad, batch["tokens"])
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(h2, np.float32), atol=1e-5)

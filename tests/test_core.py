@@ -1,0 +1,308 @@
+"""Core MKPipe compiler tests: dependency analysis, decision tree, id
+remapping, balancing, splitting, and plan-equivalence numerics."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AffineTileMap, Stage, StageGraph, StageProfile,
+    analyze_edge, analyze_graph, build_id_queue, validate_queue,
+    compile_plan, plan_cke, profile_graph,
+    Factors, realize_factors, resource_balance, throughput_balance,
+    ResourceModel, ChipSpec, explore_split, eru, kbk_timeline, cke_timeline,
+)
+from repro.core.depanalysis import (_dependency_sets_enum, dependency_sets,
+                                    merge_deps)
+from repro.core.executor import _run_globalmem_pair
+from repro.core.idremap import RemapPlan, is_identity, pipeline_makespan
+from repro import workloads
+
+
+# ---------------------------------------------------------------- helpers
+def _simple_stage(name, grid, maps, reads=("a",), writes=("b",), t=1.0,
+                  fn=None):
+    return Stage(name, fn or (lambda env: {}), reads=reads, writes=writes,
+                 grid=grid, tile_maps=maps,
+                 profile=StageProfile(time_s=t, out_bytes=1024))
+
+
+# ------------------------------------------------- dependency classification
+def test_one_to_one_classification():
+    m = AffineTileMap.identity_1d(8)
+    p = _simple_stage("p", (16,), {"b": m}, reads=("a",), writes=("b",))
+    c = _simple_stage("c", (16,), {"b": m}, reads=("b",), writes=("d",))
+    g = StageGraph([p, c], inputs=("a",), outputs=("d",))
+    info = analyze_edge(g, "p", "c", "b")
+    assert info.category == "few-to-few"
+    assert info.one_to_one
+
+
+def test_few_to_many_classification():
+    # producer tile b writes row-block b; consumer (i,j) reads block i
+    wm = AffineTileMap(coeff=((8,),), const=(0,), block=(8,))
+    rm = AffineTileMap(coeff=((8, 0),), const=(0,), block=(8,))
+    p = _simple_stage("p", (16,), {"b": wm})
+    c = Stage("c", lambda env: {}, reads=("b",), writes=("d",),
+              grid=(16, 16), tile_maps={"b": rm},
+              profile=StageProfile(1.0))
+    g = StageGraph([p, c], inputs=("a",), outputs=("d",))
+    info = analyze_edge(g, "p", "c", "b")
+    assert info.max_fan_in == 1
+    assert info.max_fan_out == 16
+    assert info.category == "few-to-many"
+
+
+def test_many_to_few_classification():
+    # consumer tile reads the WHOLE producer output (reduction-like)
+    wm = AffineTileMap.identity_1d(8)
+    rm = AffineTileMap.broadcast(1, (128,))
+    p = _simple_stage("p", (16,), {"b": wm})
+    c = _simple_stage("c", (4,), {"b": rm}, reads=("b",), writes=("d",))
+    g = StageGraph([p, c], inputs=("a",), outputs=("d",))
+    info = analyze_edge(g, "p", "c", "b")
+    assert info.category in ("many-to-few", "many-to-many")
+
+
+def test_missing_tile_maps_is_conservative():
+    p = Stage("p", lambda e: {}, reads=("a",), writes=("b",), grid=(8,))
+    c = Stage("c", lambda e: {}, reads=("b",), writes=("d",), grid=(8,))
+    g = StageGraph([p, c], inputs=("a",), outputs=("d",))
+    assert analyze_edge(g, "p", "c", "b").category == "many-to-many"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    a1=st.integers(1, 6), b1=st.integers(0, 8), s1=st.integers(1, 12),
+    a2=st.integers(1, 6), b2=st.integers(0, 8), s2=st.integers(1, 12),
+    n1=st.integers(1, 12), n2=st.integers(1, 12),
+)
+def test_affine_matches_enumeration(a1, b1, s1, a2, b2, s2, n1, n2):
+    """Closed-form strided-interval dependency == brute-force enumeration."""
+    wm = AffineTileMap(coeff=((a1,),), const=(b1,), block=(s1,))
+    rm = AffineTileMap(coeff=((a2,),), const=(b2,), block=(s2,))
+    p = _simple_stage("p", (n1,), {"b": wm})
+    c = _simple_stage("c", (n2,), {"b": rm}, reads=("b",), writes=("d",))
+    fast = dependency_sets(p, c, "b")
+    slow = _dependency_sets_enum(p, c, "b")
+    assert fast == slow
+
+
+# --------------------------------------------------------------- id queue
+def test_id_queue_identity_for_one_to_one():
+    m = AffineTileMap.identity_1d(8)
+    p = _simple_stage("p", (16,), {"b": m})
+    c = _simple_stage("c", (16,), {"b": m}, reads=("b",), writes=("d",))
+    g = StageGraph([p, c], inputs=("a",), outputs=("d",))
+    info = analyze_edge(g, "p", "c", "b")
+    q = build_id_queue(info)
+    assert is_identity(q)
+    assert validate_queue(info, q)
+
+
+def test_lud_queue_is_wavefront():
+    graph, _ = workloads.lud.build(nb=6)
+    infos = analyze_graph(graph)
+    merged = merge_deps(list(infos.values()))
+    q = build_id_queue(merged)
+    assert validate_queue(merged, q)
+    wave = [max(cid // 6, cid % 6) for cid in q.queue]
+    assert wave == sorted(wave)
+    # remapping must strictly beat natural order on pipeline makespan
+    natural = RemapPlan(
+        queue=tuple(range(merged.n_consumer_tiles)),
+        ready_after=tuple(max(merged.deps[c], default=-1) + 1
+                          for c in range(merged.n_consumer_tiles)))
+    assert (pipeline_makespan(merged, q, producer_rate=0.5)
+            <= pipeline_makespan(merged, natural, producer_rate=0.5))
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), n_p=st.integers(1, 8), n_c=st.integers(1, 12))
+def test_id_queue_always_legal(data, n_p, n_c):
+    """Property: for any dependency structure the built queue is legal."""
+    deps = tuple(
+        tuple(sorted(data.draw(st.sets(st.integers(0, n_p - 1), max_size=n_p))))
+        for _ in range(n_c))
+    fan_out = {}
+    for s in deps:
+        for pid in s:
+            fan_out[pid] = fan_out.get(pid, 0) + 1
+    from repro.core.depanalysis import DepInfo
+    info = DepInfo("p", "c", "b", deps,
+                   max_fan_in=max((len(s) for s in deps), default=0),
+                   max_fan_out=max(fan_out.values(), default=0),
+                   n_producer_tiles=n_p, n_consumer_tiles=n_c)
+    q = build_id_queue(info)
+    assert validate_queue(info, q)
+
+
+def test_illegal_queue_poisons_output():
+    """The NaN-poisoned chunked executor must catch dependency violations."""
+    graph, buffers = workloads.lud.build(nb=4)
+    infos = analyze_graph(graph)
+    merged = merge_deps(list(infos.values()))
+    # illegal schedule: claim every consumer is ready before any producer
+    bad = RemapPlan(queue=tuple(range(16)), ready_after=(0,) * 16)
+    env = dict(buffers)
+    _run_globalmem_pair(graph.stage("perimeter"), graph.stage("internal"),
+                        bad, env)
+    assert np.isnan(np.asarray(env["out"])).any()
+
+
+# ----------------------------------------------------------- decision tree
+@pytest.mark.parametrize("name", sorted(workloads.ALL))
+def test_decision_matches_paper(name):
+    mod = workloads.ALL[name]
+    graph, buffers = mod.build()
+    graph = profile_graph(graph, buffers, repeats=1)
+    plan = plan_cke(graph)
+    if name == "bfs":
+        assert plan.dominant == "expand"
+        assert plan.balancing == "resource"
+    elif name == "hist":
+        assert plan.mechanism("compute", "accumulate") == "fuse"
+    elif name == "cfd":
+        assert plan.mechanism("compute_flux", "time_step") in (
+            "channel", "fuse")
+        assert plan.mechanism("compute_step_factor", "time_step") == "sync"
+    elif name == "lud":
+        assert plan.mechanism("perimeter", "internal") == "globalmem"
+        e = plan.edge("perimeter", "internal")
+        assert e.remap is not None and not is_identity(e.remap)
+    elif name == "bp":
+        assert plan.groups == (("K1",), ("K2", "K3"), ("K4",))
+    elif name == "tdm":
+        assert plan.mechanism("filter", "detect") == "sync"
+    elif name == "color":
+        assert plan.mechanism("maxmin", "color") == "fuse"
+    elif name == "dijkstra":
+        assert plan.mechanism("relax", "select") == "channel"
+
+
+# -------------------------------------------------- plan-equivalence (CKE)
+@pytest.mark.parametrize("name", sorted(workloads.ALL))
+def test_all_plans_bit_equivalent(name):
+    mod = workloads.ALL[name]
+    graph, buffers = mod.build()
+    ref = graph.run_reference(buffers)
+    graph = profile_graph(graph, buffers, repeats=1)
+    plan = plan_cke(graph)
+    for mode in (None, "kbk"):
+        out = compile_plan(plan, mode=mode)(buffers)
+        for k, v in ref.items():
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(v), rtol=2e-5, atol=1e-5,
+                err_msg=f"{name} mode={mode} buffer={k}")
+
+
+# ----------------------------------------------------------------- balance
+def _pipeline_stages(tps=(1.0, 4.0, 2.0)):
+    m = AffineTileMap.identity_1d(8)
+    out = []
+    for i, tp in enumerate(tps):
+        out.append(Stage(
+            f"s{i}", lambda e: {}, reads=("a",), writes=(f"b{i}",),
+            grid=(16,), tile_maps={"a": m, f"b{i}": m},
+            profile=StageProfile(time_s=1.0 / tp, out_bytes=1 << 20,
+                                 flops=1e9, hbm_bytes=2 << 20)))
+    return out
+
+
+def test_throughput_balance_lifts_slowest():
+    stages = _pipeline_stages()
+    model = ResourceModel()
+    res = throughput_balance(stages, model)
+    n = res.n_uni()
+    # slowest stage (s0, tp=1) must receive the largest factor
+    assert n["s0"] >= n["s2"] >= n["s1"]
+    # final configuration must not overflow resources
+    assert all(v <= 1.0 for v in res.totals.values())
+    # balanced throughputs should be within one grant of each other
+    tps = {f"s{i}": n[f"s{i}"] * tp for i, tp in enumerate((1.0, 4.0, 2.0))}
+    assert max(tps.values()) / min(tps.values()) <= 4.0
+
+
+def test_throughput_balance_respects_saturation():
+    stages = _pipeline_stages()
+    # tiny chip: almost no headroom -> factors stay at 1
+    chip = ChipSpec(peak_flops=1e9, hbm_bw=1e6)
+    res = throughput_balance(stages, ResourceModel(chip))
+    assert all(v == 1 for v in res.n_uni().values())
+
+
+def test_resource_balance_prefers_high_impact():
+    m = AffineTileMap.identity_1d(8)
+    # each grant consumes ~6% of VMEM; `slow` has 100× the runtime so its
+    # ΔT/ΔU dominates until its marginal benefit decays
+    slow = Stage("slow", lambda e: {}, ("a",), ("b",), grid=(16,),
+                 tile_maps={"a": m, "b": m},
+                 profile=StageProfile(time_s=10.0, out_bytes=1 << 20,
+                                      flops=1e12, hbm_bytes=64 << 20))
+    fast = Stage("fast", lambda e: {}, ("b",), ("c",), grid=(16,),
+                 tile_maps={"b": m, "c": m},
+                 profile=StageProfile(time_s=0.1, out_bytes=1 << 20,
+                                      flops=1e10, hbm_bytes=64 << 20))
+    res = resource_balance([slow, fast], ResourceModel(),
+                           max_unroll={"slow": 32, "fast": 32})
+    n = res.n_uni()
+    assert n["slow"] > n["fast"]     # ΔT/ΔU favors the long-running kernel
+    assert all(v <= 1.0 for v in res.totals.values())
+    for step in res.trace:
+        assert step["granted"] in ("slow", "fast")
+
+
+def test_realize_factors_simd_power_of_two():
+    s = _pipeline_stages()[0]
+    for n_uni in (1, 2, 3, 5, 8, 13, 32, 64):
+        f = realize_factors(s, n_uni, max_unroll=4, vectorizable=True)
+        assert f.simd & (f.simd - 1) == 0           # power of two
+        assert f.unroll <= 4
+        assert f.n_uni >= 1
+
+
+# ---------------------------------------------------------------- splitting
+def test_bp_splitting_isolates_k4():
+    graph, _ = workloads.bp.build()
+    dec = explore_split(
+        graph, workloads.bp.PAPER_PROFILE, workloads.bp.PAPER_UTILS,
+        pipelines=[("K2", "K3")], t_reprogram=1.4)
+    assert dec.split, f"expected split, got coreside {dec.t_coreside} vs {dec.t_split}"
+    a, b = dec.partition
+    assert ("K4",) in (a, b)          # K4 monopolizes its own program
+
+
+def test_short_workload_coresides():
+    graph, _ = workloads.bp.build()
+    times = {k: v / 1000.0 for k, v in workloads.bp.PAPER_PROFILE.items()}
+    dec = explore_split(graph, times, workloads.bp.PAPER_UTILS,
+                        pipelines=[("K2", "K3")], t_reprogram=1.4)
+    assert not dec.split              # reprogram overhead dominates
+
+
+def test_splitting_never_breaks_pipeline():
+    graph, _ = workloads.bp.build()
+    dec = explore_split(
+        graph, workloads.bp.PAPER_PROFILE, workloads.bp.PAPER_UTILS,
+        pipelines=[("K2", "K3")], t_reprogram=1e-9)
+    a, b = dec.partition
+    assert not (set(a) & {"K2", "K3"} and set(b) & {"K2", "K3"})
+
+
+# --------------------------------------------------------------------- ERU
+def test_eru_is_max():
+    assert eru({"mxu": 0.2, "hbm_bw": 0.7, "vmem": 0.1,
+                "hbm_cap": 0.3, "ici": 0.0}) == 0.7
+
+
+def test_timelines_model_cke_win():
+    times = {"k1": 1.0, "k2": 2.0, "k3": 2.0}
+    utils = {k: {"mxu": 0.3, "hbm_bw": 0.2, "vmem": 0.1, "hbm_cap": 0.1,
+                 "ici": 0.0} for k in times}
+    kbk = kbk_timeline(["k1", "k2", "k3"], times, utils)
+    cke = cke_timeline([("k1",), ("k2", "k3")], times, utils)
+    assert kbk.makespan == 5.0
+    assert cke.makespan == 3.0                      # k2 ∥ k3
+    assert cke.time_weighted_eru > kbk.time_weighted_eru

@@ -1,0 +1,104 @@
+"""Unit tests for the loop-aware HLO analyzer — the roofline meter."""
+import textwrap
+
+from repro.launch.hloanalysis import analyze_hlo, parse_computations
+
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    %body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+      %p = (s32[], f32[128,128]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+      %d = f32[128,128]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[128,128]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[128,128]) tuple(%ni, %ar)
+    }
+
+    %cond (p: (s32[], f32[128,128])) -> pred[] {
+      %p = (s32[], f32[128,128]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %k = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i, %k), direction=LT
+    }
+
+    ENTRY %main (x: f32[128,128]) -> f32[128,128] {
+      %x = f32[128,128]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %t0 = (s32[], f32[128,128]) tuple(%zero, %x)
+      %w = (s32[], f32[128,128]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %out = f32[128,128]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_parse_computations():
+    comps, entry = parse_computations(HLO)
+    assert entry == "main"
+    assert {"add", "body", "cond", "main"} <= set(comps)
+    assert any(i.op == "while" for i in comps["main"].instrs)
+    assert any(i.op == "dot" for i in comps["body"].instrs)
+
+
+def test_loop_aware_flops():
+    st = analyze_hlo(HLO)
+    # one 128³ dot per iteration × 10 iterations
+    assert st.flops == 2 * 128 ** 3 * 10
+
+
+def test_loop_aware_collectives():
+    st = analyze_hlo(HLO)
+    # all-reduce of 64KiB × 2 (ring multiplier) × 10 trips
+    assert st.coll_bytes_by_op["all-reduce"] == 128 * 128 * 4 * 2 * 10
+    assert st.coll_count_by_op["all-reduce"] == 10
+
+
+def test_promoted_allreduce_counts_half():
+    txt = HLO.replace("to_apply=%add", "to_apply=%add.clone_promoted")
+    st = analyze_hlo(txt)
+    assert st.coll_bytes_by_op["all-reduce"] == 128 * 128 * 4 * 2 * 10 / 2
+
+
+def test_dus_counts_in_place():
+    hlo = textwrap.dedent("""
+        HloModule t
+        ENTRY %main (x: f32[64,128], u: f32[1,128]) -> f32[64,128] {
+          %x = f32[64,128]{1,0} parameter(0)
+          %u = f32[1,128]{1,0} parameter(1)
+          %i = s32[] constant(3)
+          %z = s32[] constant(0)
+          ROOT %d = f32[64,128]{1,0} dynamic-update-slice(%x, %u, %i, %z)
+        }
+    """)
+    st = analyze_hlo(hlo)
+    # 2 × update slice, NOT 2 × full buffer
+    assert st.hbm_bytes == 2 * 128 * 4
+
+
+def test_convert_only_fusion_charged_at_source_width():
+    hlo = textwrap.dedent("""
+        HloModule t
+        %fc (p0: bf16[128,128]) -> f32[128,128] {
+          %p0 = bf16[128,128]{1,0} parameter(0)
+          ROOT %c = f32[128,128]{1,0} convert(%p0)
+        }
+        ENTRY %main (x: bf16[128,128]) -> f32[128,128] {
+          %x = bf16[128,128]{1,0} parameter(0)
+          %f = f32[128,128]{1,0} fusion(%x), kind=kLoop, calls=%fc
+          ROOT %d = f32[128,128]{1,0} dot(%f, %f), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+    """)
+    st = analyze_hlo(hlo)
+    # dot: result f32 (64KiB) + operand charged twice at bf16 width (32KiB);
+    # the convert fusion itself is free (promotion artifact)
+    assert st.hbm_bytes == 128 * 128 * 4 + 2 * 128 * 128 * 2
+    assert st.flops == 2 * 128 ** 3

@@ -1,0 +1,161 @@
+"""Per-kernel interpret-mode allclose tests against the pure-jnp oracles,
+sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention, flash_attention_ref, fused_mlp,
+                           fused_mlp_ref, fused_rmsnorm, fused_rmsnorm_ref,
+                           moe_gmm, moe_gmm_ref, ssd_chunk, ssd_chunk_ref)
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=0.05, atol=0.05) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ flash attn
+FLASH_CASES = [
+    # (B, S, Hq, Hkv, D, causal, window, q_blk, kv_blk)
+    (1, 128, 2, 2, 64, True, 0, 64, 64),
+    (2, 256, 4, 2, 64, True, 0, 64, 64),
+    (2, 256, 8, 2, 128, True, 0, 128, 64),
+    (1, 256, 4, 4, 64, False, 0, 64, 64),
+    (2, 256, 4, 2, 64, True, 96, 64, 64),
+    (1, 512, 2, 1, 64, True, 128, 128, 128),
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,causal,window,qb,kb", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, Hq, Hkv, D, causal, window, qb, kb, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_blk=qb, kv_blk=kb)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_skips_blocks():
+    """The kernel grid must be exactly the visible-pair count."""
+    from repro.kernels.flash_attention.kernel import build_pair_tables
+    pi, pj, _, _ = build_pair_tables(8, 8, causal=True, window=0,
+                                     q_blk=64, kv_blk=64, kv_offset=0)
+    assert len(pi) == 8 * 9 // 2          # triangle, not 64
+    pi, _, _, _ = build_pair_tables(8, 8, causal=True, window=128,
+                                    q_blk=64, kv_blk=64, kv_offset=0)
+    assert len(pi) <= 8 * 3               # window: ≤3 blocks per row
+
+
+# ------------------------------------------------------------- fused mlp
+@pytest.mark.parametrize("T,d,ff,act,gated", [
+    (128, 128, 512, "silu", True),
+    (256, 256, 512, "relu2", False),
+    (128, 128, 1024, "gelu", False),
+    (512, 64, 256, "silu", True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_mlp(T, d, ff, act, gated, dtype):
+    x = jnp.asarray(RNG.normal(size=(T, d)) * 0.3, dtype)
+    wu = jnp.asarray(RNG.normal(size=(d, ff)) * 0.05, dtype)
+    wd = jnp.asarray(RNG.normal(size=(ff, d)) * 0.05, dtype)
+    wg = jnp.asarray(RNG.normal(size=(d, ff)) * 0.05, dtype) if gated \
+        else None
+    out = fused_mlp(x, wu, wd, wg, act=act, bm=64, bff=256)
+    ref = fused_mlp_ref(x, wu, wd, wg, act=act)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# -------------------------------------------------------------- moe gmm
+@pytest.mark.parametrize("E,C,d,f", [(4, 128, 128, 256), (8, 256, 64, 128),
+                                     (2, 128, 256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm(E, C, d, f, dtype):
+    buf = jnp.asarray(RNG.normal(size=(E, C, d)) * 0.3, dtype)
+    w = jnp.asarray(RNG.normal(size=(E, d, f)) * 0.05, dtype)
+    out = moe_gmm(buf, w, bc=64, bf=128, bd=64)
+    ref = moe_gmm_ref(buf, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ------------------------------------------------------------ ssd chunk
+@pytest.mark.parametrize("BC,H,Q,P,N", [(2, 2, 64, 32, 16),
+                                        (4, 4, 128, 64, 32),
+                                        (1, 8, 256, 64, 128)])
+def test_ssd_chunk(BC, H, Q, P, N):
+    xh = jnp.asarray(RNG.normal(size=(BC, H, Q, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(BC, H, 1, Q)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4.0, size=(H,)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(BC, Q, N)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(size=(BC, Q, N)), jnp.float32)
+    y, s = ssd_chunk(xh, dt, A, bm, cm)
+    y_ref, s_ref = ssd_chunk_ref(xh, dt, A, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_composes_with_recurrence():
+    """Kernel chunks + XLA cross-chunk scan == the full SSD reference."""
+    from repro.models.layers import _ssd_chunked
+    B, S, H, P, N, Q = 2, 256, 2, 32, 16, 64
+    xh = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4.0, size=(H,)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    D = jnp.zeros((H,), jnp.float32)
+    y_ref, _ = _ssd_chunked(xh, dt, A, bm, cm, D, Q)
+
+    nc = S // Q
+    xc = xh.reshape(B, nc, Q, H, P).transpose(0, 1, 3, 2, 4).reshape(
+        B * nc, H, Q, P)
+    dtc = dt.reshape(B, nc, Q, H).transpose(0, 1, 3, 2).reshape(
+        B * nc, H, 1, Q)
+    bc = bm.reshape(B * nc, Q, N)
+    cc = cm.reshape(B * nc, Q, N)
+    y_diag, s_in = ssd_chunk(xc, dtc, A, bc, cc)
+    y_diag = y_diag.reshape(B, nc, H, Q, P)
+    s_in = s_in.reshape(B, nc, H, N, P)
+
+    # cross-chunk recurrence + off-diagonal term (XLA side)
+    la = dt * A[None, None, :]
+    cum = la.reshape(B, nc, Q, H).cumsum(axis=2)
+    seg_end = cum[:, :, -1, :]                                 # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        s_c, g_end = inp
+        return s_prev * jnp.exp(g_end)[:, :, None, None] + s_c, s_prev
+
+    s0 = jnp.zeros((B, H, N, P))
+    _, s_prevs = jax.lax.scan(
+        scan_fn, s0, (s_in.transpose(1, 0, 2, 3, 4),
+                      seg_end.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)
+    ccg = cm.reshape(B, nc, Q, N)
+    y_off = jnp.einsum("bcqn,bchnp->bchqp", ccg, s_prevs) * jnp.exp(
+        cum).transpose(0, 1, 3, 2)[..., None]
+    y = (y_diag + y_off).transpose(0, 1, 3, 2, 4).reshape(B, S, H, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------- fused rmsnorm
+@pytest.mark.parametrize("T,d", [(256, 128), (512, 512), (128, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rmsnorm(T, d, dtype):
+    x = jnp.asarray(RNG.normal(size=(T, d)), dtype)
+    s = jnp.asarray(RNG.normal(size=(d,)) * 0.1 + 1.0, dtype)
+    out = fused_rmsnorm(x, s, bm=64)
+    ref = fused_rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))

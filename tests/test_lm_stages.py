@@ -1,0 +1,71 @@
+"""MKPipe applied to the LM block itself: the planner fuses the
+norm→mixer and norm→ffn stage pairs, and the fused plan is bit-equivalent
+to the sequential baseline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import compile_plan, optimize, plan_cke, profile_graph
+from repro.models.stages import block_stage_graph, hbm_round_trips_eliminated
+from repro.models.transformer import init_params
+
+
+def _block(arch, seq=512, batch=2, seed=0):
+    # widen the FFN so no single stage crosses the 95% dominance threshold
+    # on the CPU profile (on TPU the block is naturally balanced)
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32",
+                              d_ff=2048, moe_d_ff=512)
+    params = init_params(cfg, jax.random.key(seed))
+    block_params = jax.tree.map(lambda x: x[0], params["layers"][0])
+    build = block_stage_graph(cfg, block_params, tile=128)
+    graph = build(seq)
+    rng = np.random.default_rng(seed)
+    buffers = {"x": jnp.asarray(
+        rng.normal(size=(batch, seq, cfg.d_model)) * 0.2, jnp.float32)}
+    return cfg, graph, buffers
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-370m",
+                                  "qwen3-moe-30b-a3b"])
+def test_planner_decides_lm_block(arch):
+    cfg, graph, buffers = _block(arch)
+    graph = profile_graph(graph, buffers, repeats=1)
+    plan = plan_cke(graph, channel_threshold_s=0.0)   # prefer fusion
+    mechs = {f"{e.producer}->{e.consumer}": e.mechanism for e in plan.edges}
+    if arch == "mamba2-370m":
+        # 2-stage block: the SSD mixer is >95% of the profile → the Fig. 5
+        # tree correctly declares a dominant kernel (balancing, no CKE)
+        assert plan.dominant == "mixer"
+        assert plan.balancing == "resource"
+        return
+    # norm→mixer and norm→ffn are one-to-one over token tiles → fused
+    assert mechs.get("ln1->mixer") in ("fuse", "channel")
+    if "ln2->ffn" in mechs:
+        assert mechs["ln2->ffn"] in ("fuse", "channel")
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-370m"])
+def test_fused_block_matches_sequential(arch):
+    cfg, graph, buffers = _block(arch)
+    ref = graph.run_reference(buffers)
+    graph = profile_graph(graph, buffers, repeats=1)
+    plan = plan_cke(graph, channel_threshold_s=0.0)
+    for mode in (None, "kbk"):
+        out = compile_plan(plan, mode=mode)(buffers)
+        np.testing.assert_allclose(
+            np.asarray(out["x_out"]), np.asarray(ref["x_out"]),
+            rtol=2e-4, atol=2e-4, err_msg=f"{arch} mode={mode}")
+
+
+def test_fusion_saves_hbm_round_trips():
+    cfg, graph, buffers = _block("granite-3-8b")
+    graph = profile_graph(graph, buffers, repeats=1)
+    plan = plan_cke(graph, channel_threshold_s=0.0)
+    saved = hbm_round_trips_eliminated(cfg, 2, 512, plan)
+    assert saved, "no fused pairs reported"
+    # each fused pair removes 2 × (B·S·d) bytes of intermediate traffic
+    assert all(v == 2 * 2 * 512 * cfg.d_model * 4 for v in saved.values())
