@@ -1,0 +1,22 @@
+# Two test modes, one command each (see tests/README.md).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-dist bench quickstart
+
+# tier-1: the fast single-device suite (multi-device cases run in
+# subprocesses that set their own XLA_FLAGS, so this works on 1 CPU)
+test:
+	$(PY) -m pytest -x -q
+
+# multi-device mode: 8 fake host devices for the in-process tests too
+test-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -q tests/test_dist.py tests/test_multidevice.py \
+	    tests/test_pipeline.py
+
+bench:
+	$(PY) -m benchmarks.run
+
+quickstart:
+	$(PY) examples/quickstart.py

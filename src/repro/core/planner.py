@@ -36,6 +36,8 @@ def _stage_cost(stage: Stage, env: Mapping[str, Array]) -> tuple[float, float]:
     try:
         compiled = jax.jit(stage.fn).lower(inputs).compile()
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # jax<=0.4 returns [dict]
+            ca = ca[0] if ca else {}
         flops = float(ca.get("flops", 0.0))
         bts = float(ca.get("bytes accessed", 0.0))
         return flops, bts
@@ -54,11 +56,16 @@ def profile_graph(graph: StageGraph, buffers: Mapping[str, Array],
         fn = jax.jit(s.fn)
         outs = fn(inputs)                       # compile + warm
         jax.block_until_ready(outs)
-        t0 = time.perf_counter()
-        for _ in range(repeats):
+        # min over individually-timed runs (≥2): scheduler noise only ever
+        # inflates a sample, and a single inflated sample on a µs-scale
+        # kernel can flip the Fig. 5 dominance/threshold decisions
+        samples = []
+        for _ in range(max(repeats, 2)):
+            t0 = time.perf_counter()
             outs = fn(inputs)
             jax.block_until_ready(outs)
-        dt = (time.perf_counter() - t0) / repeats
+            samples.append(time.perf_counter() - t0)
+        dt = min(samples)
         out_bytes = sum(int(np.prod(v.shape)) * v.dtype.itemsize
                         for v in outs.values())
         flops, hbm = _stage_cost(s, env)

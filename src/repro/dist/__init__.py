@@ -1,0 +1,26 @@
+"""Distributed substrate: the layer between the MKPipe scheduler core and
+the model/launch/bench layers.
+
+- ``context``      scoped active mesh + optimization flags (`sharding_context`,
+                   `constrain`, `flag`, `moe_groups`)
+- ``sharding``     PartitionSpec construction for batches, params and decode
+                   caches (`batch_spec`, `param_specs`, `cache_specs`,
+                   `shard_tree_specs`, `with_shardings`, `data_axes`)
+- ``pipeline``     pipeline parallelism: Alg.1 stage balancing + a shard_map
+                   stage executor (`balance_stages`, `pipeline_apply`)
+- ``compression``  int8 gradient compression with error feedback
+                   (`quantize_int8`, `compressed_psum`)
+- ``compat``       shims over jax API drift (`shard_map`)
+
+Every entry point degrades to an identity / sensible default outside a
+`sharding_context`, so single-device code paths never pay for the substrate.
+"""
+from .context import constrain, flag, moe_groups, sharding_context
+from .sharding import (batch_spec, cache_specs, data_axes, param_specs,
+                       shard_tree_specs, with_shardings)
+
+__all__ = [
+    "sharding_context", "constrain", "flag", "moe_groups",
+    "data_axes", "batch_spec", "param_specs", "cache_specs",
+    "shard_tree_specs", "with_shardings",
+]

@@ -1,0 +1,28 @@
+"""Shims over jax API drift, so call sites read like current jax.
+
+jax moved `shard_map` from `jax.experimental.shard_map` to top-level and
+renamed its replication-check kwarg `check_rep` → `check_vma`; meshes grew
+an `axis_types` argument.  These wrappers accept the new spelling and run
+on either version.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+try:                                    # jax >= 0.5
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f: Any, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool | None = None, **kwargs: Any) -> Any:
+    """`jax.shard_map` with the `check_vma` kwarg on any jax version."""
+    if check_vma is not None:
+        key = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS else "check_rep"
+        kwargs[key] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

@@ -1,0 +1,140 @@
+"""Scoped sharding context: the active mesh and optimization flags.
+
+Model code refers to *logical* axes, not mesh axes:
+
+- ``"dp"``  — data parallelism: every axis of the active mesh that belongs
+  to ``("pod", "data")``.  On the single-pod ``("data", "model")`` mesh this
+  is ``("data",)``; on the multi-pod ``("pod", "data", "model")`` mesh it is
+  ``("pod", "data")``, so batch dims shard over both without the model code
+  knowing how many pods exist.
+- ``"tp"``  — tensor/model parallelism: the ``"model"`` axis.
+
+`constrain` maps logical axes to a `with_sharding_constraint` against the
+active mesh, and is an exact no-op (returns its input) outside a context —
+layers can sprinkle constraints freely without breaking single-device runs
+or pure-numpy oracles.
+
+Flags (`ar_bf16`, `seq_shard`, `decode_bf16_scores`, `no_flash_vjp`, ...)
+are the §Perf hillclimb knobs: the dry-run lowers each variant by passing
+``flags=`` and the layers branch on `flag(name)` at trace time.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Iterable, Iterator
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# mesh axes carrying data parallelism, outermost first
+DATA_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+class _State(threading.local):
+    """Per-thread active context (jit tracing happens on the calling
+    thread, so thread-local is the right scope)."""
+
+    def __init__(self) -> None:
+        self.mesh: Mesh | None = None
+        self.flags: frozenset[str] = frozenset()
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, flags: Iterable[str] = ()
+                     ) -> Iterator[Mesh]:
+    """Scope `mesh` and `flags` as the active sharding context.
+
+    Reentrant: nesting restores the outer context on exit.  Lowering /
+    tracing must happen inside the context for `constrain`/`flag` to see it.
+    """
+    prev = (_STATE.mesh, _STATE.flags)
+    _STATE.mesh = mesh
+    _STATE.flags = frozenset(flags)
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh, _STATE.flags = prev
+
+
+def active_mesh() -> Mesh | None:
+    """The mesh of the innermost active `sharding_context`, or None."""
+    return _STATE.mesh
+
+
+def flag(name: str) -> bool:
+    """True iff `name` was passed as a flag to the active context."""
+    return name in _STATE.flags
+
+
+def active_flags() -> frozenset[str]:
+    return _STATE.flags
+
+
+def _axis_size(mesh: Mesh, entry: Any) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def resolve_axis(axis: str | None, mesh: Mesh) -> Any:
+    """Logical axis → PartitionSpec entry for `mesh` (None if absent)."""
+    if axis is None:
+        return None
+    if axis == "dp":
+        present = tuple(a for a in DATA_AXES if a in mesh.shape)
+        return present if present else None
+    if axis == "tp":
+        return MODEL_AXIS if MODEL_AXIS in mesh.shape else None
+    return axis if axis in mesh.shape else None
+
+
+def constrain(x: Any, *axes: str | None) -> Any:
+    """Sharding constraint over logical axes, one entry per dim of `x`.
+
+    No-op outside a `sharding_context`.  Inside, each logical axis is
+    resolved against the active mesh and dropped when the dim size does not
+    divide the shard count (e.g. a `"tp"` entry on a dim the config didn't
+    pad) — the constraint must never make a program unshardable.
+    """
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    ndim = jax.numpy.ndim(x)
+    if len(axes) != ndim:
+        raise ValueError(
+            f"constrain got {len(axes)} axes for a rank-{ndim} value")
+    entries = []
+    for axis, dim in zip(axes, x.shape):
+        entry = resolve_axis(axis, mesh)
+        if entry is not None and dim % _axis_size(mesh, entry):
+            entry = None
+        entries.append(entry)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def moe_groups(n: int) -> int:
+    """Number of MoE dispatch groups for GShard-style grouped dispatch.
+
+    Outside a context: `n` (the caller's default).  Inside: `n` rounded up
+    to a multiple of the data-parallel shard count (and at least that
+    count), so the group dim shards cleanly over `"dp"` and no data shard
+    redundantly recomputes another shard's expert tokens.
+    """
+    mesh = _STATE.mesh
+    if mesh is None:
+        return n
+    dp = _axis_size(mesh, resolve_axis("dp", mesh))
+    if dp <= 1:
+        return n
+    return max(n + (-n % dp), dp)

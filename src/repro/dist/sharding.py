@@ -1,0 +1,169 @@
+"""PartitionSpec construction for batches, parameters and decode caches.
+
+`param_specs` is *name-based*: it walks the param pytree and assigns each
+leaf a spec from what the layer code does with that tensor (column- vs
+row-parallel projections, expert parallelism, head sharding).  Specs are
+built against logical axis names and sanitized against the concrete mesh
+only at application time (`with_shardings` / `shard_tree_specs`), so the
+same spec tree serves any mesh — including ones where a dim doesn't divide
+and the entry must quietly drop to replicated.
+
+Megatron-style assignments (see `repro.models.layers`):
+
+- embeddings / LM head shard the vocab dim over ``model`` (vocab is padded
+  to ``tp * 128`` by `tp_align`);
+- q/k/v projections shard the heads dim, the o-projection is row-parallel;
+- MLP up/gate are column-parallel (d_ff), down is row-parallel;
+- MoE expert stacks shard the expert dim over ``model`` (EP);
+- Mamba z/x/conv/out shard the d_inner dim;
+- norms, routers, biases and small SSM tensors replicate.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .context import DATA_AXES, MODEL_AXIS
+
+Tree = Any
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes present in `mesh`, outermost first."""
+    return tuple(a for a in DATA_AXES if a in mesh.shape)
+
+
+def _entry_size(mesh: Mesh, entry: Any) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def batch_spec(mesh: Mesh, batch: int, ndim: int = 2) -> P:
+    """Spec for a batch-leading array: dim 0 over the data axes, rest
+    replicated.  Data axes are dropped outermost-first until the remaining
+    shard count divides `batch`, so odd global batches still shard over as
+    much of the mesh as they can."""
+    axes = list(data_axes(mesh))
+    while axes and batch % _entry_size(mesh, tuple(axes)):
+        axes.pop(0)
+    lead = tuple(axes) if axes else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def _sanitize(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Clamp `spec` to `shape`/`mesh`: pad to rank, drop axes the mesh
+    doesn't have or whose shard count doesn't divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for entry, dim in zip(entries, shape):
+        if entry is not None:
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            if any(a not in mesh.shape for a in axes):
+                entry = None
+            elif dim % _entry_size(mesh, entry):
+                entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def _leaf_name(path: tuple) -> str:
+    for key in reversed(path):
+        if hasattr(key, "key"):        # DictKey
+            return str(key.key)
+        if hasattr(key, "name"):       # GetAttrKey
+            return str(key.name)
+    return ""
+
+
+# tensors sharded over `model` at a fixed dim counted from the right:
+#   -1 column-parallel (output-feature dim), -2 row-parallel (input-feature
+#   dim), -3 heads/experts — leading stack dims (repeats R) shift from the
+#   left, so right-indexing makes one rule cover stacked and unstacked.
+_MODEL_DIM_BY_NAME = {
+    # attention: (.., d, H, hd) q/k/v shard heads; (.., H, hd, d) o-proj
+    "wq": -2, "wk": -2, "wv": -2, "wo": -3,
+    # dense FFN: column-parallel up/gate, row-parallel down
+    "w_up": -1, "w_gate": -1, "w_down": -2,
+    # MoE expert stacks (.., E, d, ff) / (.., E, ff, d): expert parallelism
+    "we_up": -3, "we_gate": -3, "we_down": -3,
+    # Mamba: d_inner-sharded projections and conv, row-parallel out
+    "w_z": -1, "w_x": -1, "conv_x": -1, "conv_bx": -1, "norm": -1,
+    "out_proj": -2,
+    # LM head (d, vocab): vocab over model (padded by tp_align)
+    "head": -1,
+}
+
+
+def _leaf_spec(name: str, ndim: int) -> P:
+    if name == "embed":                # (vocab, d): vocab over model
+        return P(MODEL_AXIS, *([None] * (ndim - 1)))
+    dim = _MODEL_DIM_BY_NAME.get(name)
+    if dim is None or ndim < -dim:
+        return P(*([None] * ndim))
+    entries = [None] * ndim
+    entries[ndim + dim] = MODEL_AXIS
+    return P(*entries)
+
+
+def param_specs(params_abs: Tree) -> Tree:
+    """PartitionSpec tree for a param tree (concrete or abstract).
+
+    Mesh-independent: specs name the ``model`` axis; application-time
+    sanitization handles meshes where a dim doesn't divide.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(_leaf_name(path), len(leaf.shape)),
+        params_abs)
+
+
+def cache_specs(cache_abs: Tree, mesh: Mesh, global_batch: int) -> Tree:
+    """Specs for the decode cache tree from `init_cache`.
+
+    Stacked caches carry (repeats, batch, ...): batch shards over the data
+    axes, the KV-heads / SSM-heads dim over ``model``.  The packed conv
+    state's channel dim mixes d_inner and ssm_state, so only its batch dim
+    shards.  `cur` (the step counter) and anything unrecognized replicate.
+    """
+    bspec = batch_spec(mesh, global_batch, 1)
+    lead = bspec[0] if len(bspec) else None
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        if name in ("k", "v") and ndim == 5:      # (R, B, S, Hkv, hd)
+            return P(None, lead, None, MODEL_AXIS, None)
+        if name == "ssm" and ndim == 5:           # (R, B, H, N, P)
+            return P(None, lead, MODEL_AXIS, None, None)
+        if name == "conv" and ndim == 4:          # (R, B, W-1, di+2N)
+            return P(None, lead, None, None)
+        if name == "enc_out" and ndim == 3:       # (B, F, d)
+            return P(lead, None, None)
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abs)
+
+
+def shard_tree_specs(tree: Tree, specs: Tree, mesh: Mesh) -> Tree:
+    """ShapeDtypeStructs with concrete NamedShardings attached — the
+    `.lower()` arguments for a dry-run (no device allocation)."""
+    def to_sds(leaf, spec):
+        spec = _sanitize(spec, leaf.shape, mesh)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(to_sds, tree, specs)
+
+
+def with_shardings(tree: Tree, specs: Tree, mesh: Mesh) -> Tree:
+    """device_put every leaf of `tree` with its (sanitized) spec."""
+    def put(leaf, spec):
+        spec = _sanitize(spec, leaf.shape, mesh)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, specs)

@@ -123,6 +123,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.perf_counter() - t0
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # jax<=0.4 returns [dict]
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     hlo = analyze_hlo(compiled.as_text())
 

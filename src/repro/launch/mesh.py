@@ -6,8 +6,23 @@ placeholder host devices; real deployments get real TPU topologies.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                                    # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                     # jax 0.4.x: Auto is the only mode
+    AxisType = None
+
+if AxisType is not None and \
+        "axis_types" in inspect.signature(jax.make_mesh).parameters:
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+else:
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -25,7 +40,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before importing jax (dry-run does this automatically)")
     return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(AxisType.Auto,) * len(shape))
+                         **_axis_kwargs(len(shape)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
@@ -34,4 +49,4 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     for s in shape:
         n *= s
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto,) * len(shape))
+                         **_axis_kwargs(len(shape)))

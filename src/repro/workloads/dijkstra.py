@@ -1,6 +1,15 @@
 """Dijkstra / SSSP (Pannotia) analogue — one-to-one, *short* kernels ⇒
 CKE with channels (paper: "Dijkstra benefits from CKE with channel due to
-the low execution time of its kernels", Fig. 8 launch-overhead effect)."""
+the low execution time of its kernels", Fig. 8 launch-overhead effect).
+
+The graph is a circulant (banded) lattice: vertex v's in-neighbors are
+v-1..v-k, so one relaxation sweep is k shifted add+min passes — no dense
+(n, n) matrix, matching Pannotia's sparse adjacency.  The select kernel
+does the algorithm's real per-sweep bookkeeping (distance update + count
+of relaxed vertices for the host's convergence check), which keeps both
+kernels short *and* comparable — the profile regime where the Fig. 5 tree
+picks channels rather than declaring a dominant kernel.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -11,39 +20,49 @@ from ..core.graph import AffineTileMap, Stage, StageGraph
 EXPECTED = {"relax->select": ("few-to-few", ("channel",))}
 
 
-def build(n: int = 512, seed: int = 0):
+def build(n: int = 8192, k: int = 4, seed: int = 0):
     rng = np.random.default_rng(seed)
-    w = rng.uniform(1, 10, size=(n, n)).astype(np.float32)
-    w[rng.uniform(size=(n, n)) > 0.05] = 1e9        # sparse-ish
+    # w[j, v] = weight of the edge (v-1-j) -> v  (circulant band)
+    w = rng.uniform(1, 10, size=(k, n)).astype(np.float32)
     buffers = {
         "w": jnp.asarray(w),
         "dist": jnp.asarray(
             np.where(np.arange(n) == 0, 0.0, 1e9).astype(np.float32)),
     }
-    one = AffineTileMap(coeff=((n,),), const=(0,), block=(n,))
+
+    def _sweep(dist, w):
+        # cand[v] = min_j dist[v-1-j] + w[j, v]
+        cands = jnp.stack([jnp.roll(dist, j + 1)
+                           for j in range(w.shape[0])]) + w
+        return jnp.min(cands, axis=0)
 
     def relax(env):
-        # one relaxation sweep: cand[v] = min_u dist[u] + w[u,v]
-        return {"cand": jnp.min(env["dist"][:, None] + env["w"], axis=0)}
+        return {"cand": _sweep(env["dist"], env["w"])}
 
     def select(env):
-        return {"dist_out": jnp.minimum(env["dist"], env["cand"])}
+        nd = jnp.minimum(env["dist"], env["cand"])
+        changed = (nd < env["dist"]).astype(jnp.float32)
+        return {"dist_out": nd, "n_changed": jnp.sum(changed)[None]}
 
     def fused(env):
-        cand = jnp.min(env["dist"][:, None] + env["w"], axis=0)
-        return {"dist_out": jnp.minimum(env["dist"], cand), "cand": cand}
+        cand = _sweep(env["dist"], env["w"])
+        nd = jnp.minimum(env["dist"], cand)
+        changed = (nd < env["dist"]).astype(jnp.float32)
+        return {"dist_out": nd, "n_changed": jnp.sum(changed)[None],
+                "cand": cand}
 
     stages = [
         Stage("relax", relax, reads=("w", "dist"), writes=("cand",),
               grid=(n // 128,),
-              tile_maps={"w": AffineTileMap.broadcast(1, (n, n)),
+              tile_maps={"w": AffineTileMap.broadcast(1, (k, n)),
                          "dist": AffineTileMap.broadcast(1, (n,)),
                          "cand": AffineTileMap.identity_1d(128)}),
         Stage("select", select, reads=("dist", "cand"),
-              writes=("dist_out",), grid=(n // 128,),
+              writes=("dist_out", "n_changed"), grid=(n // 128,),
               tile_maps={"dist": AffineTileMap.broadcast(1, (n,)),
                          "cand": AffineTileMap.identity_1d(128),
-                         "dist_out": AffineTileMap.identity_1d(128)},
+                         "dist_out": AffineTileMap.identity_1d(128),
+                         "n_changed": AffineTileMap.broadcast(1, (1,))},
               impls={"channel": fused, "fuse": fused}),
     ]
     graph = StageGraph(stages=stages, inputs=("w", "dist"),

@@ -1,0 +1,182 @@
+"""Tests for the `repro.dist` substrate: context scoping, logical-axis
+resolution, batch/param spec construction, and a real sharded round-trip
+on a 2×2 host-device mesh (subprocess — the device count must be set
+before jax initializes)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.context import (active_mesh, constrain, flag, moe_groups,
+                                sharding_context)
+from repro.dist.pipeline import balance_stages, pipeline_bubble_fraction
+from repro.dist.sharding import batch_spec, data_axes, param_specs
+from repro.launch.mesh import make_mesh
+
+
+# ----------------------------------------------------------------- context
+def test_constrain_identity_outside_context():
+    x = jnp.ones((4, 8))
+    assert constrain(x, "dp", None) is x
+    assert constrain(x, "dp", "tp") is x
+    assert active_mesh() is None
+
+
+def test_flag_reflects_context_flags():
+    assert not flag("ar_bf16")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with sharding_context(mesh, flags=("ar_bf16", "seq_shard")):
+        assert flag("ar_bf16")
+        assert flag("seq_shard")
+        assert not flag("decode_bf16_scores")
+        # nesting restores the outer context's flags on exit
+        with sharding_context(mesh, flags=("no_flash_vjp",)):
+            assert flag("no_flash_vjp") and not flag("ar_bf16")
+        assert flag("ar_bf16") and not flag("no_flash_vjp")
+    assert not flag("ar_bf16")
+    assert active_mesh() is None
+
+
+def test_constrain_rank_mismatch_raises():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with sharding_context(mesh):
+        with pytest.raises(ValueError):
+            constrain(jnp.ones((2, 2)), "dp")
+
+
+def test_moe_groups_outside_context_is_default():
+    assert moe_groups(16) == 16
+    assert moe_groups(1) == 1
+
+
+# -------------------------------------------------------------- batch_spec
+def test_batch_spec_ndims():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert batch_spec(mesh, 8, 1) == P(("data",))
+    assert batch_spec(mesh, 8) == P(("data",), None)
+    assert batch_spec(mesh, 8, 3) == P(("data",), None, None)
+    assert data_axes(mesh) == ("data",)
+
+
+# ------------------------------------------------------------- param_specs
+def test_param_specs_by_name():
+    sds = jax.ShapeDtypeStruct
+    tree = {
+        "embed": sds((512, 64), jnp.float32),
+        "final_norm": sds((64,), jnp.float32),
+        "head": sds((64, 512), jnp.float32),
+        "layers": [{
+            "ln1": sds((4, 64), jnp.float32),
+            "mixer": {"wq": sds((4, 64, 8, 16), jnp.float32),
+                      "wo": sds((4, 8, 16, 64), jnp.float32)},
+            "ffn": {"w_up": sds((4, 64, 256), jnp.float32),
+                    "w_down": sds((4, 256, 64), jnp.float32),
+                    "we_up": sds((4, 8, 64, 128), jnp.float32)},
+        }],
+    }
+    specs = param_specs(tree)
+    assert specs["embed"] == P("model", None)
+    assert specs["final_norm"] == P(None)
+    assert specs["head"] == P(None, "model")
+    blk = specs["layers"][0]
+    assert blk["ln1"] == P(None, None)
+    assert blk["mixer"]["wq"] == P(None, None, "model", None)
+    assert blk["mixer"]["wo"] == P(None, "model", None, None)
+    assert blk["ffn"]["w_up"] == P(None, None, "model")
+    assert blk["ffn"]["w_down"] == P(None, "model", None)
+    assert blk["ffn"]["we_up"] == P(None, "model", None, None)
+
+
+# ---------------------------------------------------------------- pipeline
+def test_balance_stages_validates():
+    with pytest.raises(ValueError):
+        balance_stages([1.0, 2.0], 3)
+    with pytest.raises(ValueError):
+        pipeline_bubble_fraction(0, 4)
+    assert balance_stages([5.0], 1) == [1]
+
+
+# ----------------------------------------------- multi-device (subprocess)
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.context import constrain, moe_groups, sharding_context
+    from repro.dist.sharding import (batch_spec, cache_specs, param_specs,
+                                     shard_tree_specs, with_shardings)
+    from repro.launch.mesh import make_mesh
+
+    # -- batch_spec divides the data axes correctly for 1-3D batches
+    mesh = make_mesh((2, 2), ("data", "model"))
+    assert batch_spec(mesh, 8, 1) == P(("data",))
+    assert batch_spec(mesh, 8, 2) == P(("data",), None)
+    assert batch_spec(mesh, 8, 3) == P(("data",), None, None)
+    assert batch_spec(mesh, 3, 2) == P(None, None)  # indivisible: replicate
+
+    pod = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    assert batch_spec(pod, 8, 2) == P(("pod", "data"), None)
+    # batch 2 divides only the inner data axis: the pod axis drops
+    assert batch_spec(pod, 2, 2) == P(("data",), None)
+    assert batch_spec(pod, 3, 2) == P(None, None)
+
+    # -- moe_groups rounds up to a multiple of the dp shard count
+    with sharding_context(pod):
+        assert moe_groups(1) == 4
+        assert moe_groups(6) == 8
+        assert moe_groups(16) == 16
+
+    # -- param_specs / with_shardings round-trip on the 2x2 mesh
+    rng = np.random.default_rng(0)
+    tree = {
+        "embed": jnp.asarray(rng.normal(size=(256, 16)), jnp.float32),
+        "layers": [{
+            "ln1": jnp.ones((3, 16), jnp.float32),
+            "mixer": {"wq": jnp.asarray(rng.normal(size=(3, 16, 4, 8)),
+                                        jnp.float32)},
+            "ffn": {"w_up": jnp.asarray(rng.normal(size=(3, 16, 32)),
+                                        jnp.float32),
+                    "w_down": jnp.asarray(rng.normal(size=(3, 32, 16)),
+                                          jnp.float32)},
+        }],
+    }
+    specs = param_specs(tree)
+    sharded = with_shardings(tree, specs, mesh)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(sharded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert len(b.sharding.device_set) == 4
+    wq = sharded["layers"][0]["mixer"]["wq"]
+    assert wq.sharding.spec == P(None, None, "model", None)
+    # a dim that does not divide the axis drops to replicated
+    odd = {"w_up": jnp.ones((5, 7, 9), jnp.float32)}
+    odd_sharded = with_shardings(odd, param_specs(odd), mesh)
+    assert odd_sharded["w_up"].sharding.spec in (P(), P(None, None, None))
+
+    # -- shard_tree_specs attaches shardings without allocating
+    sds_tree = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+    sds = shard_tree_specs(sds_tree, specs, mesh)
+    assert sds["embed"].sharding.spec == P("model", None)
+
+    # -- constrain inside jit shards the way batch_spec says
+    with mesh, sharding_context(mesh):
+        out = jax.jit(lambda x: constrain(x, "dp", "tp"))(
+            jnp.ones((8, 16)))
+        # GSPMD may normalize the singleton tuple to a bare axis name
+        assert out.sharding.spec in (P(("data",), "model"),
+                                     P("data", "model")), out.sharding
+
+    print("DIST OK")
+""")
+
+
+def test_round_trip_on_2x2_host_mesh():
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "DIST OK" in r.stdout

@@ -35,8 +35,8 @@ PIPE_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.dist.compat import shard_map
     from repro.dist.pipeline import pipeline_apply
     from repro.launch.mesh import make_mesh
 

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.ckpt import CheckpointManager, latest_step, load_checkpoint, \
     save_checkpoint
@@ -206,7 +207,7 @@ def test_error_feedback_unbiased_over_time():
 
 def test_compressed_psum_shard_map():
     """compressed_psum under shard_map on ≥1 devices matches plain mean."""
-    from jax import shard_map
+    from repro.dist.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import make_mesh
     n = len(jax.devices())
