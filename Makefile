@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist bench quickstart
+.PHONY: test test-dist bench bench-smoke quickstart
 
 # tier-1: the fast single-device suite (multi-device cases run in
 # subprocesses that set their own XLA_FLAGS, so this works on 1 CPU)
@@ -17,6 +17,11 @@ test-dist:
 
 bench:
 	$(PY) -m benchmarks.run
+
+# CI smoke: exercise every benchmark section, tolerate section failures
+# (perf numbers on shared runners are informational, not gating)
+bench-smoke:
+	$(PY) -m benchmarks.run --tolerate-failures
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,0 +1,121 @@
+"""Measured vs. predicted pipeline fill/drain bubble (paper Fig. 5 style
+decision validation, applied to the GPipe schedule).
+
+For each (n_micro, n_stages) point, an `n_stages`-device subprocess runs
+the microbatched `pipeline_apply_microbatched` schedule and the plain
+sequential composition of the same stages on the same total batch, and
+times both.  Every device computes on every tick of the schedule — the
+(M + S - 1) · S device-tick area — while the sequential baseline does the
+useful M · S ticks' work, so on host devices that share the same cores
+the wall-clock ratio exposes the bubble:
+
+    measured_bubble = 1 - t_seq / t_pipe     ≈ (S-1) / (M + S-1)
+
+which is exactly `pipeline_bubble_fraction(M, S)`.  Subprocesses are
+used because the device count must be fixed before jax initializes
+(tests/README.md, "the fake-host-device trick").
+
+Caveats of the host-device emulation: the schedule's masking/injection
+copies add a per-tick overhead proportional to the activation size, and
+the XLA CPU backend partially parallelizes "devices" over host cores, so
+the measured bubble carries a constant offset above the analytic value.
+The comparison to make is *across* points: measured decreases
+monotonically with n_micro at fixed n_stages and ranks the points the
+way the model predicts — the paper-style decision-validation signal.
+
+Rows: ``bubble_m{M}_s{S}, t_pipe_us, predicted=..;measured=..``.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+from .common import csv_row
+
+# (n_micro, n_stages) sweep: fill/drain-dominated → amortized
+POINTS = [(1, 4), (2, 4), (4, 4), (8, 4), (8, 2)]
+
+SCRIPT = textwrap.dedent("""
+    import os, sys, json, time
+    M, S = int(sys.argv[1]), int(sys.argv[2])
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%d" % S)
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compat import shard_map
+    from repro.dist.pipeline import pipeline_apply_microbatched
+    from repro.launch.mesh import make_mesh
+
+    B, D, REP = 2048, 768, 2
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(S, REP, D, D)) * 0.1, jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+
+    def stage_fn(p, c):
+        x = c["x"]
+        for r in range(REP):
+            x = jnp.tanh(x @ p["w"][r])
+        return {"x": x}
+
+    mesh = make_mesh((S,), ("stage",))
+    pipe = jax.jit(shard_map(
+        lambda w, xs: pipeline_apply_microbatched(
+            stage_fn, {"w": w}, {"x": xs}, M)["x"],
+        mesh=mesh, in_specs=(P("stage"), P()), out_specs=P(),
+        check_vma=False))
+
+    def seq_fn(w, xs):
+        for s in range(S):
+            xs = stage_fn({"w": w[s]}, {"x": xs})["x"]
+        return xs
+    seq = jax.jit(seq_fn)
+
+    def timed(f, *a):
+        jax.block_until_ready(f(*a))              # compile + warm
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*a))
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_pipe = timed(pipe, w, xs)
+    t_seq = timed(seq, w, xs)
+    out = np.asarray(pipe(w, xs))
+    ref = np.asarray(seq(w, xs))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    print(json.dumps({"t_pipe": t_pipe, "t_seq": t_seq}))
+""")
+
+
+def measure(n_micro: int, n_stages: int, timeout: int = 600) -> dict:
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT, str(n_micro), str(n_stages)],
+        capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"bubble point (M={n_micro}, S={n_stages}) failed:\n"
+            f"{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def run() -> list[str]:
+    from repro.dist.pipeline import pipeline_bubble_fraction
+
+    rows = []
+    for n_micro, n_stages in POINTS:
+        t = measure(n_micro, n_stages)
+        predicted = pipeline_bubble_fraction(n_micro, n_stages)
+        measured = max(0.0, 1.0 - t["t_seq"] / t["t_pipe"])
+        rows.append(csv_row(
+            f"bubble_m{n_micro}_s{n_stages}", t["t_pipe"] * 1e6,
+            f"predicted={predicted:.3f};measured={measured:.3f};"
+            f"t_seq_us={t['t_seq'] * 1e6:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -56,6 +56,29 @@ def run(dirpath: pathlib.Path = DRYRUN) -> list[str]:
         rows.append(csv_row(
             f"roofline_{r['arch']}__{r['shape']}__{r['mesh']}", 0.0,
             f"SKIPPED: {r['skipped'][:80]}"))
+    # grad_int8 collective-bytes A/B: pair cells that differ only by the
+    # grad_int8 variant (produced with `--mesh dp` / `--mesh dp --variant
+    # grad_int8`) and report the reduction the int8 gradient all-reduce
+    # buys over the f32 baseline.
+    def ab_key(r):
+        vs = tuple(v for v in r.get("variants", ()) if v != "grad_int8")
+        return (r["arch"], r["shape"], r["mesh"], vs)
+
+    base = {ab_key(r): r for r in compiled
+            if "grad_int8" not in r.get("variants", ())}
+    for r in compiled:
+        if "grad_int8" not in r.get("variants", ()):
+            continue
+        b = base.get(ab_key(r))
+        if b is None:
+            continue
+        cb_fp, cb_i8 = (b["per_device"]["collective_bytes"],
+                        r["per_device"]["collective_bytes"])
+        rows.append(csv_row(
+            f"grad_int8_ab_{r['arch']}__{r['shape']}__{r['mesh']}", 0.0,
+            f"collective_bytes_fp32={cb_fp:.3e};"
+            f"collective_bytes_int8={cb_i8:.3e};"
+            f"ratio={cb_i8 / cb_fp if cb_fp else 0.0:.3f}"))
     n_bound = {}
     for r in compiled:
         n_bound[r["bottleneck"]] = n_bound.get(r["bottleneck"], 0) + 1

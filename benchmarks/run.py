@@ -19,11 +19,20 @@ SECTIONS = [
     ("fig16 (CFD case study)", "fig16_cfd"),
     ("fig17/§7.3.2 (BP splitting)", "fig17_bp_splitting"),
     ("kernels", "kernels_bench"),
+    ("pipeline bubble (measured vs model)", "pipeline_bubble"),
     ("roofline (dry-run)", "roofline"),
 ]
 
 
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerate-failures", action="store_true",
+                    help="skip-tolerant (CI smoke) mode: section failures "
+                         "are reported but don't fail the run; only "
+                         "nothing-imported does")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     failures = 0
     imported = 0
@@ -42,6 +51,8 @@ def main() -> None:
         except Exception:
             failures += 1
             traceback.print_exc()
+    if args.tolerate_failures:
+        sys.exit(0 if imported else 1)
     if failures or not imported:     # all-skip means nothing was measured
         sys.exit(1)
 

@@ -17,10 +17,13 @@ import jax.numpy as jnp
 Tree = Any
 
 
-def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8: returns (q int8, scale f32 scalar) with
-    dequantization error bounded by scale/2 elementwise."""
-    scale = jnp.max(jnp.abs(x)).astype(jnp.float32) / 127.0
+def quantize_int8(x: jax.Array, axis=None, keepdims: bool = False
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8, per tensor (default) or per `axis` slice: returns
+    (q int8, scale f32) with dequantization error bounded by scale/2
+    elementwise."""
+    scale = jnp.max(jnp.abs(x), axis=axis,
+                    keepdims=keepdims).astype(jnp.float32) / 127.0
     scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
     return q.astype(jnp.int8), scale
@@ -35,17 +38,60 @@ def init_errors(tree: Tree) -> Tree:
     return jax.tree.map(lambda l: jnp.zeros(jnp.shape(l), jnp.float32), tree)
 
 
+def init_stacked_errors(tree: Tree, n_shards: int) -> Tree:
+    """Per-replica residuals for a shard_map reduction island: each leaf
+    gains a leading `n_shards` dim that shards over the data axes, so
+    every replica carries (and updates) only its own residual slice."""
+    return jax.tree.map(
+        lambda l: jnp.zeros((n_shards, *jnp.shape(l)), jnp.float32), tree)
+
+
 def compressed_psum(grad: jax.Array, axis: str, error: jax.Array
                     ) -> tuple[jax.Array, jax.Array]:
-    """Error-feedback int8 mean over a shard_map axis.
+    """Error-feedback int8 mean over a shard_map axis, int8 on the wire.
 
-    Returns (mean of the dequantized per-replica contributions, new
-    residual).  Each replica's contribution is off by at most scale/2, so
-    the mean is within max-replica-scale/2 of the true mean.
+    The all-reduce is decomposed so both transport phases move int8, not
+    f32 — the compressed analogue of ring reduce-scatter + all-gather:
+
+      1. split the carried gradient into one chunk per replica, quantize
+         each chunk against its own scale, and `all_to_all` the int8
+         payload (replica k receives every replica's contribution to
+         chunk k);
+      2. dequantize + mean locally in f32;
+      3. re-quantize the reduced chunk and `all_gather` it as int8.
+
+    Returns (mean, new residual).  The residual is the step-1 quantization
+    error of *this replica's* transmitted signal, so the cumulative
+    transmitted sum tracks the true gradient sum; step-3 re-quantization
+    adds a bounded (≤ scale/2 elementwise), non-accumulating broadcast
+    error.  Total elementwise error is within the max per-replica scale.
     """
     carried = grad.astype(jnp.float32) + error
-    q, scale = quantize_int8(carried)
-    sent = dequantize_int8(q, scale)
     n = jax.lax.psum(1, axis)
-    mean = jax.lax.psum(sent, axis) / n
-    return mean.astype(grad.dtype), carried - sent
+    if n == 1:
+        q, scale = quantize_int8(carried)
+        sent = dequantize_int8(q, scale)
+        return sent.astype(grad.dtype), carried - sent
+
+    flat = carried.ravel()
+    size = flat.shape[0]
+    m = -(-size // n)                          # chunk length, padded
+    flat = jnp.pad(flat, (0, n * m - size))
+    chunks = flat.reshape(n, m)
+
+    # per-destination-chunk symmetric int8
+    q, scale = quantize_int8(chunks, axis=1, keepdims=True)
+    sent = q.astype(jnp.float32) * scale       # what the wire carried
+
+    recv_q = jax.lax.all_to_all(q, axis, 0, 0, tiled=True)
+    recv_scale = jax.lax.all_to_all(scale, axis, 0, 0, tiled=True)
+    mean_chunk = (recv_q.astype(jnp.float32) * recv_scale).sum(0) / n
+
+    q2, scale2 = quantize_int8(mean_chunk)
+    all_q2 = jax.lax.all_gather(q2, axis, tiled=True)      # (n·m,) int8
+    all_s2 = jax.lax.all_gather(scale2, axis)              # (n,)
+    mean = (all_q2.reshape(n, m).astype(jnp.float32)
+            * all_s2[:, None]).ravel()[:size].reshape(grad.shape)
+
+    err = (carried.ravel() - sent.ravel()[:size]).reshape(grad.shape)
+    return mean.astype(grad.dtype), err

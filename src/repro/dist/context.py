@@ -98,16 +98,33 @@ def resolve_axis(axis: str | None, mesh: Mesh) -> Any:
     return axis if axis in mesh.shape else None
 
 
+def _bound_axis_names() -> frozenset:
+    """Axis names bound by an enclosing manual region (shard_map/pmap) at
+    trace time.  Internal-API probe with a safe fallback: if the probe
+    breaks on a future jax, constraints stay on (the pre-manual behavior)."""
+    try:
+        from jax._src.core import get_axis_env
+        return frozenset(get_axis_env().axis_sizes)
+    except Exception:                      # pragma: no cover - jax drift
+        return frozenset()
+
+
 def constrain(x: Any, *axes: str | None) -> Any:
     """Sharding constraint over logical axes, one entry per dim of `x`.
 
-    No-op outside a `sharding_context`.  Inside, each logical axis is
-    resolved against the active mesh and dropped when the dim size does not
-    divide the shard count (e.g. a `"tp"` entry on a dim the config didn't
-    pad) — the constraint must never make a program unshardable.
+    No-op outside a `sharding_context`, and inside shard_map manual
+    regions (GSPMD constraints don't apply there; this covers not just the
+    forward trace but custom_vjp backward rules and remat re-traces, which
+    run outside any context manager the caller could hold).  Otherwise
+    each logical axis is resolved against the active mesh and dropped when
+    the dim size does not divide the shard count (e.g. a `"tp"` entry on a
+    dim the config didn't pad) — the constraint must never make a program
+    unshardable.
     """
     mesh = _STATE.mesh
     if mesh is None:
+        return x
+    if _bound_axis_names():
         return x
     ndim = jax.numpy.ndim(x)
     if len(axes) != ndim:

@@ -82,3 +82,97 @@ def pipeline_apply(stage_fn: Callable[[Tree, Any], Any], stage_params: Tree,
         # numerics-oracle form of the stage-to-stage ppermute)
         x = jax.lax.psum(jnp.where(idx == s, y, jnp.zeros_like(y)), axis)
     return x
+
+
+def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
+                                stage_params: Tree, x: Tree, n_micro: int,
+                                axis: str = "stage",
+                                static: Tree | None = None) -> Tree:
+    """The GPipe fill/drain schedule under shard_map: the scheduling form
+    whose efficiency `pipeline_bubble_fraction` models.
+
+    `x` is a pytree whose leaves all carry a leading batch dim divisible by
+    `n_micro`; it is split into `n_micro` microbatches, and stage s
+    processes microbatch m at tick t = s + m, with activations moving
+    stage-to-stage through a ring `ppermute` (the GLOBALMEM channel of the
+    paper, across devices).  `stage_fn(local_params, x) -> x` must preserve
+    the tree structure (residual-stream style).  Every device computes on
+    every tick — fill/drain ticks compute garbage that is masked out — so
+    wall-clock cost scales with the (M + S - 1) · S device-tick area and
+    the measured bubble can be compared against the analytic model.
+
+    `static` is an optional batch-leading tree of per-microbatch side
+    inputs the stages *read* but don't produce (e.g. encoder output for
+    cross-attention): it is not rotated through the ring — each device
+    locally indexes the slice of its in-flight microbatch (t - s) and
+    `stage_fn(local_params, x, static_mb)` receives it as a third
+    argument.
+
+    Per microbatch the op sequence is exactly the sequential composition of
+    the stages, and the whole schedule is reverse-mode differentiable
+    (ppermute/psum transposes carry gradients stage-to-stage backwards).
+    The result is replicated over `axis`.
+    """
+    if n_micro < 1:
+        raise ValueError(f"need n_micro >= 1, got {n_micro}")
+    idx = jax.lax.axis_index(axis)
+    n_stages = jax.lax.psum(1, axis)          # static under shard_map
+    local = jax.tree.map(lambda p: p[0], stage_params)
+    M = int(n_micro)
+
+    def split(leaf):
+        if leaf.shape[0] % M:
+            raise ValueError(
+                f"batch dim {leaf.shape[0]} not divisible by n_micro={M}")
+        return leaf.reshape(M, leaf.shape[0] // M, *leaf.shape[1:])
+
+    x_mb = jax.tree.map(split, x)
+    static_mb = (None if static is None
+                 else jax.tree.map(split, static))
+    state = jax.tree.map(lambda l: jnp.zeros_like(l[0]), x_mb)
+    outbuf = jax.tree.map(jnp.zeros_like, x_mb)
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def tick(carry, t):
+        state, outbuf = carry
+        # stage 0 injects microbatch t (clipped re-injections during drain
+        # compute garbage whose outputs never reach the last stage in time)
+        m_in = jnp.clip(t, 0, M - 1)
+        state = jax.tree.map(
+            lambda buf, s: jnp.where(
+                idx == 0,
+                jax.lax.dynamic_index_in_dim(buf, m_in, 0, keepdims=False),
+                s),
+            x_mb, state)
+        if static_mb is None:
+            y = stage_fn(local, state)
+        else:
+            # this device's in-flight microbatch is t - s; fill/drain
+            # ticks index a clipped slot whose outputs are masked anyway
+            m_cur = jnp.clip(t - idx, 0, M - 1)
+            s_cur = jax.tree.map(
+                lambda buf: jax.lax.dynamic_index_in_dim(
+                    buf, m_cur, 0, keepdims=False), static_mb)
+            y = stage_fn(local, state, s_cur)
+        # the last stage completes microbatch t - (S-1) on this tick
+        m_out = jnp.clip(t - (n_stages - 1), 0, M - 1)
+        take = jnp.logical_and(idx == n_stages - 1, t >= n_stages - 1)
+
+        def write(buf, yl):
+            cur = jax.lax.dynamic_index_in_dim(buf, m_out, 0, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                buf, jnp.where(take, yl, cur), m_out, 0)
+
+        outbuf = jax.tree.map(write, outbuf, y)
+        state = jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm), y)
+        return (state, outbuf), None
+
+    n_ticks = M + n_stages - 1
+    (_, outbuf), _ = jax.lax.scan(tick, (state, outbuf),
+                                  jnp.arange(n_ticks))
+    out = jax.tree.map(
+        lambda buf: jax.lax.psum(
+            jnp.where(idx == n_stages - 1, buf, jnp.zeros_like(buf)), axis),
+        outbuf)
+    return jax.tree.map(
+        lambda l: l.reshape(l.shape[0] * l.shape[1], *l.shape[2:]), out)

@@ -35,6 +35,14 @@ def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in DATA_AXES if a in mesh.shape)
 
 
+def data_par_size(mesh: Mesh) -> int:
+    """Total data-parallel shard count of `mesh` (product of data axes)."""
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
 def _entry_size(mesh: Mesh, entry: Any) -> int:
     if entry is None:
         return 1
@@ -124,6 +132,31 @@ def param_specs(params_abs: Tree) -> Tree:
         params_abs)
 
 
+def stage_stack_specs(specs: Tree, axis: str = "stage") -> Tree:
+    """Shard the leading repeats dim of a layer-stack spec tree over the
+    pipeline `axis`.
+
+    The canonical param layout stacks each pattern position's blocks along
+    a leading `n_repeats` dim; with `n_repeats % n_stages == 0` that dim
+    shards over the ``"stage"`` mesh axis so device s holds exactly its
+    stage's contiguous repeats — the same slices the in-step
+    ``(S, R/S, ...)`` reshape hands to `pipeline_apply*`.  Leading stack
+    dims are never model-sharded (`_MODEL_DIM_BY_NAME` indexes from the
+    right), so the entry is always free.
+    """
+    def s(spec: P) -> P:
+        entries = list(spec)
+        if entries and entries[0] is not None:
+            raise ValueError(f"leading stack dim already sharded: {spec}")
+        if not entries:
+            entries = [None]
+        entries[0] = axis
+        return P(*entries)
+
+    return jax.tree.map(s, specs,
+                        is_leaf=lambda l: isinstance(l, P))
+
+
 def cache_specs(cache_abs: Tree, mesh: Mesh, global_batch: int) -> Tree:
     """Specs for the decode cache tree from `init_cache`.
 
@@ -149,6 +182,14 @@ def cache_specs(cache_abs: Tree, mesh: Mesh, global_batch: int) -> Tree:
         return P(*([None] * ndim))
 
     return jax.tree_util.tree_map_with_path(spec, cache_abs)
+
+
+def sanitize_specs(tree: Tree, specs: Tree, mesh: Mesh) -> Tree:
+    """Clamp a spec tree against concrete leaf shapes and `mesh` (axes the
+    mesh doesn't have, or whose shard count doesn't divide the dim, drop
+    to replicated) — for building out_shardings on reduced meshes."""
+    return jax.tree.map(lambda leaf, s: _sanitize(s, leaf.shape, mesh),
+                        tree, specs)
 
 
 def shard_tree_specs(tree: Tree, specs: Tree, mesh: Mesh) -> Tree:

@@ -24,14 +24,17 @@ import jax
 
 from repro.configs import (SHAPES, get_config, input_specs, list_archs,
                            skip_reason)
+from repro.dist.compression import init_stacked_errors
 from repro.dist.context import sharding_context
-from repro.dist.sharding import (batch_spec, cache_specs, data_axes,
-                                 param_specs, shard_tree_specs)
+from repro.dist.sharding import (batch_spec, cache_specs, data_par_size,
+                                 param_specs, sanitize_specs,
+                                 shard_tree_specs, stage_stack_specs)
 from repro.launch.hloanalysis import analyze_hlo
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models.common import tp_align
 from repro.models.transformer import abstract_params
 from repro.train.optimizer import adamw_init
+from repro.train.pipeline import plan_pipeline
 from repro.train.step import (make_prefill_step, make_serve_step,
                               make_train_step, zero1_specs)
 
@@ -48,29 +51,75 @@ def _named(specs_tree, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree)
 
 
-def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+def _dryrun_mesh(mesh_kind: str, stages: int):
+    """The analysis mesh for one cell.
+
+    "pod"/"multipod": the production TP meshes.  "dp": a pure
+    data-parallel (256, 1) mesh — the baseline for the grad_int8
+    collective-bytes A/B (the int8 reduction island replicates params
+    over the mapped axes, so it needs model_par == 1).  stages > 1: a
+    (stages, 256/stages) ("stage", "data") pipeline mesh.
+    """
+    if stages > 1:
+        data = max(256 // stages, 1)
+        return make_mesh((stages, data), ("stage", "data")), 1
+    if mesh_kind == "dp":
+        return make_mesh((256, 1), ("data", "model")), 1
+    return make_production_mesh(multi_pod=(mesh_kind == "multipod")), 16
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
                zero1: bool = False, grad_accum: int = 1,
-               remat: bool = True, variants: tuple[str, ...] = ()):
+               remat: bool = True, variants: tuple[str, ...] = (),
+               stages: int = 1, n_micro: int = 0):
     """Lower + compile one cell; returns the stats record.
 
     variants: optimization flags ("ar_bf16", "seq_shard",
-    "decode_bf16_scores", ...) consumed by the model layers through the
-    sharding context — the §Perf hillclimb knobs.
+    "decode_bf16_scores", "grad_int8", ...) consumed by the model layers
+    and the train step through the sharding context — the §Perf hillclimb
+    knobs.  stages > 1 lowers the pipelined train step over a
+    ("stage", "data") mesh and reports the stage plan + predicted bubble
+    alongside the roofline terms.
     """
     shape = SHAPES[shape_name]
-    cfg = tp_align(get_config(arch), tp=16)
+    mesh_name = f"pp{stages}" if stages > 1 else mesh_kind
+    if stages > 1 and shape.kind != "train":
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": "pipeline cells are train-only"}
+
+    mesh, tp = _dryrun_mesh(mesh_kind, stages)
+    if "grad_int8" in variants and (tp != 1 or stages > 1):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": "grad_int8 needs model_par == 1 and no pipeline "
+                           "stages (use --mesh dp)"}
+    cfg = tp_align(get_config(arch), tp=tp)
     reason = skip_reason(cfg, shape)
     if reason:
-        return {"arch": arch, "shape": shape_name,
-                "mesh": "multipod" if multi_pod else "pod",
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "skipped": reason}
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
-    daxes = data_axes(mesh)
+    dp = data_par_size(mesh)
+
+    plan = None
+    if stages > 1:
+        micro = n_micro or max(shape.global_batch // max(dp, 1), 1)
+        try:
+            plan = plan_pipeline(cfg, stages, micro,
+                                 global_batch=shape.global_batch,
+                                 seq_len=shape.seq_len, dp=dp)
+        except ValueError as exc:
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "skipped": f"pipeline plan: {exc}"}
 
     params_abs = abstract_params(cfg)
     pspecs = param_specs(params_abs)
+    if plan is not None:
+        pspecs = dict(pspecs)
+        pspecs["layers"] = [stage_stack_specs(s) for s in pspecs["layers"]]
+    # clamp against the concrete mesh so out_shardings stay valid on
+    # meshes without a model axis (pipeline / dp cells)
+    pspecs = sanitize_specs(params_abs, pspecs, mesh)
     params_sds = shard_tree_specs(params_abs, pspecs, mesh)
     specs = input_specs(cfg, shape)
 
@@ -84,6 +133,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 ospecs = {"m": zero1_specs(pspecs, params_abs, mesh),
                           "v": zero1_specs(pspecs, params_abs, mesh),
                           "count": jax.sharding.PartitionSpec()}
+            if "grad_int8" in variants:
+                err_abs = jax.eval_shape(
+                    lambda t: init_stacked_errors(t, dp), params_abs)
+                opt_abs["err"] = err_abs
+                ospecs["err"] = jax.tree.map(
+                    lambda l: batch_spec(mesh, dp, l.ndim), err_abs)
             opt_sds = shard_tree_specs(opt_abs, ospecs, mesh)
             bspecs = {
                 k: batch_spec(mesh, v.shape[0], v.ndim)
@@ -92,7 +147,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             batch_sds = shard_tree_specs(specs, bspecs, mesh)
             z1 = _named(ospecs["m"], mesh) if zero1 else None
             step = make_train_step(cfg, grad_accum=grad_accum, remat=remat,
-                                   zero1_constraints=z1)
+                                   zero1_constraints=z1, pipeline=plan)
             lowered = jax.jit(
                 step,
                 out_shardings=(_named(pspecs, mesh), _named(ospecs, mesh),
@@ -145,7 +200,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     rec = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "multipod" if multi_pod else "pod",
+        "mesh": mesh_name,
         "n_devices": int(n_dev),
         "kind": shape.kind,
         "variants": sorted(variants) + (["zero1"] if zero1 else [])
@@ -182,6 +237,17 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     terms = rec["terms_s"]
     rec["bottleneck"] = max(terms, key=terms.get)
+    if plan is not None:
+        rec["pipeline"] = {
+            "n_stages": plan.n_stages,
+            "n_micro": plan.n_micro,
+            "repeats_per_stage": plan.repeats_per_stage,
+            "block_costs_s": list(plan.block_costs_s),
+            "stage_time_s": plan.stage_time_s,
+            "predicted_bubble": plan.bubble,
+            "ppermute_bytes": float(
+                hlo.coll_bytes_by_op.get("collective-permute", 0.0)),
+        }
     return rec
 
 
@@ -238,9 +304,15 @@ def main() -> None:
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="pod",
-                    choices=["pod", "multipod", "both"])
+                    choices=["pod", "multipod", "both", "dp"],
+                    help="dp = pure data-parallel (256, 1) mesh, the "
+                         "baseline for the grad_int8 collective A/B")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="lower the pipelined train step over a "
+                         "(stages, 256/stages) ('stage', 'data') mesh")
+    ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--variant", action="append", default=[],
@@ -259,17 +331,22 @@ def main() -> None:
         sys.exit(1 if fails else 0)
 
     meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    if args.stages > 1:
+        meshes = meshes[:1]          # _dryrun_mesh ignores mesh_kind then
     for mesh in meshes:
-        rec = lower_cell(args.arch, args.shape, multi_pod=(mesh == "multipod"),
+        rec = lower_cell(args.arch, args.shape, mesh_kind=mesh,
                          zero1=args.zero1, grad_accum=args.grad_accum,
                          remat=not args.no_remat,
-                         variants=tuple(args.variant))
-        tag = f"{args.arch}__{args.shape}__{mesh}"
+                         variants=tuple(args.variant),
+                         stages=args.stages, n_micro=args.microbatch)
+        tag = f"{args.arch}__{args.shape}__{rec['mesh']}"
         suffix = ""
         for v in args.variant:
             suffix += f"__{v}"
         if args.zero1:
             suffix += "__zero1"
+        if args.stages > 1 and args.microbatch:
+            suffix += f"__m{args.microbatch}"
         if args.grad_accum > 1:
             suffix += f"__ga{args.grad_accum}"
         if args.no_remat:

@@ -50,3 +50,34 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
         n *= s
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
                          **_axis_kwargs(len(shape)))
+
+
+def make_train_mesh(n_stages: int = 1, model_par: int = 1,
+                    data_par: int | None = None) -> Mesh:
+    """Training mesh with an optional pipeline ``"stage"`` axis.
+
+    Axes, outermost first: ``("stage", "data", "model")``; the stage axis
+    appears only when n_stages > 1 (so the default mesh is the familiar
+    ``("data", "model")``).  Stage is outermost: stage-to-stage ppermutes
+    are the pipeline's only cross-stage traffic, so they get the slowest
+    links, while data/model collectives stay within a stage's slice.
+    `data_par` defaults to filling the remaining devices.
+    """
+    if n_stages < 1 or model_par < 1:
+        raise ValueError("need n_stages >= 1 and model_par >= 1")
+    n_dev = len(jax.devices())
+    if data_par is None:
+        data_par = max(n_dev // (n_stages * model_par), 1)
+    need = n_stages * model_par * data_par
+    if n_dev < need:
+        raise RuntimeError(
+            f"need {need} devices for (stage={n_stages}, data={data_par}, "
+            f"model={model_par}), have {n_dev} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "before importing jax")
+    shape: tuple[int, ...] = (data_par, model_par)
+    axes: tuple[str, ...] = ("data", "model")
+    if n_stages > 1:
+        shape = (n_stages, *shape)
+        axes = ("stage", *axes)
+    return make_mesh(shape, axes)

@@ -16,13 +16,16 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.data import DataConfig, make_dataset
+from repro.dist.compression import init_stacked_errors
 from repro.dist.context import sharding_context
-from repro.dist.sharding import batch_spec, param_specs, with_shardings
-from repro.launch.mesh import make_mesh
+from repro.dist.sharding import (batch_spec, data_par_size, param_specs,
+                                 stage_stack_specs, with_shardings)
+from repro.launch.mesh import make_mesh, make_train_mesh
 from repro.models.common import tp_align
 from repro.models.transformer import init_params
 from repro.runtime import FTConfig, TrainDriver
 from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.pipeline import plan_pipeline
 from repro.train.step import make_train_step
 
 log = logging.getLogger("repro.train")
@@ -31,24 +34,64 @@ log = logging.getLogger("repro.train")
 def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
           seq_len: int = 128, mesh_shape=None, axes=("data", "model"),
           lr: float = 3e-4, grad_accum: int = 1, remat: bool = True,
-          seed: int = 0):
+          seed: int = 0, stages: int = 1, microbatch: int = 0,
+          flags: tuple = ()):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     n_dev = len(jax.devices())
-    if mesh_shape is None:
-        model_par = 1
-        mesh_shape = (n_dev, model_par)
-    mesh = make_mesh(tuple(mesh_shape), tuple(axes))
+    if mesh_shape is not None:
+        mesh = make_mesh(tuple(mesh_shape), tuple(axes))
+    else:
+        mesh = make_train_mesh(n_stages=stages)
     tp = mesh.shape.get("model", 1)
     if tp > 1:
         cfg = tp_align(cfg, tp)
 
+    plan = None
+    if stages > 1:
+        if "grad_int8" in flags:
+            raise ValueError("grad_int8 and pipeline stages are mutually "
+                             "exclusive (run one A/B at a time)")
+        if "stage" not in mesh.shape or mesh.shape["stage"] != stages:
+            raise ValueError(f"mesh {dict(mesh.shape)} lacks a stage axis "
+                             f"of size {stages}")
+        if tp > 1:
+            raise ValueError("pipeline stages compose with data "
+                             "parallelism only (model_par must be 1)")
+        dp = data_par_size(mesh)
+        n_micro = microbatch or max(global_batch // max(dp, 1), 1)
+        plan = plan_pipeline(cfg, stages, n_micro,
+                             global_batch=global_batch, seq_len=seq_len,
+                             dp=dp)
+        log.info(
+            "pipeline plan: stages=%d micro=%d repeats/stage=%d "
+            "stage_time=%.3gs bubble=%.1f%% block_costs=%s",
+            plan.n_stages, plan.n_micro, plan.repeats_per_stage,
+            plan.stage_time_s, 100 * plan.bubble,
+            ["%.3g" % c for c in plan.block_costs_s])
+
     params = init_params(cfg, jax.random.key(seed))
     pspecs = param_specs(params)
+    if plan is not None:
+        # stage-partition the layer stack: device s holds its repeats only
+        pspecs = dict(pspecs)
+        pspecs["layers"] = [stage_stack_specs(s) for s in pspecs["layers"]]
     params = with_shardings(params, pspecs, mesh)
     opt_state = adamw_init(params)
+    if "grad_int8" in flags:
+        dp = data_par_size(mesh)
+        # build the residuals pre-sharded: out_shardings makes each device
+        # materialize only its (1, ...) slice instead of dp full copies
+        err_specs = jax.tree.map(
+            lambda l: batch_spec(mesh, dp, l.ndim + 1), params)
+        from jax.sharding import NamedSharding
+        err_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), err_specs)
+        opt_state["err"] = jax.jit(
+            lambda p: init_stacked_errors(p, dp),
+            out_shardings=err_sh)(params)
 
     opt = AdamWConfig(lr=lr)
-    step_fn = make_train_step(cfg, opt, grad_accum=grad_accum, remat=remat)
+    step_fn = make_train_step(cfg, opt, grad_accum=grad_accum, remat=remat,
+                              pipeline=plan)
 
     data = make_dataset(DataConfig(
         seq_len=seq_len, global_batch=global_batch,
@@ -66,7 +109,7 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
         if cfg.is_encdec:
             b["frames"] = np.zeros(
                 (B, cfg.enc_frames, cfg.d_model), np.float32)
-        with mesh, sharding_context(mesh):
+        with mesh, sharding_context(mesh, flags=flags):
             b = {k: jax.device_put(
                     np.asarray(v),
                     NamedSharding(mesh, batch_spec(mesh, B,
@@ -79,7 +122,7 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
             params, opt_state, metrics = jitted(params, opt_state, b)
         return (params, opt_state), metrics
 
-    with mesh, sharding_context(mesh):
+    with mesh, sharding_context(mesh, flags=flags):
         jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
     return cfg, mesh, (params, opt_state), wrapped, data
@@ -95,14 +138,26 @@ def main() -> None:
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stages over a 'stage' mesh axis "
+                         "(needs >= stages devices; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="pipeline microbatches per step (default: "
+                         "per-data-shard batch)")
+    ap.add_argument("--grad-int8", action="store_true",
+                    help="int8 error-feedback gradient all-reduce "
+                         "(repro.dist.compression.compressed_psum)")
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
+    flags = ("grad_int8",) if args.grad_int8 else ()
     cfg, mesh, state, step_fn, data = build(
         args.arch, smoke=args.smoke, global_batch=args.global_batch,
-        seq_len=args.seq_len, lr=args.lr, grad_accum=args.grad_accum)
+        seq_len=args.seq_len, lr=args.lr, grad_accum=args.grad_accum,
+        stages=args.stages, microbatch=args.microbatch, flags=flags)
     log.info("arch=%s params=%.1fM mesh=%s", cfg.name,
              cfg.n_params() / 1e6, dict(mesh.shape))
 

@@ -1,0 +1,163 @@
+"""Pipeline-parallel forward/loss for the unified LM.
+
+This is the launch-layer bridge between the canonical stacked-params
+model (`repro.models.transformer`) and the `repro.dist.pipeline`
+executors: the layer stack is partitioned into `n_stages` contiguous
+groups of repeats along the ``"stage"`` mesh axis and driven through the
+microbatched GPipe schedule, while embeddings / final norm / LM head
+stay in the automatically-sharded outer world.
+
+Layer order matches the baseline `forward` exactly: the baseline applies
+all `n_repeats` of pattern position 0, then all of position 1, etc.
+(position-major), so each position's repeats are pipelined
+*independently* — stage s holds repeats ``[s·k, (s+1)·k)`` of every
+position, and sequential composition across stages reproduces the
+baseline scan order op-for-op.  Per microbatch, every op is the same op
+the non-pipelined step runs on the same rows, so ``--stages > 1``
+matches the baseline to numerical tolerance (bf16 reduction tiling is
+the only difference), and MoE auxiliary losses are averaged over
+microbatches to keep the 0.01·aux term comparable.
+
+Inside the shard_map islands, `repro.dist.context.constrain` no-ops on
+its own (it detects the bound manual axes), so the blocks run the exact
+baseline layer code — including custom_vjp backward rules and remat
+re-traces, which are traced outside any context manager a caller could
+hold around the forward call.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+from repro.dist.context import active_mesh
+from repro.dist.pipeline import pipeline_apply_microbatched
+from repro.dist.sharding import data_axes, data_par_size
+from repro.models.common import ModelConfig
+from repro.models.transformer import _apply_block, ce_from_hidden, encode
+from repro.models import layers as L
+
+Array = Any
+
+
+def stage_stack(stacked: Any, n_stages: int) -> Any:
+    """(R, ...) stacked block params → (S, R/S, ...): a free reshape that
+    views the canonical layout as per-stage chunks (leading dim shardable
+    over the ``"stage"`` axis, see `repro.dist.sharding.stage_stack_specs`)."""
+    def r(leaf):
+        R = leaf.shape[0]
+        if R % n_stages:
+            raise ValueError(
+                f"n_repeats={R} not divisible by n_stages={n_stages}")
+        return leaf.reshape(n_stages, R // n_stages, *leaf.shape[1:])
+
+    return jax.tree.map(r, stacked)
+
+
+def _stage_fn(cfg: ModelConfig, spec, remat: bool):
+    """One pipeline stage: scan the local chunk of repeats of one pattern
+    position.  The rotating carry is batch-leading: ``x`` (b, S, d) and
+    ``aux`` (b,); the encoder output for enc-dec archs arrives as the
+    schedule's *static* side input (read locally, never ppermuted)."""
+    def body(enc, carry, p):
+        x, aux = carry["x"], carry["aux"]
+        # `constrain` self-suppresses under the shard_map manual axes, so
+        # the block body is the baseline one, no context games needed
+        x, a = _apply_block(p, spec, cfg, x, enc)
+        return {"x": x, "aux": aux + a / x.shape[0]}, None
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def stage(local, carry, static=None):
+        enc = None if static is None else static["enc"]
+        carry, _ = jax.lax.scan(
+            lambda c, p: body(enc, c, p), carry, local)
+        return carry
+
+    return stage
+
+
+def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
+                      n_stages: int, n_micro: int,
+                      patch_embeds: Array | None = None,
+                      frames: Array | None = None,
+                      remat: bool = False,
+                      axis: str = "stage") -> tuple[Array, Array]:
+    """Pipeline-parallel `forward`: → (hidden (B, S_total, d), aux_loss).
+
+    Must trace inside a `sharding_context` whose mesh carries the `axis`
+    dimension.  Embedding, encoder, final norm (and the loss, in
+    `loss_fn_pipelined`) run in the auto-sharded outer world; only the
+    decoder layer stack runs under shard_map.
+    """
+    mesh = active_mesh()
+    if mesh is None or axis not in mesh.shape:
+        raise ValueError(
+            f"forward_pipelined needs an active mesh with a {axis!r} axis")
+    if mesh.shape[axis] != n_stages:
+        raise ValueError(
+            f"mesh {axis!r} axis is {mesh.shape[axis]}, plan says "
+            f"{n_stages} stages")
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if patch_embeds is not None:
+        px = patch_embeds @ params["patch_proj"]
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+    enc_out = encode(params, cfg, frames) if frames is not None else None
+
+    daxes = data_axes(mesh)
+    bentry = tuple(daxes) if daxes else None
+    carry = {"x": x, "aux": jnp.zeros((x.shape[0],), jnp.float32)}
+    static = None if enc_out is None else {"enc": enc_out}
+
+    for pos, spec in enumerate(cfg.pattern):
+        st = stage_stack(params["layers"][pos], n_stages)
+        stage = _stage_fn(cfg, spec, remat)
+        bspec = lambda t: jax.tree.map(lambda _: P(bentry), t)
+
+        if static is None:
+            def island(st, carry, _stage=stage):
+                return pipeline_apply_microbatched(
+                    _stage, st, carry, n_micro, axis=axis)
+
+            in_specs = (jax.tree.map(lambda _: P(axis), st), bspec(carry))
+            args = (st, carry)
+        else:
+            def island(st, carry, static, _stage=stage):
+                return pipeline_apply_microbatched(
+                    _stage, st, carry, n_micro, axis=axis, static=static)
+
+            in_specs = (jax.tree.map(lambda _: P(axis), st), bspec(carry),
+                        bspec(static))
+            args = (st, carry, static)
+
+        carry = shard_map(
+            island, mesh=mesh, in_specs=in_specs,
+            out_specs=bspec(carry), check_vma=False,
+        )(*args)
+
+    h = L.norm(carry["x"], params["final_norm"], cfg.norm)
+    # per-example aux contributions sum back to one aux value per
+    # (microbatch, data shard) pair; their mean keeps the scale of the
+    # baseline's single full-batch aux
+    aux = carry["aux"].sum() / (n_micro * data_par_size(mesh))
+    return h, aux
+
+
+def loss_fn_pipelined(params: dict, cfg: ModelConfig, batch: dict,
+                      n_stages: int, n_micro: int, ce_chunk: int = 512,
+                      remat: bool = False, axis: str = "stage") -> Array:
+    """`loss_fn` with the layer stack executed as a stage pipeline."""
+    h, aux = forward_pipelined(
+        params, cfg, batch["tokens"], n_stages, n_micro,
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"), remat=remat, axis=axis)
+    return ce_from_hidden(params, cfg, h, batch["labels"],
+                          ce_chunk=ce_chunk) + 0.01 * aux
+
+
+__all__ = ["forward_pipelined", "loss_fn_pipelined", "stage_stack"]

@@ -202,14 +202,11 @@ def logits_from_hidden(params: dict, cfg: ModelConfig, h: Array) -> Array:
     return logits
 
 
-def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
-            ce_chunk: int = 512, remat: bool = False) -> Array:
-    """Next-token CE, chunked over the sequence so (B, chunk, V) is the
-    peak logits footprint (a 256k vocab never materializes (B, S, V))."""
-    h, aux = forward(params, cfg, batch["tokens"],
-                     patch_embeds=batch.get("patch_embeds"),
-                     frames=batch.get("frames"), remat=remat)
-    labels = batch["labels"]
+def ce_from_hidden(params: dict, cfg: ModelConfig, h: Array, labels: Array,
+                   ce_chunk: int = 512) -> Array:
+    """Mean next-token CE from final hidden states, chunked over the
+    sequence so (B, chunk, V) is the peak logits footprint (a 256k vocab
+    never materializes (B, S, V))."""
     if h.shape[1] != labels.shape[1]:          # VLM prefix: loss on tokens
         h = h[:, h.shape[1] - labels.shape[1]:]
     B, S, _ = h.shape
@@ -229,8 +226,17 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
         return tot + chunk_loss(hx, lx), None
 
     total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
-    n_tok = B * S
-    return total / n_tok + 0.01 * aux
+    return total / (B * S)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
+            ce_chunk: int = 512, remat: bool = False) -> Array:
+    """Next-token CE over the full (non-pipelined) forward."""
+    h, aux = forward(params, cfg, batch["tokens"],
+                     patch_embeds=batch.get("patch_embeds"),
+                     frames=batch.get("frames"), remat=remat)
+    return ce_from_hidden(params, cfg, h, batch["labels"],
+                          ce_chunk=ce_chunk) + 0.01 * aux
 
 
 # ------------------------------------------------------------------- decode

@@ -1,0 +1,157 @@
+"""Stage-partition planning for pipeline-parallel training.
+
+MKPipe's Alg. 1 (throughput balancing) picks stage boundaries so the
+bottleneck stage is as fast as possible.  Here the "kernels" are the
+transformer blocks: `estimate_block_costs` prices one block per pattern
+position through the same XLA cost-analysis path the MKPipe stage
+profiler uses (`repro.core.planner._stage_cost`), converts FLOPs/bytes
+into a roofline time, and `plan_pipeline` runs `balance_stages` over the
+per-repeat cost vector to derive the per-stage repeat counts.
+
+Stacked per-stage params require every stage to hold the same number of
+repeats of every position; the planner verifies the balanced partition
+is uniform (true exactly when `n_repeats % n_stages == 0`, since all
+repeats of a position cost the same) and reports the predicted bottleneck
+stage time and fill/drain bubble for the chosen (n_micro, n_stages).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.pipeline import balance_stages, pipeline_bubble_fraction
+from repro.models.common import LayerKind, ModelConfig
+
+log = logging.getLogger("repro.pipeline")
+
+# TPU v5e-like roofline constants (per chip), matching launch/dryrun.
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """A validated stage partition for `make_train_step(pipeline=...)`."""
+    n_stages: int
+    n_micro: int
+    repeats_per_stage: int
+    sizes: tuple[int, ...]            # balance_stages output, repeats/stage
+    block_costs_s: tuple[float, ...]  # per pattern position, one repeat
+    stage_time_s: float               # predicted bottleneck stage time
+    bubble: float                     # analytic fill/drain bubble fraction
+    axis: str = "stage"
+
+
+def _analytic_block_cost(cfg: ModelConfig, pos: int, tokens: int) -> float:
+    """Fallback cost: 6·N_block·tokens FLOPs at roofline peak."""
+    spec = cfg.pattern[pos]
+    d = cfg.d_model
+    n = 0.0
+    if spec.kind in (LayerKind.ATTN, LayerKind.SWA):
+        n += d * (cfg.num_heads * cfg.head_dim) * 2
+        n += d * (cfg.num_kv_heads * cfg.head_dim) * 2
+    else:
+        di = cfg.d_inner
+        n += d * (2 * di + 2 * cfg.ssm_heads * cfg.ssm_state
+                  + cfg.ssm_heads) + di * d
+    if spec.ffn:
+        if spec.moe:
+            n += 3 * d * cfg.moe_d_ff * max(cfg.experts_per_tok, 1)
+        else:
+            n += (3 if cfg.act == "silu" else 2) * d * cfg.d_ff
+    return 6.0 * n * tokens / PEAK_FLOPS
+
+
+def estimate_block_costs(cfg: ModelConfig, batch: int, seq: int
+                         ) -> list[float]:
+    """Per-pattern-position cost (seconds) of one block's forward at
+    (batch, seq): XLA cost analysis of the lowered block (the stage
+    profiler's FLOP/byte estimates) folded through the roofline,
+    falling back to the analytic 6·N·D estimate when compilation of the
+    probe is unavailable."""
+    from repro.models.transformer import _apply_block, _init_block
+
+    costs = []
+    x_sds = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    for pos, spec in enumerate(cfg.pattern):
+        try:
+            p_abs = jax.eval_shape(
+                functools.partial(_init_block, cfg=cfg, spec=spec), key_sds)
+            fn = lambda p, x, _s=spec: _apply_block(p, _s, cfg, x)[0]
+            compiled = jax.jit(fn).lower(p_abs, x_sds).compile()
+            ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):  # jax<=0.4 returns [dict]
+                ca = ca[0] if ca else {}
+            flops = float(ca.get("flops", 0.0))
+            bts = float(ca.get("bytes accessed", 0.0))
+            cost = max(flops / PEAK_FLOPS, bts / HBM_BW)
+            if cost <= 0.0:
+                raise ValueError("empty cost analysis")
+        except Exception as exc:               # pragma: no cover - fallback
+            log.debug("block cost probe failed at pos %d (%s); "
+                      "using analytic estimate", pos, exc)
+            cost = _analytic_block_cost(cfg, pos, batch * seq)
+        costs.append(cost)
+    return costs
+
+
+def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
+                  global_batch: int, seq_len: int, dp: int = 1,
+                  axis: str = "stage",
+                  block_costs: list[float] | None = None) -> PipelinePlan:
+    """Validate and price an (n_stages, n_micro) pipeline for `cfg`.
+
+    Raises ValueError when the partition can't produce stacked per-stage
+    params (n_repeats % n_stages != 0) or the per-data-shard batch can't
+    be microbatched (global_batch/dp % n_micro != 0).
+    """
+    if n_stages < 1:
+        raise ValueError(f"need n_stages >= 1, got {n_stages}")
+    if n_micro < 1:
+        raise ValueError(f"need n_micro >= 1, got {n_micro}")
+    if cfg.n_repeats < n_stages:
+        raise ValueError(
+            f"{cfg.name}: n_repeats={cfg.n_repeats} < n_stages={n_stages}")
+    if global_batch % dp:
+        raise ValueError(
+            f"global_batch={global_batch} not divisible by dp={dp}")
+    local_batch = global_batch // dp
+    if local_batch % n_micro:
+        raise ValueError(
+            f"per-shard batch {local_batch} not divisible by "
+            f"n_micro={n_micro}")
+
+    mb = max(local_batch // n_micro, 1)
+    costs = (list(block_costs) if block_costs is not None
+             else estimate_block_costs(cfg, mb, seq_len))
+    if len(costs) != len(cfg.pattern):
+        raise ValueError(
+            f"got {len(costs)} block costs for {len(cfg.pattern)} positions")
+
+    # One "layer" of the partition is one repeat of the full pattern: all
+    # positions advance stage-by-stage together (stage s holds repeats
+    # [s·k, (s+1)·k) of every position), so a repeat's cost is the sum of
+    # its blocks.  Alg. 1 then splits the repeat chain.
+    per_repeat = [sum(costs)] * cfg.n_repeats
+    sizes = balance_stages(per_repeat, n_stages)
+    if len(set(sizes)) != 1:
+        raise ValueError(
+            f"{cfg.name}: balanced partition {sizes} is not uniform — "
+            f"stacked per-stage params need n_repeats={cfg.n_repeats} "
+            f"divisible by n_stages={n_stages}")
+    k = sizes[0]
+    stage_time = k * sum(costs)
+    return PipelinePlan(
+        n_stages=n_stages, n_micro=n_micro, repeats_per_stage=k,
+        sizes=tuple(sizes), block_costs_s=tuple(costs),
+        stage_time_s=stage_time,
+        bubble=pipeline_bubble_fraction(n_micro, n_stages), axis=axis)
+
+
+__all__ = ["PipelinePlan", "estimate_block_costs", "plan_pipeline"]

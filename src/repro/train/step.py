@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.dist.context import active_mesh, flag
 from repro.models.common import ModelConfig
 from repro.models.transformer import decode_step, loss_fn
 from .optimizer import AdamWConfig, adamw_init, adamw_update
@@ -44,17 +45,109 @@ def zero1_specs(param_specs_tree: Any, params_tree: Any, mesh: Mesh,
     return jax.tree.map(z, param_specs_tree, params_tree)
 
 
+def _compressed_grads(loss_of, params, err, batch, mesh):
+    """int8 error-feedback gradient reduction over the data axes.
+
+    A shard_map island replaces GSPMD's implicit f32 gradient all-reduce:
+    each data shard differentiates its local batch slice, quantizes
+    grad+residual to int8 (`compressed_psum`), and the all-reduce runs on
+    the dequantized-but-int8-rounded values — the dry-run roofline shows
+    the collective-bytes A/B.  `err` leaves carry a leading shard dim
+    (see `init_stacked_errors`); params must not be model-sharded (the
+    island replicates them over the mapped axes).
+    """
+    from repro.dist.compat import shard_map
+    from repro.dist.compression import compressed_psum
+    from repro.dist.sharding import data_axes, data_par_size
+
+    if mesh.shape.get("model", 1) != 1:
+        raise ValueError("grad_int8 requires model parallelism = 1 "
+                         "(the reduction island replicates params)")
+    daxes = data_axes(mesh)
+    if not daxes:
+        raise ValueError("grad_int8 needs a data axis in the mesh")
+    dp = data_par_size(mesh)
+    for k, v in batch.items():
+        if v.shape[0] % dp:
+            raise ValueError(
+                f"grad_int8: batch leaf {k!r} dim 0 ({v.shape[0]}) must be "
+                f"a multiple of the data-parallel shard count {dp}")
+
+    def island(params, err, batch):
+        local_err = jax.tree.map(lambda l: l[0], err)
+        # `constrain` self-suppresses under the manual axes, so loss_of is
+        # the baseline loss on this shard's slice
+        loss, g = jax.value_and_grad(loss_of)(params, batch)
+        pairs = jax.tree.map(
+            lambda gl, el: compressed_psum(gl, daxes, el), g, local_err)
+        is_pair = lambda t: isinstance(t, tuple)
+        g = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+        new_err = jax.tree.map(lambda t: t[1][None], pairs, is_leaf=is_pair)
+        loss = jax.lax.pmean(loss, daxes)
+        return loss, g, new_err
+
+    bspec = lambda l: P(daxes, *([None] * (jnp.ndim(l) - 1)))
+    return shard_map(
+        island, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), params),
+                  jax.tree.map(lambda _: P(daxes), err),
+                  jax.tree.map(bspec, batch)),
+        out_specs=(P(), jax.tree.map(lambda _: P(), params),
+                   jax.tree.map(lambda _: P(daxes), err)),
+        check_vma=False,
+    )(params, err, batch)
+
+
 def make_train_step(cfg: ModelConfig, opt: AdamWConfig | None = None,
                     grad_accum: int = 1, remat: bool = True,
-                    zero1_constraints: Any = None):
-    """Returns train_step(params, opt_state, batch) → (p, s, metrics)."""
-    opt = opt or AdamWConfig()
+                    zero1_constraints: Any = None, pipeline: Any = None):
+    """Returns train_step(params, opt_state, batch) → (p, s, metrics).
 
-    def loss_of(params, batch):
-        return loss_fn(params, cfg, batch, remat=remat)
+    pipeline: an optional `repro.train.pipeline.PipelinePlan`; with
+    n_stages > 1 the loss runs the layer stack through the microbatched
+    GPipe schedule over the ``"stage"`` mesh axis (`--stages 1` keeps the
+    exact non-pipelined step, bit-for-bit).
+    """
+    opt = opt or AdamWConfig()
+    pipelined = pipeline is not None and pipeline.n_stages > 1
+    if pipelined and grad_accum > 1:
+        raise ValueError("pipeline microbatching replaces grad_accum; "
+                         "use --microbatch, not both")
+
+    if pipelined:
+        from repro.models.pipeline import loss_fn_pipelined
+
+        def loss_of(params, batch):
+            return loss_fn_pipelined(
+                params, cfg, batch, pipeline.n_stages, pipeline.n_micro,
+                remat=remat, axis=pipeline.axis)
+    else:
+        def loss_of(params, batch):
+            return loss_fn(params, cfg, batch, remat=remat)
 
     def train_step(params, opt_state, batch):
-        if grad_accum > 1:
+        # trace-time: the grad_int8 context flag routes the gradient
+        # reduction through the int8 error-feedback island
+        use_int8 = (flag("grad_int8") and isinstance(opt_state, dict)
+                    and "err" in opt_state)
+        if flag("grad_int8") and not use_int8:
+            raise ValueError("grad_int8 flag set but opt_state has no "
+                             "'err' residuals (see init_stacked_errors)")
+        new_err = None
+        if use_int8:
+            if pipelined:
+                raise ValueError("grad_int8 and pipeline stages are "
+                                 "mutually exclusive")
+            if grad_accum > 1:
+                raise ValueError("grad_int8 with grad_accum > 1 is not "
+                                 "supported")
+            mesh = active_mesh()
+            if mesh is None:
+                raise ValueError("grad_int8 needs an active sharding "
+                                 "context mesh")
+            loss, grads, new_err = _compressed_grads(
+                loss_of, params, opt_state["err"], batch, mesh)
+        elif grad_accum > 1:
             # microbatch software pipeline (GLOBALMEM-plan analogue)
             def micro(carry, mb):
                 loss_acc, grad_acc = carry
@@ -74,8 +167,16 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig | None = None,
         else:
             loss, grads = jax.value_and_grad(loss_of)(params, batch)
 
+        moments = {k: v for k, v in opt_state.items() if k != "err"}
         new_params, new_state, metrics = adamw_update(
-            opt, grads, opt_state, params)
+            opt, grads, moments, params)
+        if new_err is not None:
+            new_state["err"] = new_err
+        elif "err" in opt_state:
+            # flag off but residuals present (e.g. resuming a grad_int8
+            # checkpoint without the flag): carry them through untouched
+            # so the state pytree keeps its structure
+            new_state["err"] = opt_state["err"]
         if zero1_constraints is not None:
             new_state = dict(new_state)
             new_state["m"] = jax.lax.with_sharding_constraint(
