@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist bench bench-smoke quickstart
+.PHONY: test test-dist bench bench-smoke quickstart docs-check
 
 # tier-1: the fast single-device suite (multi-device cases run in
 # subprocesses that set their own XLA_FLAGS, so this works on 1 CPU)
@@ -25,3 +25,7 @@ bench-smoke:
 
 quickstart:
 	$(PY) examples/quickstart.py
+
+# verify every relative link in *.md resolves (stdlib only, no install)
+docs-check:
+	$(PY) tools/check_links.py

@@ -1,29 +1,45 @@
-"""Measured vs. predicted pipeline fill/drain bubble (paper Fig. 5 style
-decision validation, applied to the GPipe schedule).
+"""Measured vs. predicted pipeline bubble AND peak activation memory for
+both schedules (GPipe and 1F1B) — paper Fig. 5 style decision validation
+applied to the fused train executor.
 
 For each (n_micro, n_stages) point, an `n_stages`-device subprocess runs
-the microbatched `pipeline_apply_microbatched` schedule and the plain
-sequential composition of the same stages on the same total batch, and
-times both.  Every device computes on every tick of the schedule — the
-(M + S - 1) · S device-tick area — while the sequential baseline does the
-useful M · S ticks' work, so on host devices that share the same cores
-the wall-clock ratio exposes the bubble:
+`pipeline_train_microbatched` (forward + backward + per-microbatch loss
+in one step program) under both schedules, plus the plain sequential
+composition of the same stages on the same total batch, and reports:
 
-    measured_bubble = 1 - t_seq / t_pipe     ≈ (S-1) / (M + S-1)
+- **bubble**: wall-clock of the fused step vs the sequential step.  On
+  fake host devices that serialize onto shared cores, wall-clock tracks
+  the *device-tick area*, not the critical path, so the schedule runs
+  with ``busy_idle=True`` (idle slots execute a discarded forward) and
 
-which is exactly `pipeline_bubble_fraction(M, S)`.  Subprocesses are
-used because the device count must be fixed before jax initializes
-(tests/README.md, "the fake-host-device trick").
+      measured_bubble = 1 - t_seq / t_pipe     ≈ (S-1) / (M + S-1)
 
-Caveats of the host-device emulation: the schedule's masking/injection
-copies add a per-tick overhead proportional to the activation size, and
-the XLA CPU backend partially parallelizes "devices" over host cores, so
-the measured bubble carries a constant offset above the analytic value.
-The comparison to make is *across* points: measured decreases
-monotonically with n_micro at fixed n_stages and ranks the points the
-way the model predicts — the paper-style decision-validation signal.
+  which is `pipeline_bubble_fraction(M, S)` — the same formula for both
+  schedules, and the measured values confirm they track each other.
+- **peak memory**: `temp_size_in_bytes` from XLA's `memory_analysis` of
+  the compiled fused step.  The schedules differ here: the activation
+  stash is sized by `pipeline_peak_inflight` — M slots for GPipe,
+  min(M, S) for 1F1B — so at M > S the 1F1B step's measured temp bytes
+  sit strictly below GPipe's, by ≈ (M - min(M, S)) · microbatch bytes
+  (`pipeline_peak_activation_bytes` is the analytic column printed next
+  to it).
 
-Rows: ``bubble_m{M}_s{S}, t_pipe_us, predicted=..;measured=..``.
+Caveats of the host-device emulation (see docs/pipeline-schedules.md):
+the per-tick masking/stash copies add overhead proportional to the
+activation size, backward micro-steps cost ~2× forward ones, and the XLA
+CPU backend partially parallelizes "devices" over host cores — so the
+measured bubble carries a constant offset above the analytic value.  The
+comparison to make is *across* points (measured decreases monotonically
+with n_micro at fixed n_stages, and ranks the points the way the model
+predicts) and *between* the schedules' memory columns at fixed (M, S).
+
+Subprocesses are used because the device count must be fixed before jax
+initializes (tests/README.md, "the fake-host-device trick").  Numerics
+are asserted inside each subprocess: fused loss and gradients match the
+sequential reference for both schedules.
+
+Rows: ``bubble_{schedule}_m{M}_s{S}, t_pipe_us,
+predicted=..;measured=..;peak_temp_mb=..;peak_act_analytic_mb=..``.
 """
 from __future__ import annotations
 
@@ -34,7 +50,8 @@ import textwrap
 
 from .common import csv_row
 
-# (n_micro, n_stages) sweep: fill/drain-dominated → amortized
+# (n_micro, n_stages) sweep: fill/drain-dominated → amortized; the two
+# M > S points are where 1F1B's memory bound bites
 POINTS = [(1, 4), (2, 4), (4, 4), (8, 4), (8, 2)]
 
 SCRIPT = textwrap.dedent("""
@@ -45,10 +62,10 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.dist.compat import shard_map
-    from repro.dist.pipeline import pipeline_apply_microbatched
+    from repro.dist.pipeline import pipeline_train_microbatched
     from repro.launch.mesh import make_mesh
 
-    B, D, REP = 2048, 768, 2
+    B, D, REP = 4096, 384, 2
     rng = np.random.default_rng(0)
     w = jnp.asarray(rng.normal(size=(S, REP, D, D)) * 0.1, jnp.float32)
     xs = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
@@ -59,18 +76,29 @@ SCRIPT = textwrap.dedent("""
             x = jnp.tanh(x @ p["w"][r])
         return {"x": x}
 
+    def loss_fn(c):
+        return jnp.sum(c["x"] ** 2)
+
     mesh = make_mesh((S,), ("stage",))
-    pipe = jax.jit(shard_map(
-        lambda w, xs: pipeline_apply_microbatched(
-            stage_fn, {"w": w}, {"x": xs}, M)["x"],
-        mesh=mesh, in_specs=(P("stage"), P()), out_specs=P(),
-        check_vma=False))
+
+    def make(sched):
+        return jax.jit(shard_map(
+            lambda w, xs: pipeline_train_microbatched(
+                stage_fn, {"w": w}, {"x": xs}, loss_fn, M,
+                schedule=sched, busy_idle=True),
+            mesh=mesh, in_specs=(P("stage"), P()),
+            out_specs=(P(), {"w": P("stage")}), check_vma=False))
 
     def seq_fn(w, xs):
-        for s in range(S):
-            xs = stage_fn({"w": w[s]}, {"x": xs})["x"]
-        return xs
-    seq = jax.jit(seq_fn)
+        total = jnp.zeros((), jnp.float32)
+        xmb = xs.reshape(M, B // M, D)
+        for m in range(M):
+            c = {"x": xmb[m]}
+            for s in range(S):
+                c = stage_fn({"w": w[s]}, c)
+            total = total + loss_fn(c)
+        return total
+    seq = jax.jit(jax.value_and_grad(seq_fn))
 
     def timed(f, *a):
         jax.block_until_ready(f(*a))              # compile + warm
@@ -81,16 +109,28 @@ SCRIPT = textwrap.dedent("""
             ts.append(time.perf_counter() - t0)
         return min(ts)
 
-    t_pipe = timed(pipe, w, xs)
-    t_seq = timed(seq, w, xs)
-    out = np.asarray(pipe(w, xs))
-    ref = np.asarray(seq(w, xs))
-    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
-    print(json.dumps({"t_pipe": t_pipe, "t_seq": t_seq}))
+    l_ref, g_ref = seq(w, xs)
+    out = {"mb_bytes": (B // M) * D * 4, "t_seq": timed(seq, w, xs)}
+    for sched in ("gpipe", "1f1b"):
+        # AOT-compile once; the same executable serves the numerics
+        # check, the timed calls, and memory_analysis
+        step = make(sched).lower(w, xs).compile()
+        loss, grads = step(w, xs)
+        np.testing.assert_allclose(float(loss), float(l_ref), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(grads["w"]),
+                                   np.asarray(g_ref),
+                                   rtol=1e-3, atol=1e-5)
+        ma = step.memory_analysis()
+        out[sched] = {
+            "t_pipe": timed(step, w, xs),
+            "temp_bytes": (None if ma is None
+                           else int(ma.temp_size_in_bytes)),
+        }
+    print(json.dumps(out))
 """)
 
 
-def measure(n_micro: int, n_stages: int, timeout: int = 600) -> dict:
+def measure(n_micro: int, n_stages: int, timeout: int = 900) -> dict:
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT, str(n_micro), str(n_stages)],
         capture_output=True, text=True, timeout=timeout)
@@ -102,17 +142,34 @@ def measure(n_micro: int, n_stages: int, timeout: int = 600) -> dict:
 
 
 def run() -> list[str]:
-    from repro.dist.pipeline import pipeline_bubble_fraction
+    from repro.dist.pipeline import (pipeline_bubble_fraction,
+                                     pipeline_peak_activation_bytes)
 
     rows = []
     for n_micro, n_stages in POINTS:
         t = measure(n_micro, n_stages)
         predicted = pipeline_bubble_fraction(n_micro, n_stages)
-        measured = max(0.0, 1.0 - t["t_seq"] / t["t_pipe"])
-        rows.append(csv_row(
-            f"bubble_m{n_micro}_s{n_stages}", t["t_pipe"] * 1e6,
-            f"predicted={predicted:.3f};measured={measured:.3f};"
-            f"t_seq_us={t['t_seq'] * 1e6:.0f}"))
+        for sched in ("gpipe", "1f1b"):
+            r = t[sched]
+            measured = max(0.0, 1.0 - t["t_seq"] / r["t_pipe"])
+            peak = pipeline_peak_activation_bytes(
+                n_micro, n_stages, sched, t["mb_bytes"])
+            temp = r["temp_bytes"]
+            rows.append(csv_row(
+                f"bubble_{sched}_m{n_micro}_s{n_stages}",
+                r["t_pipe"] * 1e6,
+                f"predicted={predicted:.3f};measured={measured:.3f};"
+                f"peak_temp_mb="
+                f"{'n/a' if temp is None else '%.2f' % (temp / 1e6)};"
+                f"peak_act_analytic_mb={peak / 1e6:.2f};"
+                f"t_seq_us={t['t_seq'] * 1e6:.0f}"))
+        g, f = t["gpipe"]["temp_bytes"], t["1f1b"]["temp_bytes"]
+        if g is not None and f is not None and n_micro > n_stages:
+            verdict = "LOWER" if f < g else "NOT-LOWER"
+            rows.append(csv_row(
+                f"peakmem_1f1b_vs_gpipe_m{n_micro}_s{n_stages}", 0.0,
+                f"gpipe_mb={g / 1e6:.2f};f1b_mb={f / 1e6:.2f};"
+                f"verdict={verdict}"))
     return rows
 
 

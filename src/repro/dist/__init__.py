@@ -6,8 +6,17 @@ the model/launch/bench layers.
 - ``sharding``     PartitionSpec construction for batches, params and decode
                    caches (`batch_spec`, `param_specs`, `cache_specs`,
                    `shard_tree_specs`, `with_shardings`, `data_axes`)
-- ``pipeline``     pipeline parallelism: Alg.1 stage balancing + a shard_map
-                   stage executor (`balance_stages`, `pipeline_apply`)
+- ``pipeline``     pipeline parallelism: Alg.1 stage balancing
+                   (`balance_stages`), the analytic bubble and
+                   peak-activation models (`pipeline_bubble_fraction`,
+                   `pipeline_peak_inflight`), step programs
+                   (`make_step_program`, `program_peak_inflight`), and
+                   three shard_map executors — `pipeline_apply` (lock-step
+                   numerics oracle), `pipeline_apply_microbatched`
+                   (GPipe/1F1B forward, differentiable), and
+                   `pipeline_train_microbatched` (fused fwd+bwd with the
+                   loss inside the schedule).  See
+                   docs/pipeline-schedules.md.
 - ``compression``  int8 gradient compression with error feedback
                    (`quantize_int8`, `compressed_psum`)
 - ``compat``       shims over jax API drift (`shard_map`)
@@ -16,6 +25,8 @@ Every entry point degrades to an identity / sensible default outside a
 `sharding_context`, so single-device code paths never pay for the substrate.
 """
 from .context import constrain, flag, moe_groups, sharding_context
+from .pipeline import (SCHEDULES, balance_stages, pipeline_bubble_fraction,
+                       pipeline_peak_activation_bytes, pipeline_peak_inflight)
 from .sharding import (batch_spec, cache_specs, data_axes, param_specs,
                        shard_tree_specs, with_shardings)
 
@@ -23,4 +34,6 @@ __all__ = [
     "sharding_context", "constrain", "flag", "moe_groups",
     "data_axes", "batch_spec", "param_specs", "cache_specs",
     "shard_tree_specs", "with_shardings",
+    "SCHEDULES", "balance_stages", "pipeline_bubble_fraction",
+    "pipeline_peak_inflight", "pipeline_peak_activation_bytes",
 ]

@@ -20,7 +20,16 @@ _SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
 
 def shard_map(f: Any, *, mesh: Any, in_specs: Any, out_specs: Any,
               check_vma: bool | None = None, **kwargs: Any) -> Any:
-    """`jax.shard_map` with the `check_vma` kwarg on any jax version."""
+    """`jax.shard_map` with the `check_vma` kwarg on any jax version.
+
+    `f` runs per device on the locally-sharded arguments; `in_specs` /
+    `out_specs` are PartitionSpec trees matching the argument/result
+    trees (a `P(axis, ...)` entry maps that dim over `mesh`'s `axis`,
+    `None` replicates).  `check_vma=False` maps to `check_rep=False` on
+    jax 0.4.x — the setting every executor here uses, since the bodies
+    mix collectives the replication checker can't type.  Returns the
+    wrapped callable, exactly like `jax.shard_map`.
+    """
     if check_vma is not None:
         key = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS else "check_rep"
         kwargs[key] = check_vma

@@ -30,6 +30,8 @@ def quantize_int8(x: jax.Array, axis=None, keepdims: bool = False
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Invert `quantize_int8`: int8 values × their (broadcastable) f32
+    scale → f32 approximation of the original tensor."""
     return q.astype(jnp.float32) * scale
 
 

@@ -72,6 +72,8 @@ def flag(name: str) -> bool:
 
 
 def active_flags() -> frozenset[str]:
+    """All flags of the innermost active `sharding_context` (empty
+    outside any context)."""
     return _STATE.flags
 
 
@@ -87,7 +89,13 @@ def _axis_size(mesh: Mesh, entry: Any) -> int:
 
 
 def resolve_axis(axis: str | None, mesh: Mesh) -> Any:
-    """Logical axis → PartitionSpec entry for `mesh` (None if absent)."""
+    """Logical axis → PartitionSpec entry for `mesh` (None if absent).
+
+    ``"dp"`` resolves to the tuple of data axes `mesh` actually has
+    (e.g. ``("pod", "data")`` on a multi-pod mesh), ``"tp"`` to
+    ``"model"``, and any other name to itself when present — so the
+    returned entry can be placed directly in a `PartitionSpec`.
+    """
     if axis is None:
         return None
     if axis == "dp":

@@ -13,6 +13,20 @@ passed stage-to-stage through collectives, and the final activations come
 back replicated.  It is the numerics oracle for pipeline placement (every
 stage computes every tick; scheduling efficiency is modeled separately by
 `pipeline_bubble_fraction`).
+
+Scheduling (see docs/pipeline-schedules.md for diagrams and formulas):
+
+- `pipeline_apply_microbatched(schedule="gpipe"|"1f1b")` — the
+  microbatched forward executor; GPipe differentiates through the scan,
+  1F1B attaches a custom VJP whose backward is an explicit step program
+  with a stash/pop activation buffer.
+- `make_step_program` / `program_peak_inflight` — the statically
+  unrolled per-tick (op, microbatch) schedule and its stash-occupancy
+  simulator.
+- `pipeline_train_microbatched` — the fused forward+backward executor
+  (loss inside the schedule) that realizes 1F1B's min(M, S) activation
+  bound; `pipeline_bubble_fraction` and `pipeline_peak_inflight` /
+  `pipeline_peak_activation_bytes` are the matching analytic models.
 """
 from __future__ import annotations
 
@@ -56,11 +70,181 @@ def balance_stages(times: Sequence[float], n_stages: int) -> list[int]:
     return sizes[::-1]
 
 
+SCHEDULES = ("gpipe", "1f1b")
+
+
 def pipeline_bubble_fraction(n_micro: int, n_stages: int) -> float:
-    """GPipe fill/drain bubble: (S-1) / (M + S-1) of device-ticks idle."""
+    """Analytic fill/drain bubble: (S-1) / (M + S-1) of device-ticks idle.
+
+    The formula holds for *both* schedules (GPipe and 1F1B): with M
+    microbatches over S stages, either step program spans 2·(M + S - 1)
+    ticks of which 2·M per stage are useful — the schedules differ in
+    *peak activation memory* (`pipeline_peak_inflight`), not in bubble.
+    """
     if n_micro < 1 or n_stages < 1:
         raise ValueError("need n_micro >= 1 and n_stages >= 1")
     return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_peak_inflight(n_micro: int, n_stages: int,
+                           schedule: str = "gpipe") -> int:
+    """Peak in-flight microbatches a stage must stash, by schedule.
+
+    A stage holds one stashed activation per microbatch whose forward it
+    has run (or received) but whose backward it has not yet retired:
+
+    - ``"gpipe"``: every forward completes before any backward starts, so
+      the stash peaks at **M** on every stage;
+    - ``"1f1b"``: stage s starts draining after min(M, S-s) warmup
+      forwards and then strictly alternates forward/backward, bounding its
+      stash at min(M, S-s) — **min(M, S)** in the worst case (stage 0),
+      independent of the microbatch count.
+
+    Returns the worst-case stage's count; multiply by the per-microbatch
+    activation bytes for a peak-memory estimate
+    (`pipeline_peak_activation_bytes`).
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
+    if n_micro < 1 or n_stages < 1:
+        raise ValueError("need n_micro >= 1 and n_stages >= 1")
+    if schedule == "gpipe":
+        return n_micro
+    return min(n_micro, n_stages)
+
+
+def pipeline_peak_activation_bytes(n_micro: int, n_stages: int,
+                                   schedule: str,
+                                   microbatch_bytes: float) -> float:
+    """Analytic peak activation-stash bytes per stage device:
+    `pipeline_peak_inflight` × the per-microbatch activation size (the
+    bytes of one microbatch's stage-boundary activations, e.g.
+    mb · seq · d_model · itemsize for the residual stream)."""
+    return pipeline_peak_inflight(n_micro, n_stages, schedule) \
+        * float(microbatch_bytes)
+
+
+# ------------------------------------------------------- step programs
+# One pipeline tick = one stage executing one micro-step (a forward or a
+# backward of one microbatch) while activations ppermute stage s → s+1
+# and cotangents ppermute s → s-1.  A *step program* fixes, per tick and
+# per stage, which micro-step runs — the statically unrolled schedule the
+# executors scan over.
+PIPE_IDLE, PIPE_FWD, PIPE_BWD = 0, 1, 2
+
+
+def make_step_program(n_micro: int, n_stages: int,
+                      schedule: str = "1f1b") -> list[list[tuple[int, int]]]:
+    """Build the per-tick step program for a schedule.
+
+    Returns a list over ticks; each tick is a list over stages of
+    ``(op, m)`` with op ∈ {PIPE_IDLE, PIPE_FWD, PIPE_BWD} and m the
+    microbatch index (0 for idle slots).  Both schedules span exactly
+    2·(M + S - 1) ticks — same bubble — and satisfy, by construction:
+
+    - F(s, m) runs ≥ 1 tick after F(s-1, m) (activations arrive by ring
+      ppermute with one tick of latency);
+    - B(s, m) runs exactly 1 tick after B(s+1, m) (cotangents arrive the
+      tick they are consumed, so no cotangent buffering is needed);
+    - B(S-1, m) runs ≥ 1 tick after F(S-1, m).
+
+    GPipe: all forwards (stage s runs F(m) at tick s + m), then all
+    backwards (B(m) at tick (M+S-1) + m + (S-1-s)).  1F1B: stage s runs
+    min(M, S-s) warmup forwards back-to-back from tick s, then strictly
+    alternates backward/forward — F(s, m) at tick 2m + s once steady,
+    B(s, m) at tick 2S-1-s + 2m — so its stash never holds more than
+    min(M, S-s) microbatches (`pipeline_peak_inflight`).
+    """
+    M, S = int(n_micro), int(n_stages)
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
+    if M < 1 or S < 1:
+        raise ValueError("need n_micro >= 1 and n_stages >= 1")
+    T = 2 * (M + S - 1)
+    prog = [[(PIPE_IDLE, 0)] * S for _ in range(T)]
+
+    def put(t, s, op, m):
+        assert prog[t][s][0] == PIPE_IDLE, (t, s, prog[t][s])
+        prog[t][s] = (op, m)
+
+    for s in range(S):
+        warm = min(M, S - s)
+        for m in range(M):
+            if schedule == "gpipe":
+                put(s + m, s, PIPE_FWD, m)
+                put((M + S - 1) + m + (S - 1 - s), s, PIPE_BWD, m)
+            else:
+                put(s + m if m < warm else 2 * m + s, s, PIPE_FWD, m)
+                put(2 * S - 1 - s + 2 * m, s, PIPE_BWD, m)
+    _check_program(prog, M, S)
+    return prog
+
+
+def _check_program(prog, n_micro: int, n_stages: int) -> None:
+    """Validate a step program's dataflow (see `make_step_program`)."""
+    f_tick: dict = {}
+    b_tick: dict = {}
+    for t, row in enumerate(prog):
+        assert len(row) == n_stages
+        for s, (op, m) in enumerate(row):
+            if op == PIPE_FWD:
+                assert (s, m) not in f_tick
+                f_tick[(s, m)] = t
+            elif op == PIPE_BWD:
+                assert (s, m) not in b_tick
+                b_tick[(s, m)] = t
+    for s in range(n_stages):
+        for m in range(n_micro):
+            assert (s, m) in f_tick and (s, m) in b_tick, (s, m)
+            if s > 0:
+                assert f_tick[(s, m)] >= f_tick[(s - 1, m)] + 1, (s, m)
+            if s < n_stages - 1:
+                assert b_tick[(s, m)] == b_tick[(s + 1, m)] + 1, (s, m)
+            else:
+                assert b_tick[(s, m)] >= f_tick[(s, m)] + 1, (s, m)
+
+
+def program_peak_inflight(prog, n_stages: int) -> int:
+    """Peak live stash *slot span* over all stages of a step program.
+
+    An entry (s, m) becomes live when the stage-s stash slot for
+    microbatch m is written — at F(s, m) on stage 0 (injection), at
+    F(s-1, m) + 1 otherwise (ppermute arrival) — and is retired by
+    B(s, m).  The executors key slots by ``m % K``; collisions are
+    impossible iff K ≥ the peak span max(live) - min(live) + 1, which is
+    what this returns (for the programs built here it equals
+    `pipeline_peak_inflight`).
+    """
+    f_tick: dict = {}
+    b_tick: dict = {}
+    for t, row in enumerate(prog):
+        for s, (op, m) in enumerate(row):
+            if op == PIPE_FWD:
+                f_tick[(s, m)] = t
+            elif op == PIPE_BWD:
+                b_tick[(s, m)] = t
+    peak = 0
+    for s in range(n_stages):
+        events = []       # (tick, +1 push m / -1 pop m)
+        for (es, m), t in f_tick.items():
+            if es == s - 1:
+                events.append((t + 1, 1, m))
+            elif s == 0 and es == 0:
+                events.append((t, 1, m))
+        for (es, m), t in b_tick.items():
+            if es == s:
+                events.append((t, -1, m))
+        live: set = set()
+        # pushes (arrivals) land before the tick's pop (the executors
+        # apply ppermute arrivals first, then run the event)
+        for t, kind, m in sorted(events, key=lambda e: (e[0], -e[1])):
+            if kind == 1:
+                live.add(m)
+                if live:
+                    peak = max(peak, max(live) - min(live) + 1)
+            else:
+                live.discard(m)
+    return peak
 
 
 def pipeline_apply(stage_fn: Callable[[Tree, Any], Any], stage_params: Tree,
@@ -87,9 +271,28 @@ def pipeline_apply(stage_fn: Callable[[Tree, Any], Any], stage_params: Tree,
 def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
                                 stage_params: Tree, x: Tree, n_micro: int,
                                 axis: str = "stage",
-                                static: Tree | None = None) -> Tree:
-    """The GPipe fill/drain schedule under shard_map: the scheduling form
+                                static: Tree | None = None,
+                                schedule: str = "gpipe") -> Tree:
+    """Microbatched pipeline schedule under shard_map: the scheduling form
     whose efficiency `pipeline_bubble_fraction` models.
+
+    `schedule` selects how the backward pass is ordered (the forward
+    semantics — and the forward wall-clock schedule — are identical):
+
+    - ``"gpipe"`` differentiates through the forward scan with jax's
+      native transpose machinery: all forwards complete, then all
+      backwards run, so every stage stashes all M microbatch activations
+      (plus per-tick scan residuals).
+    - ``"1f1b"`` wraps the same forward in a custom VJP whose backward is
+      an explicit 1F1B-ordered step program: each stage stashes exactly
+      its per-microbatch *inputs* and recomputes the stage under `jax.vjp`
+      as its backward micro-steps fire, cotangents flowing by reverse
+      ring ppermute.  Numerics match "gpipe" to reduction-order
+      tolerance.  Note: because the loss lives *outside* this function,
+      the backward can only start after all forwards — the S-bounded
+      stash of true 1F1B (`pipeline_peak_inflight`) is realized by
+      `pipeline_train_microbatched`, which owns the loss and interleaves
+      F/B micro-steps in one program.
 
     `x` is a pytree whose leaves all carry a leading batch dim divisible by
     `n_micro`; it is split into `n_micro` microbatches, and stage s
@@ -115,20 +318,24 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
     """
     if n_micro < 1:
         raise ValueError(f"need n_micro >= 1, got {n_micro}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
+    if schedule == "1f1b":
+        return _apply_1f1b(stage_fn, stage_params, x, n_micro, axis, static)
+    return _apply_gpipe(stage_fn, stage_params, x, n_micro, axis, static)
+
+
+def _apply_gpipe(stage_fn: Callable[..., Tree], stage_params: Tree, x: Tree,
+                 n_micro: int, axis: str, static: Tree | None) -> Tree:
+    """The GPipe fill/drain forward scan (see the public docstring)."""
     idx = jax.lax.axis_index(axis)
     n_stages = jax.lax.psum(1, axis)          # static under shard_map
     local = jax.tree.map(lambda p: p[0], stage_params)
     M = int(n_micro)
 
-    def split(leaf):
-        if leaf.shape[0] % M:
-            raise ValueError(
-                f"batch dim {leaf.shape[0]} not divisible by n_micro={M}")
-        return leaf.reshape(M, leaf.shape[0] // M, *leaf.shape[1:])
-
-    x_mb = jax.tree.map(split, x)
+    x_mb = jax.tree.map(lambda l: _split_mb(l, M), x)
     static_mb = (None if static is None
-                 else jax.tree.map(split, static))
+                 else jax.tree.map(lambda l: _split_mb(l, M), static))
     state = jax.tree.map(lambda l: jnp.zeros_like(l[0]), x_mb)
     outbuf = jax.tree.map(jnp.zeros_like, x_mb)
     perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
@@ -139,10 +346,7 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
         # compute garbage whose outputs never reach the last stage in time)
         m_in = jnp.clip(t, 0, M - 1)
         state = jax.tree.map(
-            lambda buf, s: jnp.where(
-                idx == 0,
-                jax.lax.dynamic_index_in_dim(buf, m_in, 0, keepdims=False),
-                s),
+            lambda buf, s: jnp.where(idx == 0, _at(buf, m_in), s),
             x_mb, state)
         if static_mb is None:
             y = stage_fn(local, state)
@@ -150,18 +354,15 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
             # this device's in-flight microbatch is t - s; fill/drain
             # ticks index a clipped slot whose outputs are masked anyway
             m_cur = jnp.clip(t - idx, 0, M - 1)
-            s_cur = jax.tree.map(
-                lambda buf: jax.lax.dynamic_index_in_dim(
-                    buf, m_cur, 0, keepdims=False), static_mb)
+            s_cur = jax.tree.map(lambda buf: _at(buf, m_cur), static_mb)
             y = stage_fn(local, state, s_cur)
         # the last stage completes microbatch t - (S-1) on this tick
         m_out = jnp.clip(t - (n_stages - 1), 0, M - 1)
         take = jnp.logical_and(idx == n_stages - 1, t >= n_stages - 1)
 
         def write(buf, yl):
-            cur = jax.lax.dynamic_index_in_dim(buf, m_out, 0, keepdims=False)
-            return jax.lax.dynamic_update_index_in_dim(
-                buf, jnp.where(take, yl, cur), m_out, 0)
+            cur = _at(buf, m_out)
+            return _put(buf, jnp.where(take, yl, cur), m_out)
 
         outbuf = jax.tree.map(write, outbuf, y)
         state = jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm), y)
@@ -174,5 +375,356 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
         lambda buf: jax.lax.psum(
             jnp.where(idx == n_stages - 1, buf, jnp.zeros_like(buf)), axis),
         outbuf)
-    return jax.tree.map(
-        lambda l: l.reshape(l.shape[0] * l.shape[1], *l.shape[2:]), out)
+    return jax.tree.map(_merge_mb, out)
+
+
+# -------------------------------------------------- shared tree helpers
+def _split_mb(leaf, n_micro: int):
+    """(B, ...) → (M, B/M, ...) microbatch view of a batch-leading leaf."""
+    if leaf.shape[0] % n_micro:
+        raise ValueError(
+            f"batch dim {leaf.shape[0]} not divisible by n_micro={n_micro}")
+    return leaf.reshape(n_micro, leaf.shape[0] // n_micro, *leaf.shape[1:])
+
+
+def _merge_mb(leaf):
+    """(M, B/M, ...) → (B, ...): undo `_split_mb`."""
+    return leaf.reshape(leaf.shape[0] * leaf.shape[1], *leaf.shape[2:])
+
+
+def _at(buf, i):
+    """buf[i] with a traced index (keepdims dropped)."""
+    return jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+
+
+def _put(buf, val, i):
+    """buf with buf[i] = val, traced index."""
+    return jax.lax.dynamic_update_index_in_dim(buf, val, i, 0)
+
+
+def _tree_where(cond, a: Tree, b: Tree) -> Tree:
+    """Leafwise `jnp.where(cond, a, b)` for a scalar predicate."""
+    return jax.tree.map(lambda u, v: jnp.where(cond, u, v), a, b)
+
+
+def _apply_1f1b(stage_fn: Callable[..., Tree], stage_params: Tree, x: Tree,
+                n_micro: int, axis: str, static: Tree | None) -> Tree:
+    """Forward-compatible 1F1B: GPipe's forward scan + a custom VJP whose
+    backward is the explicit 1F1B-ordered step program.
+
+    fwd: runs `_apply_gpipe`'s tick loop, additionally stashing each
+    stage's *input* activation per microbatch — the stash/pop buffer the
+    backward pops (stage 0's injected microbatches included, so the
+    residuals are exactly (M, mb, ...) per stage plus the static side
+    inputs).  bwd: scans the backward half of the 1F1B program — stage s
+    retires microbatch m at tick m + (S-1-s), recomputing the stage from
+    its stashed input under `jax.vjp` and sending the input cotangent to
+    stage s-1 by reverse ring ppermute; the last stage seeds cotangents
+    from the output gradient, stage 0 accumulates the input gradient.
+    Parameter gradients stay per-stage local (leading dim 1, like the
+    primal params); `static` gradients are accumulated across every
+    stage's micro-steps.
+
+    The custom VJP wraps only the per-device *local* computation
+    (microbatch buffers in, per-stage output buffer out); the microbatch
+    split and the replicated psum-extraction of the last stage's buffer
+    stay in plain autodiff land, so shard_map's boundary cotangent
+    conventions apply to this schedule exactly as they do to "gpipe" —
+    the bwd returns plain local cotangents (zeros off-stage-0 for the
+    input buffer) and never compensates for boundary scaling.
+    """
+    M = int(n_micro)
+    n_stages = jax.lax.psum(1, axis)          # static under shard_map
+
+    def scan_core(stage_params, x_mb, static_mb):
+        """Stacked params + microbatch buffers → (outbuf, stash), both
+        per-device local: the last stage's outbuf holds every
+        microbatch's final activations (other stages' are zeros) and
+        stash holds this stage's input per microbatch."""
+        idx = jax.lax.axis_index(axis)
+        local = jax.tree.map(lambda p: p[0], stage_params)
+        state = jax.tree.map(lambda l: jnp.zeros_like(l[0]), x_mb)
+        outbuf = jax.tree.map(jnp.zeros_like, x_mb)
+        stash = jax.tree.map(jnp.zeros_like, x_mb)
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            state, outbuf, stash = carry
+            m_in = jnp.clip(t, 0, M - 1)
+            state = jax.tree.map(
+                lambda buf, s: jnp.where(idx == 0, _at(buf, m_in), s),
+                x_mb, state)
+            # stash this stage's input for its in-flight microbatch t-s
+            m_cur = jnp.clip(t - idx, 0, M - 1)
+            live = jnp.logical_and(t >= idx, t - idx <= M - 1)
+            stash = jax.tree.map(
+                lambda buf, s: jnp.where(live, _put(buf, s, m_cur), buf),
+                stash, state)
+            if static_mb is None:
+                y = stage_fn(local, state)
+            else:
+                s_cur = jax.tree.map(lambda b: _at(b, m_cur), static_mb)
+                y = stage_fn(local, state, s_cur)
+            m_out = jnp.clip(t - (n_stages - 1), 0, M - 1)
+            take = jnp.logical_and(idx == n_stages - 1, t >= n_stages - 1)
+
+            def write(buf, yl):
+                cur = _at(buf, m_out)
+                return _put(buf, jnp.where(take, yl, cur), m_out)
+
+            outbuf = jax.tree.map(write, outbuf, y)
+            state = jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm),
+                                 y)
+            return (state, outbuf, stash), None
+
+        n_ticks = M + n_stages - 1
+        (_, outbuf, stash), _ = jax.lax.scan(
+            tick, (state, outbuf, stash), jnp.arange(n_ticks))
+        return outbuf, stash
+
+    def core(stage_params, x_mb, static_mb):
+        outbuf, _ = scan_core(stage_params, x_mb, static_mb)
+        return outbuf
+
+    core_vjp = jax.custom_vjp(core)
+
+    def fwd(stage_params, x_mb, static_mb):
+        outbuf, stash = scan_core(stage_params, x_mb, static_mb)
+        local = jax.tree.map(lambda p: p[0], stage_params)
+        return outbuf, (local, stash, static_mb)
+
+    def bwd(res, g_outbuf):
+        # g_outbuf is the cotangent of the *local* outbuf: the epilogue's
+        # psum/where transpose makes it the full per-microbatch output
+        # gradient on the last stage and zeros elsewhere
+        local, stash, static_mb = res
+        idx = jax.lax.axis_index(axis)
+        cot = jax.tree.map(lambda l: jnp.zeros_like(l[0]), stash)
+        gx_buf = jax.tree.map(jnp.zeros_like, stash)
+        g_local = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), local)
+        gs_buf = (None if static_mb is None
+                  else jax.tree.map(jnp.zeros_like, static_mb))
+        perm = [(i, (i - 1) % n_stages) for i in range(n_stages)]
+
+        def btick(carry, tau):
+            cot, gx_buf, g_local, gs_buf = carry
+            # 1F1B backward order: stage s retires m at tick m + (S-1-s)
+            m = tau - (n_stages - 1 - idx)
+            valid = jnp.logical_and(m >= 0, m <= M - 1)
+            m_c = jnp.clip(m, 0, M - 1)
+            xin = jax.tree.map(lambda b: _at(b, m_c), stash)
+            seed = jax.tree.map(lambda b: _at(b, m_c), g_outbuf)
+            cot_in = _tree_where(idx == n_stages - 1, seed, cot)
+            if static_mb is None:
+                _, vjp_fn = jax.vjp(stage_fn, local, xin)
+                g_p, g_x = vjp_fn(cot_in)
+                g_s = None
+            else:
+                s_cur = jax.tree.map(lambda b: _at(b, m_c), static_mb)
+                _, vjp_fn = jax.vjp(stage_fn, local, xin, s_cur)
+                g_p, g_x, g_s = vjp_fn(cot_in)
+            g_local = jax.tree.map(
+                lambda acc, gp: acc + jnp.where(valid, gp,
+                                                jnp.zeros_like(gp)),
+                g_local, g_p)
+            take0 = jnp.logical_and(valid, idx == 0)
+            gx_buf = jax.tree.map(
+                lambda b, gx: jnp.where(take0, _put(b, gx, m_c), b),
+                gx_buf, g_x)
+            if g_s is not None:
+                gs_buf = jax.tree.map(
+                    lambda b, gs: jnp.where(
+                        valid, _put(b, _at(b, m_c) + gs, m_c), b),
+                    gs_buf, g_s)
+            payload = jax.tree.map(
+                lambda gx: jnp.where(valid, gx, jnp.zeros_like(gx)), g_x)
+            cot = jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm),
+                               payload)
+            return (cot, gx_buf, g_local, gs_buf), None
+
+        n_ticks = M + n_stages - 1
+        (_, gx_buf, g_local, gs_buf), _ = jax.lax.scan(
+            btick, (cot, gx_buf, g_local, gs_buf), jnp.arange(n_ticks))
+        # plain local cotangents: gx_buf is nonzero only on stage 0 and
+        # gs_buf holds this stage's contributions — the shard_map boundary
+        # combines per-device contributions exactly as it does for the
+        # autodiff-transposed "gpipe" body
+        g_params = jax.tree.map(lambda gl: gl[None], g_local)
+        g_static = gs_buf
+        return g_params, gx_buf, g_static
+
+    core_vjp.defvjp(fwd, bwd)
+
+    x_mb = jax.tree.map(lambda l: _split_mb(l, M), x)
+    static_mb = (None if static is None
+                 else jax.tree.map(lambda l: _split_mb(l, M), static))
+    outbuf = core_vjp(stage_params, x_mb, static_mb)
+    idx = jax.lax.axis_index(axis)
+    out = jax.tree.map(
+        lambda buf: jax.lax.psum(
+            jnp.where(idx == n_stages - 1, buf, jnp.zeros_like(buf)), axis),
+        outbuf)
+    return jax.tree.map(_merge_mb, out)
+
+
+def pipeline_train_microbatched(stage_fn: Callable[..., Tree],
+                                stage_params: Tree, x: Tree,
+                                loss_fn: Callable[[Tree], Any],
+                                n_micro: int, schedule: str = "1f1b",
+                                axis: str = "stage",
+                                busy_idle: bool = False) -> tuple[Any, Tree]:
+    """Fused forward+backward pipeline step under shard_map: scan one
+    step program (`make_step_program`) end to end and return
+    ``(loss, stage_param_grads)``.
+
+    This is the executor where 1F1B's memory bound is *real*: because the
+    per-microbatch loss lives inside the schedule (applied to the last
+    stage's output), backward micro-steps interleave with forwards, and
+    the activation stash holds at most `pipeline_peak_inflight(M, S,
+    schedule)` microbatches — min(M, S) for 1F1B vs M for GPipe — which
+    shows up directly in the compiled step's peak memory
+    (`benchmarks/pipeline_bubble.py` measures it).
+
+    Arguments mirror `pipeline_apply_microbatched`: `x` leaves carry a
+    leading batch dim divisible by `n_micro`; `stage_fn(local_params, x)
+    -> x` preserves tree structure.  `loss_fn(x_tree) -> scalar` is the
+    per-microbatch loss, evaluated at the last stage; the returned loss
+    is the **sum** over microbatches, replicated over `axis`.  Gradients
+    are per-stage local with the params' leading stage dim of 1 (give
+    them ``out_specs=P(axis)`` to reassemble the stacked layout).
+
+    Mechanics, per tick: (1) apply last tick's ppermute arrivals — a
+    forward activation is pushed into the stash slot ``m % K``, a
+    cotangent overwrites the (single) cotangent register, which is safe
+    because both programs consume cotangents the tick they arrive; (2)
+    `lax.switch` on this stage's event — forward: pop/inject the input,
+    run `stage_fn`, emit the activation; backward: recompute the stage
+    from its stashed input under `jax.vjp` (the last stage seeds the
+    cotangent from `jax.value_and_grad(loss_fn)`), accumulate parameter
+    gradients, emit the input cotangent; (3) ppermute activations +1 and
+    cotangents -1 around the ring.
+
+    `busy_idle=True` makes idle slots run a discarded stage forward —
+    for host-device *emulation* benchmarks only, where fake devices
+    serialize onto shared cores and wall-clock tracks total, not
+    critical-path, work: busy idles make t_pipe proportional to the
+    device-tick area so 1 - t_seq/t_pipe exposes the bubble (same trick
+    as the GPipe-only benchmark; keep it False on real hardware).
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
+    import numpy as np
+
+    idx = jax.lax.axis_index(axis)
+    S = int(jax.lax.psum(1, axis))            # static under shard_map
+    M = int(n_micro)
+    local = jax.tree.map(lambda p: p[0], stage_params)
+    x_mb = jax.tree.map(lambda l: _split_mb(l, M), x)
+
+    prog = make_step_program(M, S, schedule)
+    T = len(prog)
+    K = max(1, program_peak_inflight(prog, S))
+
+    # executor-internal op encoding: last-stage backwards get their own
+    # code so only that stage's switch branch evaluates loss_fn (other
+    # stages' backwards consume the arrived cotangent instead)
+    BWD_LOSS = 3
+    op = np.zeros((T, S), np.int32)
+    mb = np.zeros((T, S), np.int32)
+    for t, row in enumerate(prog):
+        for s, (o, m) in enumerate(row):
+            if o == PIPE_BWD and s == S - 1:
+                o = BWD_LOSS
+            op[t, s], mb[t, s] = o, m
+    # arrival routing, derived from the program: what each stage receives
+    # at tick t is what its neighbour emitted at tick t-1
+    fvalid = np.zeros((T, S), np.int32)
+    fslot = np.zeros((T, S), np.int32)
+    bvalid = np.zeros((T, S), np.int32)
+    for t in range(1, T):
+        for s in range(S):
+            if s >= 1 and op[t - 1, s - 1] == PIPE_FWD:
+                fvalid[t, s] = 1
+                fslot[t, s] = mb[t - 1, s - 1] % K
+            if s <= S - 2 and op[t - 1, s + 1] in (PIPE_BWD, BWD_LOSS):
+                bvalid[t, s] = 1
+    xs = {"op": jnp.asarray(op), "mb": jnp.asarray(mb),
+          "fvalid": jnp.asarray(fvalid), "fslot": jnp.asarray(fslot),
+          "bvalid": jnp.asarray(bvalid)}
+
+    stash0 = jax.tree.map(
+        lambda l: jnp.zeros((K, *l.shape[1:]), l.dtype), x_mb)
+    zero_slot = jax.tree.map(lambda l: jnp.zeros_like(l[0]), x_mb)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), local)
+    perm_f = [(i, (i + 1) % S) for i in range(S)]
+    perm_b = [(i, (i - 1) % S) for i in range(S)]
+
+    def tick(carry, xs_t):
+        stash, cot, f_in, b_in, g_acc, loss = carry
+        opv = xs_t["op"][idx]
+        mv = xs_t["mb"][idx]
+        slot = jnp.mod(mv, K)
+        # (1) arrivals from last tick's ppermutes
+        stash = jax.tree.map(
+            lambda b, v: jnp.where(xs_t["fvalid"][idx],
+                                   _put(b, v, xs_t["fslot"][idx]), b),
+            stash, f_in)
+        cot = _tree_where(xs_t["bvalid"][idx], b_in, cot)
+
+        def do_idle(opd):
+            stash, cot, g_acc, loss = opd
+            if busy_idle:
+                y = stage_fn(local, jax.tree.map(lambda b: _at(b, 0),
+                                                 stash))
+                # keep the discarded compute alive past DCE
+                leaf = jax.tree.leaves(y)[0]
+                loss = loss + 1e-30 * jnp.sum(leaf).astype(jnp.float32)
+            return stash, cot, g_acc, loss, zero_slot, zero_slot
+
+        def do_fwd(opd):
+            stash, cot, g_acc, loss = opd
+            xin = _tree_where(
+                idx == 0,
+                jax.tree.map(lambda b: _at(b, mv), x_mb),
+                jax.tree.map(lambda b: _at(b, slot), stash))
+            stash = jax.tree.map(lambda b, v: _put(b, v, slot), stash, xin)
+            y = stage_fn(local, xin)
+            return stash, cot, g_acc, loss, y, zero_slot
+
+        def do_bwd(opd):
+            # mid-pipeline backward: cotangent arrived on the ring
+            stash, cot, g_acc, loss = opd
+            xin = jax.tree.map(lambda b: _at(b, slot), stash)
+            _, vjp_fn = jax.vjp(stage_fn, local, xin)
+            g_p, g_x = vjp_fn(cot)
+            g_acc = jax.tree.map(lambda a, gp: a + gp.astype(a.dtype),
+                                 g_acc, g_p)
+            return stash, cot, g_acc, loss, zero_slot, g_x
+
+        def do_bwd_loss(opd):
+            # last stage's backward: seed the cotangent from loss_fn
+            stash, cot, g_acc, loss = opd
+            xin = jax.tree.map(lambda b: _at(b, slot), stash)
+            y, vjp_fn = jax.vjp(stage_fn, local, xin)
+            l, gy = jax.value_and_grad(loss_fn)(y)
+            g_p, g_x = vjp_fn(gy)
+            g_acc = jax.tree.map(lambda a, gp: a + gp.astype(a.dtype),
+                                 g_acc, g_p)
+            loss = loss + l.astype(jnp.float32)
+            return stash, cot, g_acc, loss, zero_slot, g_x
+
+        stash, cot, g_acc, loss, pay_f, pay_b = jax.lax.switch(
+            opv, [do_idle, do_fwd, do_bwd, do_bwd_loss],
+            (stash, cot, g_acc, loss))
+        f_in = jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm_f),
+                            pay_f)
+        b_in = jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm_b),
+                            pay_b)
+        return (stash, cot, f_in, b_in, g_acc, loss), None
+
+    carry0 = (stash0, zero_slot, zero_slot, zero_slot, g0,
+              jnp.zeros((), jnp.float32))
+    (_, _, _, _, g_acc, loss), _ = jax.lax.scan(tick, carry0, xs)
+    loss = jax.lax.psum(loss, axis)           # loss lives on the last stage
+    grads = jax.tree.map(lambda g, p: g[None].astype(p.dtype), g_acc, local)
+    return loss, grads

@@ -31,7 +31,9 @@ Tree = Any
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
-    """The data-parallel axes present in `mesh`, outermost first."""
+    """The data-parallel axes present in `mesh`, outermost first — the
+    subset of ``DATA_AXES`` (``("pod", "data")``) that `mesh` carries,
+    ready to use as one tuple-entry of a `PartitionSpec`."""
     return tuple(a for a in DATA_AXES if a in mesh.shape)
 
 
@@ -203,7 +205,10 @@ def shard_tree_specs(tree: Tree, specs: Tree, mesh: Mesh) -> Tree:
 
 
 def with_shardings(tree: Tree, specs: Tree, mesh: Mesh) -> Tree:
-    """device_put every leaf of `tree` with its (sanitized) spec."""
+    """device_put every leaf of `tree` with its (sanitized) spec:
+    concrete arrays in, concrete `NamedSharding`-placed arrays out —
+    the runtime sibling of `shard_tree_specs` (which builds abstract
+    `.lower()` arguments instead)."""
     def put(leaf, spec):
         spec = _sanitize(spec, leaf.shape, mesh)
         return jax.device_put(leaf, NamedSharding(mesh, spec))

@@ -71,7 +71,8 @@ def _dryrun_mesh(mesh_kind: str, stages: int):
 def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
                zero1: bool = False, grad_accum: int = 1,
                remat: bool = True, variants: tuple[str, ...] = (),
-               stages: int = 1, n_micro: int = 0):
+               stages: int = 1, n_micro: int = 0,
+               schedule: str = "gpipe"):
     """Lower + compile one cell; returns the stats record.
 
     variants: optimization flags ("ar_bf16", "seq_shard",
@@ -107,7 +108,8 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
         try:
             plan = plan_pipeline(cfg, stages, micro,
                                  global_batch=shape.global_batch,
-                                 seq_len=shape.seq_len, dp=dp)
+                                 seq_len=shape.seq_len, dp=dp,
+                                 schedule=schedule)
         except ValueError as exc:
             return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                     "skipped": f"pipeline plan: {exc}"}
@@ -238,13 +240,33 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
     terms = rec["terms_s"]
     rec["bottleneck"] = max(terms, key=terms.get)
     if plan is not None:
+        from repro.dist.pipeline import pipeline_peak_activation_bytes
+        mb_bytes = (plan.peak_activation_bytes / plan.peak_inflight
+                    if plan.peak_inflight else 0.0)
         rec["pipeline"] = {
+            "schedule": plan.schedule,
             "n_stages": plan.n_stages,
             "n_micro": plan.n_micro,
             "repeats_per_stage": plan.repeats_per_stage,
             "block_costs_s": list(plan.block_costs_s),
             "stage_time_s": plan.stage_time_s,
             "predicted_bubble": plan.bubble,
+            "peak_inflight": plan.peak_inflight,
+            "peak_activation_bytes": plan.peak_activation_bytes,
+            # analytic *schedule model* (loss-in-schedule executors /
+            # real hardware); the island train step lowered above keeps
+            # the loss outside the schedule and stashes n_micro
+            # microbatches per stage under either schedule — see
+            # docs/pipeline-schedules.md
+            "peak_activation_note": "analytic schedule model; the "
+                                    "island train step stashes n_micro "
+                                    "per stage under either schedule",
+            # both schedules side by side: same plan, different stash
+            "peak_activation_bytes_by_schedule": {
+                s: pipeline_peak_activation_bytes(
+                    plan.n_micro, plan.n_stages, s, mb_bytes)
+                for s in ("gpipe", "1f1b")
+            },
             "ppermute_bytes": float(
                 hlo.coll_bytes_by_op.get("collective-permute", 0.0)),
         }
@@ -313,6 +335,10 @@ def main() -> None:
                     help="lower the pipelined train step over a "
                          "(stages, 256/stages) ('stage', 'data') mesh")
     ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--schedule", choices=["gpipe", "1f1b"],
+                    default="gpipe",
+                    help="pipeline schedule for --stages > 1 cells; "
+                         "reported peak-activation bytes cover both")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--variant", action="append", default=[],
@@ -338,7 +364,8 @@ def main() -> None:
                          zero1=args.zero1, grad_accum=args.grad_accum,
                          remat=not args.no_remat,
                          variants=tuple(args.variant),
-                         stages=args.stages, n_micro=args.microbatch)
+                         stages=args.stages, n_micro=args.microbatch,
+                         schedule=args.schedule)
         tag = f"{args.arch}__{args.shape}__{rec['mesh']}"
         suffix = ""
         for v in args.variant:
@@ -347,6 +374,8 @@ def main() -> None:
             suffix += "__zero1"
         if args.stages > 1 and args.microbatch:
             suffix += f"__m{args.microbatch}"
+        if args.stages > 1 and args.schedule != "gpipe":
+            suffix += f"__{args.schedule}"
         if args.grad_accum > 1:
             suffix += f"__ga{args.grad_accum}"
         if args.no_remat:

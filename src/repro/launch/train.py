@@ -35,7 +35,7 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
           seq_len: int = 128, mesh_shape=None, axes=("data", "model"),
           lr: float = 3e-4, grad_accum: int = 1, remat: bool = True,
           seed: int = 0, stages: int = 1, microbatch: int = 0,
-          flags: tuple = ()):
+          schedule: str = "gpipe", flags: tuple = ()):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     n_dev = len(jax.devices())
     if mesh_shape is not None:
@@ -61,12 +61,14 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
         n_micro = microbatch or max(global_batch // max(dp, 1), 1)
         plan = plan_pipeline(cfg, stages, n_micro,
                              global_batch=global_batch, seq_len=seq_len,
-                             dp=dp)
+                             dp=dp, schedule=schedule)
         log.info(
-            "pipeline plan: stages=%d micro=%d repeats/stage=%d "
-            "stage_time=%.3gs bubble=%.1f%% block_costs=%s",
-            plan.n_stages, plan.n_micro, plan.repeats_per_stage,
-            plan.stage_time_s, 100 * plan.bubble,
+            "pipeline plan: schedule=%s stages=%d micro=%d "
+            "repeats/stage=%d stage_time=%.3gs bubble=%.1f%% "
+            "peak_act_model=%d×mb=%.3gMB block_costs=%s",
+            plan.schedule, plan.n_stages, plan.n_micro,
+            plan.repeats_per_stage, plan.stage_time_s, 100 * plan.bubble,
+            plan.peak_inflight, plan.peak_activation_bytes / 1e6,
             ["%.3g" % c for c in plan.block_costs_s])
 
     params = init_params(cfg, jax.random.key(seed))
@@ -145,6 +147,15 @@ def main() -> None:
     ap.add_argument("--microbatch", type=int, default=0,
                     help="pipeline microbatches per step (default: "
                          "per-data-shard batch)")
+    ap.add_argument("--schedule", choices=["gpipe", "1f1b"],
+                    default="gpipe",
+                    help="pipeline backward ordering: gpipe (scan "
+                         "transpose) or 1f1b (explicit stash/pop step "
+                         "program).  Same forward numerics and bubble; "
+                         "the plan's peak_act_model line shows the "
+                         "schedule's analytic stash bound (M vs "
+                         "min(M, S)), which loss-in-schedule executors "
+                         "realize — see docs/pipeline-schedules.md")
     ap.add_argument("--grad-int8", action="store_true",
                     help="int8 error-feedback gradient all-reduce "
                          "(repro.dist.compression.compressed_psum)")
@@ -157,7 +168,8 @@ def main() -> None:
     cfg, mesh, state, step_fn, data = build(
         args.arch, smoke=args.smoke, global_batch=args.global_batch,
         seq_len=args.seq_len, lr=args.lr, grad_accum=args.grad_accum,
-        stages=args.stages, microbatch=args.microbatch, flags=flags)
+        stages=args.stages, microbatch=args.microbatch,
+        schedule=args.schedule, flags=flags)
     log.info("arch=%s params=%.1fM mesh=%s", cfg.name,
              cfg.n_params() / 1e6, dict(mesh.shape))
 

@@ -86,13 +86,20 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
                       patch_embeds: Array | None = None,
                       frames: Array | None = None,
                       remat: bool = False,
-                      axis: str = "stage") -> tuple[Array, Array]:
+                      axis: str = "stage",
+                      schedule: str = "gpipe") -> tuple[Array, Array]:
     """Pipeline-parallel `forward`: → (hidden (B, S_total, d), aux_loss).
 
     Must trace inside a `sharding_context` whose mesh carries the `axis`
     dimension.  Embedding, encoder, final norm (and the loss, in
     `loss_fn_pipelined`) run in the auto-sharded outer world; only the
     decoder layer stack runs under shard_map.
+
+    `schedule` ("gpipe" | "1f1b") picks the backward ordering of each
+    island's microbatched schedule — forward numerics are identical, so
+    either value matches the baseline to the same tolerance; "1f1b"
+    differentiates through an explicit stash/pop step program instead of
+    the scan transpose (see `repro.dist.pipeline`).
     """
     mesh = active_mesh()
     if mesh is None or axis not in mesh.shape:
@@ -122,14 +129,16 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
         if static is None:
             def island(st, carry, _stage=stage):
                 return pipeline_apply_microbatched(
-                    _stage, st, carry, n_micro, axis=axis)
+                    _stage, st, carry, n_micro, axis=axis,
+                    schedule=schedule)
 
             in_specs = (jax.tree.map(lambda _: P(axis), st), bspec(carry))
             args = (st, carry)
         else:
             def island(st, carry, static, _stage=stage):
                 return pipeline_apply_microbatched(
-                    _stage, st, carry, n_micro, axis=axis, static=static)
+                    _stage, st, carry, n_micro, axis=axis, static=static,
+                    schedule=schedule)
 
             in_specs = (jax.tree.map(lambda _: P(axis), st), bspec(carry),
                         bspec(static))
@@ -150,12 +159,14 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
 
 def loss_fn_pipelined(params: dict, cfg: ModelConfig, batch: dict,
                       n_stages: int, n_micro: int, ce_chunk: int = 512,
-                      remat: bool = False, axis: str = "stage") -> Array:
+                      remat: bool = False, axis: str = "stage",
+                      schedule: str = "gpipe") -> Array:
     """`loss_fn` with the layer stack executed as a stage pipeline."""
     h, aux = forward_pipelined(
         params, cfg, batch["tokens"], n_stages, n_micro,
         patch_embeds=batch.get("patch_embeds"),
-        frames=batch.get("frames"), remat=remat, axis=axis)
+        frames=batch.get("frames"), remat=remat, axis=axis,
+        schedule=schedule)
     return ce_from_hidden(params, cfg, h, batch["labels"],
                           ce_chunk=ce_chunk) + 0.01 * aux
 

@@ -23,7 +23,10 @@ import logging
 import jax
 import jax.numpy as jnp
 
-from repro.dist.pipeline import balance_stages, pipeline_bubble_fraction
+from repro.dist.pipeline import (SCHEDULES, balance_stages,
+                                 pipeline_bubble_fraction,
+                                 pipeline_peak_activation_bytes,
+                                 pipeline_peak_inflight)
 from repro.models.common import LayerKind, ModelConfig
 
 log = logging.getLogger("repro.pipeline")
@@ -44,6 +47,14 @@ class PipelinePlan:
     stage_time_s: float               # predicted bottleneck stage time
     bubble: float                     # analytic fill/drain bubble fraction
     axis: str = "stage"
+    schedule: str = "gpipe"           # backward ordering: "gpipe" | "1f1b"
+    # analytic *schedule model* (see pipeline_peak_inflight): what a
+    # loss-in-schedule executor stashes.  The island-based train step
+    # keeps the loss outside the schedule, so it stashes M microbatches
+    # per stage under either schedule — these fields predict the fused
+    # executor / real-hardware bound, not today's island step's HBM.
+    peak_inflight: int = 0            # stashed microbatches, worst stage
+    peak_activation_bytes: float = 0.0  # peak_inflight × microbatch bytes
 
 
 def _analytic_block_cost(cfg: ModelConfig, pos: int, tokens: int) -> float:
@@ -103,18 +114,32 @@ def estimate_block_costs(cfg: ModelConfig, batch: int, seq: int
 
 def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
                   global_batch: int, seq_len: int, dp: int = 1,
-                  axis: str = "stage",
+                  axis: str = "stage", schedule: str = "gpipe",
                   block_costs: list[float] | None = None) -> PipelinePlan:
     """Validate and price an (n_stages, n_micro) pipeline for `cfg`.
 
+    `schedule` picks the backward ordering ("gpipe" or "1f1b"); it does
+    not change the partition or the bubble, only the plan's predicted
+    peak activation memory (`peak_inflight` × one microbatch's residual
+    stream: (local_batch/n_micro) · seq · d_model · itemsize).  That
+    prediction is the *schedule's* analytic model — realized by
+    executors that run the loss inside the schedule
+    (`pipeline_train_microbatched`, real hardware); the island-based
+    train step differentiates the loss outside the schedule and stashes
+    all n_micro microbatches per stage under either value (see
+    docs/pipeline-schedules.md).
+
     Raises ValueError when the partition can't produce stacked per-stage
-    params (n_repeats % n_stages != 0) or the per-data-shard batch can't
-    be microbatched (global_batch/dp % n_micro != 0).
+    params (n_repeats % n_stages != 0), the per-data-shard batch can't
+    be microbatched (global_batch/dp % n_micro != 0), or `schedule` is
+    unknown.
     """
     if n_stages < 1:
         raise ValueError(f"need n_stages >= 1, got {n_stages}")
     if n_micro < 1:
         raise ValueError(f"need n_micro >= 1, got {n_micro}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
     if cfg.n_repeats < n_stages:
         raise ValueError(
             f"{cfg.name}: n_repeats={cfg.n_repeats} < n_stages={n_stages}")
@@ -147,11 +172,17 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
             f"divisible by n_stages={n_stages}")
     k = sizes[0]
     stage_time = k * sum(costs)
+    mb_bytes = (mb * seq_len * cfg.d_model
+                * jnp.dtype(cfg.dtype).itemsize)
     return PipelinePlan(
         n_stages=n_stages, n_micro=n_micro, repeats_per_stage=k,
         sizes=tuple(sizes), block_costs_s=tuple(costs),
         stage_time_s=stage_time,
-        bubble=pipeline_bubble_fraction(n_micro, n_stages), axis=axis)
+        bubble=pipeline_bubble_fraction(n_micro, n_stages), axis=axis,
+        schedule=schedule,
+        peak_inflight=pipeline_peak_inflight(n_micro, n_stages, schedule),
+        peak_activation_bytes=pipeline_peak_activation_bytes(
+            n_micro, n_stages, schedule, mb_bytes))
 
 
 __all__ = ["PipelinePlan", "estimate_block_costs", "plan_pipeline"]

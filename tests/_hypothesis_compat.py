@@ -19,7 +19,9 @@ except ImportError:
     st = _StrategyStub()
 
     def given(*a, **k):
-        return _pytest.mark.skip(reason="hypothesis not installed")
+        return _pytest.mark.skip(
+            reason="hypothesis not installed — run `pip install -e .[dev]` "
+                   "to enable the property-based tests")
 
     def settings(*a, **k):
         return lambda fn: fn

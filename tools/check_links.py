@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Check that every relative link in the repo's Markdown files resolves.
+
+Walks the tree for ``*.md`` (skipping VCS/cache/output dirs), extracts
+inline links and images (``[text](target)``), and verifies each
+relative target exists on disk, resolved against the linking file's
+directory.  External schemes (http/https/mailto), pure in-page anchors
+(``#...``), and absolute paths are ignored; an anchor suffix on a
+relative link is stripped before the existence check.
+
+Exit status: 0 when all links resolve, 1 otherwise (each breakage is
+printed as ``file:line: broken link -> target``).  No dependencies
+beyond the standard library, so CI can run it without installing the
+package: ``python tools/check_links.py`` (or ``make docs-check``).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "results", ".ruff_cache",
+             "node_modules", ".venv", "venv", "checkpoints"}
+# files whose markdown is *quoted* from other repositories, so their
+# relative links point into those repos, not this one
+SKIP_FILES = {"SNIPPETS.md"}
+# inline [text](target) / ![alt](target); target ends at the first
+# unescaped ')' — angle-bracketed targets <...> are unwrapped below
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+(?:\s+\"[^\"]*\")?)\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: pathlib.Path) -> list[pathlib.Path]:
+    out = []
+    for p in sorted(root.rglob("*.md")):
+        if p.name in SKIP_FILES:
+            continue
+        if not any(part in SKIP_DIRS for part in p.parts):
+            out.append(p)
+    return out
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1).split()[0].strip("<>")
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            if target.startswith("/"):      # absolute: out of repo scope
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("root", nargs="?", default=".",
+                    help="directory to scan (default: cwd)")
+    args = ap.parse_args()
+    root = pathlib.Path(args.root)
+
+    files = md_files(root)
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
