@@ -9,18 +9,30 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 test:
 	$(PY) -m pytest -x -q
 
-# multi-device mode: 8 fake host devices for the in-process tests too
+# multi-device mode: 8 fake host devices for the in-process tests too,
+# plus a PP×TP (stage=2, model=2) smoke train run through the real CLI
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PY) -m pytest -q tests/test_dist.py tests/test_multidevice.py \
 	    tests/test_pipeline.py
+	rm -rf checkpoints/pptp-smoke
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m repro.launch.train --arch granite-3-8b --smoke --steps 2 \
+	    --global-batch 8 --seq-len 64 --stages 2 --microbatch 2 \
+	    --mesh-shape 2,2,2 --axes stage,data,model \
+	    --ckpt-dir checkpoints/pptp-smoke
 
 bench:
 	$(PY) -m benchmarks.run
 
 # CI smoke: exercise every benchmark section, tolerate section failures
-# (perf numbers on shared runners are informational, not gating)
+# (perf numbers on shared runners are informational, not gating).  The
+# pp×tp dryrun row lowers the pipelined train step over a
+# (stage, data, model) mesh at CI scale: plan + per-axis collective bytes
 bench-smoke:
+	$(PY) -m repro.launch.dryrun --arch granite-3-8b --shape train_4k \
+	    --smoke --stages 2 --model-par 2 --data-par 4 --microbatch 2 \
+	    --out results/dryrun-smoke
 	$(PY) -m benchmarks.run --tolerate-failures
 
 quickstart:

@@ -24,16 +24,18 @@ the model/launch/bench layers.
 Every entry point degrades to an identity / sensible default outside a
 `sharding_context`, so single-device code paths never pay for the substrate.
 """
-from .context import constrain, flag, moe_groups, sharding_context
+from .context import (constrain, flag, manual_tp_size, moe_groups,
+                      sharding_context)
 from .pipeline import (SCHEDULES, balance_stages, pipeline_bubble_fraction,
                        pipeline_peak_activation_bytes, pipeline_peak_inflight)
 from .sharding import (batch_spec, cache_specs, data_axes, param_specs,
-                       shard_tree_specs, with_shardings)
+                       pipeline_stage_specs, shard_tree_specs,
+                       with_shardings)
 
 __all__ = [
-    "sharding_context", "constrain", "flag", "moe_groups",
+    "sharding_context", "constrain", "flag", "manual_tp_size", "moe_groups",
     "data_axes", "batch_spec", "param_specs", "cache_specs",
-    "shard_tree_specs", "with_shardings",
+    "pipeline_stage_specs", "shard_tree_specs", "with_shardings",
     "SCHEDULES", "balance_stages", "pipeline_bubble_fraction",
     "pipeline_peak_inflight", "pipeline_peak_activation_bytes",
 ]

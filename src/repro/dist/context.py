@@ -106,15 +106,38 @@ def resolve_axis(axis: str | None, mesh: Mesh) -> Any:
     return axis if axis in mesh.shape else None
 
 
-def _bound_axis_names() -> frozenset:
-    """Axis names bound by an enclosing manual region (shard_map/pmap) at
-    trace time.  Internal-API probe with a safe fallback: if the probe
-    breaks on a future jax, constraints stay on (the pre-manual behavior)."""
+def _bound_axis_sizes() -> dict:
+    """Axis name → size of every axis bound by an enclosing manual region
+    (shard_map/pmap) at trace time.  Internal-API probe with a safe
+    fallback: if the probe breaks on a future jax, the mapping is empty
+    (constraints stay on — the pre-manual behavior)."""
     try:
         from jax._src.core import get_axis_env
-        return frozenset(get_axis_env().axis_sizes)
+        return dict(get_axis_env().axis_sizes)
     except Exception:                      # pragma: no cover - jax drift
-        return frozenset()
+        return {}
+
+
+def _bound_axis_names() -> frozenset:
+    """Axis names bound by an enclosing manual region (shard_map/pmap)."""
+    return frozenset(_bound_axis_sizes())
+
+
+def manual_tp_size() -> int:
+    """Tensor-parallel degree of the enclosing *manual* region: the size of
+    the ``"model"`` mesh axis when it is bound by a shard_map/pmap at trace
+    time, else 1.
+
+    This is the layer code's switch for explicit tensor-parallel
+    collectives.  Under GSPMD (no manual region, or the model axis left
+    automatic) the compiler inserts the TP all-reduces itself and this
+    returns 1; inside a pipeline island the whole mesh — ``"model"``
+    included — is manual, params arrive model-sharded
+    (`repro.dist.sharding.pipeline_stage_specs`), and every row-parallel
+    reduction must be an explicit `psum` over ``"model"``
+    (`repro.models.layers` branches on this).
+    """
+    return _bound_axis_sizes().get(MODEL_AXIS, 1)
 
 
 def constrain(x: Any, *axes: str | None) -> Any:

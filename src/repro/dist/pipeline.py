@@ -14,6 +14,18 @@ back replicated.  It is the numerics oracle for pipeline placement (every
 stage computes every tick; scheduling efficiency is modeled separately by
 `pipeline_bubble_fraction`).
 
+Every executor here names **only the stage axis** in its own collectives
+(the stage-to-stage ppermute rings, the n_stages probe, the
+replicated-output psum epilogue) — both the GPipe scan-transpose backward
+and the 1F1B custom-VJP/stash path.  That is what lets pipeline stages
+compose with tensor parallelism: on a ``("stage", "data", "model")`` mesh
+the same schedules run unchanged while `stage_fn`'s block math carries
+its *own* collectives over the other manual axes (e.g. explicit
+``psum("model")`` after row-parallel projections — see
+`repro.models.layers` and `repro.dist.context.manual_tp_size`), and the
+rotated activations stay replicated over data/model so stage-axis
+ppermute bytes are independent of the tp degree.
+
 Scheduling (see docs/pipeline-schedules.md for diagrams and formulas):
 
 - `pipeline_apply_microbatched(schedule="gpipe"|"1f1b")` — the
@@ -299,7 +311,10 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
     processes microbatch m at tick t = s + m, with activations moving
     stage-to-stage through a ring `ppermute` (the GLOBALMEM channel of the
     paper, across devices).  `stage_fn(local_params, x) -> x` must preserve
-    the tree structure (residual-stream style).  Every device computes on
+    the tree structure (residual-stream style).  All schedule collectives
+    (both schedules, forward and backward) name only `axis`; `stage_fn`
+    may freely use the mesh's other manual axes for its own collectives
+    (tensor-parallel psums), which compose with either backward path.  Every device computes on
     every tick — fill/drain ticks compute garbage that is masked out — so
     wall-clock cost scales with the (M + S - 1) · S device-tick area and
     the measured bubble can be compared against the analytic model.

@@ -20,6 +20,7 @@ Megatron-style assignments (see `repro.models.layers`):
 """
 from __future__ import annotations
 
+import itertools
 from typing import Any
 
 import jax
@@ -58,14 +59,26 @@ def _entry_size(mesh: Mesh, entry: Any) -> int:
 
 def batch_spec(mesh: Mesh, batch: int, ndim: int = 2) -> P:
     """Spec for a batch-leading array: dim 0 over the data axes, rest
-    replicated.  Data axes are dropped outermost-first until the remaining
-    shard count divides `batch`, so odd global batches still shard over as
-    much of the mesh as they can."""
-    axes = list(data_axes(mesh))
-    while axes and batch % _entry_size(mesh, tuple(axes)):
-        axes.pop(0)
-    lead = tuple(axes) if axes else None
-    return P(lead, *([None] * (ndim - 1)))
+    replicated.  Among the subsets of the data axes whose shard count
+    divides `batch`, the one with the most shards wins (ties prefer the
+    innermost axes, matching the old drop-outermost-first behavior), so
+    odd global batches still shard over as much of the mesh as they can —
+    including batches divisible only by an *outer* axis (e.g. batch 2 on
+    a ("pod"=2, "data"=4) mesh shards over "pod", where dropping axes
+    outermost-first fell all the way to replicated)."""
+    axes = data_axes(mesh)
+    idx = {a: i for i, a in enumerate(axes)}
+    best: tuple[str, ...] | None = None
+    best_key: tuple | None = None
+    for r in range(1, len(axes) + 1):
+        for combo in itertools.combinations(axes, r):
+            if batch % _entry_size(mesh, combo):
+                continue
+            key = (_entry_size(mesh, combo),
+                   tuple(idx[a] for a in combo))
+            if best_key is None or key > best_key:
+                best, best_key = combo, key
+    return P(best, *([None] * (ndim - 1)))
 
 
 def _sanitize(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
@@ -104,8 +117,11 @@ _MODEL_DIM_BY_NAME = {
     "w_up": -1, "w_gate": -1, "w_down": -2,
     # MoE expert stacks (.., E, d, ff) / (.., E, ff, d): expert parallelism
     "we_up": -3, "we_gate": -3, "we_down": -3,
-    # Mamba: d_inner-sharded projections and conv, row-parallel out
+    # Mamba: d_inner-sharded projections and conv, row-parallel out; the
+    # per-head tensors (dt projection, decay/skip/bias) shard over the
+    # same heads so manual-tp islands see consistent local shapes
     "w_z": -1, "w_x": -1, "conv_x": -1, "conv_bx": -1, "norm": -1,
+    "w_dt": -1, "A_log": -1, "D": -1, "dt_bias": -1,
     "out_proj": -2,
     # LM head (d, vocab): vocab over model (padded by tp_align)
     "head": -1,
@@ -148,15 +164,63 @@ def stage_stack_specs(specs: Tree, axis: str = "stage") -> Tree:
     """
     def s(spec: P) -> P:
         entries = list(spec)
-        if entries and entries[0] is not None:
-            raise ValueError(f"leading stack dim already sharded: {spec}")
         if not entries:
-            entries = [None]
+            # a rank-0 leaf has no dim to carry the stage entry; P(axis)
+            # would be an invalid spec for a scalar and only fail much
+            # later inside with_shardings / NamedSharding construction
+            raise ValueError(
+                "stage_stack_specs: rank-0 spec P() cannot take a leading "
+                f"{axis!r} entry — stack block params along a leading "
+                "repeats dim before sharding them over stages")
+        if entries[0] is not None:
+            raise ValueError(f"leading stack dim already sharded: {spec}")
         entries[0] = axis
         return P(*entries)
 
     return jax.tree.map(s, specs,
                         is_leaf=lambda l: isinstance(l, P))
+
+
+def pipeline_stage_specs(stacked_abs: Tree, mesh: Mesh,
+                         axis: str = "stage") -> Tree:
+    """`in_specs` for a pipeline island: `param_specs` composed with
+    `stage_stack_specs`, sanitized against the concrete `mesh`.
+
+    `stacked_abs` is one pattern position's stage-stacked block params
+    (leaves ``(S, R/S, ...)``, see `repro.models.pipeline.stage_stack`).
+    Each leaf's spec carries the leading ``axis`` entry *and* its
+    Megatron model-axis entry, so model-sharded leaves stay ``P("model")``
+    inside the shard_map island instead of replicating over the model
+    axis — the composition that lets pipeline stages run over
+    tensor-sharded blocks.
+
+    When `mesh` carries a model axis of size > 1, a leaf whose model dim
+    does not divide it raises instead of quietly dropping to replicated:
+    inside a *manual* island the layer code reduces row-parallel partial
+    products with explicit ``psum("model")`` collectives, which would
+    double-count a leaf that silently arrived replicated.  (Meshes
+    without a model axis sanitize exactly as before — the entry drops.)
+    """
+    specs = stage_stack_specs(param_specs(stacked_abs), axis=axis)
+    out = sanitize_specs(stacked_abs, specs, mesh)
+    if mesh.shape.get(MODEL_AXIS, 1) > 1:
+        bad = []
+
+        def check(path, want, got):
+            if MODEL_AXIS in tuple(want) and MODEL_AXIS not in tuple(got):
+                bad.append(f"{jax.tree_util.keystr(path)}: {want}")
+            return got
+
+        jax.tree_util.tree_map_with_path(
+            check, specs, out, is_leaf=lambda l: isinstance(l, P))
+        if bad:
+            raise ValueError(
+                f"model axis (size {mesh.shape[MODEL_AXIS]}) does not "
+                "divide the sharded dim of these stage-stacked leaves — "
+                "pipeline islands need every model entry to apply (pad "
+                "the config, e.g. tp_align, or lower model_par): "
+                + "; ".join(bad))
+    return out
 
 
 def cache_specs(cache_abs: Tree, mesh: Mesh, global_batch: int) -> Tree:

@@ -22,14 +22,14 @@ import time
 
 import jax
 
-from repro.configs import (SHAPES, get_config, input_specs, list_archs,
-                           skip_reason)
+from repro.configs import (SHAPES, get_config, get_smoke, input_specs,
+                           list_archs, skip_reason)
 from repro.dist.compression import init_stacked_errors
 from repro.dist.context import sharding_context
 from repro.dist.sharding import (batch_spec, cache_specs, data_par_size,
                                  param_specs, sanitize_specs,
                                  shard_tree_specs, stage_stack_specs)
-from repro.launch.hloanalysis import analyze_hlo
+from repro.launch.hloanalysis import analyze_hlo, mesh_axis_groups
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models.common import tp_align
 from repro.models.transformer import abstract_params
@@ -51,17 +51,25 @@ def _named(specs_tree, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree)
 
 
-def _dryrun_mesh(mesh_kind: str, stages: int):
+def _dryrun_mesh(mesh_kind: str, stages: int, model_par: int = 1,
+                 data_par: int | None = None):
     """The analysis mesh for one cell.
 
     "pod"/"multipod": the production TP meshes.  "dp": a pure
     data-parallel (256, 1) mesh — the baseline for the grad_int8
     collective-bytes A/B (the int8 reduction island replicates params
     over the mapped axes, so it needs model_par == 1).  stages > 1: a
-    (stages, 256/stages) ("stage", "data") pipeline mesh.
+    (stages, data) ("stage", "data") pipeline mesh — with model_par > 1 a
+    3D (stages, data, model_par) ("stage", "data", "model") pp×tp mesh.
+    `data_par` defaults to 256/stages either way, so the pp×tp cell keeps
+    the pp cell's per-device batch (its stage-axis ppermute bytes are
+    directly comparable) and simply uses model_par× more devices.
     """
     if stages > 1:
-        data = max(256 // stages, 1)
+        data = data_par or max(256 // stages, 1)
+        if model_par > 1:
+            return make_mesh((stages, data, model_par),
+                             ("stage", "data", "model")), model_par
         return make_mesh((stages, data), ("stage", "data")), 1
     if mesh_kind == "dp":
         return make_mesh((256, 1), ("data", "model")), 1
@@ -72,28 +80,43 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
                zero1: bool = False, grad_accum: int = 1,
                remat: bool = True, variants: tuple[str, ...] = (),
                stages: int = 1, n_micro: int = 0,
-               schedule: str = "gpipe"):
+               schedule: str = "gpipe", model_par: int = 1,
+               data_par: int | None = None, smoke: bool = False,
+               shape_override=None):
     """Lower + compile one cell; returns the stats record.
 
     variants: optimization flags ("ar_bf16", "seq_shard",
     "decode_bf16_scores", "grad_int8", ...) consumed by the model layers
     and the train step through the sharding context — the §Perf hillclimb
     knobs.  stages > 1 lowers the pipelined train step over a
-    ("stage", "data") mesh and reports the stage plan + predicted bubble
-    alongside the roofline terms.
+    ("stage", "data") mesh — with model_par > 1, over a 3D
+    ("stage", "data", "model") pp×tp mesh — and reports the stage plan,
+    predicted bubble, and per-axis collective bytes alongside the
+    roofline terms.  smoke swaps in the reduced config (CI-scale
+    compiles); shape_override substitutes a custom ShapeSpec (tests).
     """
-    shape = SHAPES[shape_name]
-    mesh_name = f"pp{stages}" if stages > 1 else mesh_kind
+    shape = shape_override or SHAPES[shape_name]
+    mesh_name = (f"pp{stages}xtp{model_par}"
+                 if stages > 1 and model_par > 1
+                 else f"pp{stages}" if stages > 1 else mesh_kind)
     if stages > 1 and shape.kind != "train":
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "skipped": "pipeline cells are train-only"}
+    if model_par > 1 and stages <= 1:
+        raise ValueError("model_par applies to pipeline cells (stages > "
+                         "1); pod/multipod cells fix their own tp")
 
-    mesh, tp = _dryrun_mesh(mesh_kind, stages)
+    mesh, tp = _dryrun_mesh(mesh_kind, stages, model_par=model_par,
+                            data_par=data_par)
     if "grad_int8" in variants and (tp != 1 or stages > 1):
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-                "skipped": "grad_int8 needs model_par == 1 and no pipeline "
-                           "stages (use --mesh dp)"}
-    cfg = tp_align(get_config(arch), tp=tp)
+                "skipped": "the int8 reduction island replicates params "
+                           "over its mapped axes, so grad_int8 wants "
+                           "model_par == 1 and composes with data "
+                           "parallelism only, not with pipeline cells "
+                           "(use --mesh dp)"}
+    base_cfg = get_smoke(arch) if smoke else get_config(arch)
+    cfg = tp_align(base_cfg, tp=tp)
     reason = skip_reason(cfg, shape)
     if reason:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -108,7 +131,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
         try:
             plan = plan_pipeline(cfg, stages, micro,
                                  global_batch=shape.global_batch,
-                                 seq_len=shape.seq_len, dp=dp,
+                                 seq_len=shape.seq_len, dp=dp, tp=tp,
                                  schedule=schedule)
         except ValueError as exc:
             return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -183,7 +206,8 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
     if isinstance(ca, (list, tuple)):      # jax<=0.4 returns [dict]
         ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
-    hlo = analyze_hlo(compiled.as_text())
+    hlo = analyze_hlo(compiled.as_text(),
+                      axis_groups=mesh_axis_groups(mesh))
 
     # loop-aware accounting (XLA cost_analysis counts while bodies once)
     flops_dev = hlo.flops
@@ -207,7 +231,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
         "kind": shape.kind,
         "variants": sorted(variants) + (["zero1"] if zero1 else [])
         + ([f"ga{grad_accum}"] if grad_accum > 1 else [])
-        + ([] if remat else ["noremat"]),
+        + ([] if remat else ["noremat"]) + (["smoke"] if smoke else []),
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
         "per_device": {
@@ -216,6 +240,10 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
             "collective_bytes": coll_dev,
             "collective_breakdown": hlo.coll_bytes_by_op,
             "collective_counts": hlo.coll_count_by_op,
+            # which collectives run on which mesh axis (replica-group
+            # attribution): the pp×tp cells read stage-axis ppermute and
+            # model-axis all-reduce traffic straight off this
+            "collective_bytes_by_axis": hlo.coll_bytes_by_axis,
             "xla_cost_analysis_flops": float(ca.get("flops", 0.0)),
             "xla_cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
         },
@@ -243,10 +271,13 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
         from repro.dist.pipeline import pipeline_peak_activation_bytes
         mb_bytes = (plan.peak_activation_bytes / plan.peak_inflight
                     if plan.peak_inflight else 0.0)
+        stage_permute = hlo.coll_bytes_by_axis.get("stage", {}).get(
+            "collective-permute")
         rec["pipeline"] = {
             "schedule": plan.schedule,
             "n_stages": plan.n_stages,
             "n_micro": plan.n_micro,
+            "tp": plan.tp,
             "repeats_per_stage": plan.repeats_per_stage,
             "block_costs_s": list(plan.block_costs_s),
             "stage_time_s": plan.stage_time_s,
@@ -267,8 +298,14 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
                     plan.n_micro, plan.n_stages, s, mb_bytes)
                 for s in ("gpipe", "1f1b")
             },
+            # the schedule's own traffic: stage-axis ppermute bytes (per
+            # axis attribution; total collective-permute as the fallback
+            # when replica groups were unclassifiable) — by construction
+            # unchanged between a pp cell and its pp×tp sibling, since
+            # the rotated activations are replicated over the model axis
             "ppermute_bytes": float(
-                hlo.coll_bytes_by_op.get("collective-permute", 0.0)),
+                stage_permute if stage_permute is not None
+                else hlo.coll_bytes_by_op.get("collective-permute", 0.0)),
         }
     return rec
 
@@ -334,6 +371,19 @@ def main() -> None:
     ap.add_argument("--stages", type=int, default=1,
                     help="lower the pipelined train step over a "
                          "(stages, 256/stages) ('stage', 'data') mesh")
+    ap.add_argument("--model-par", type=int, default=1,
+                    help="tensor-parallel degree inside each pipeline "
+                         "stage: with --stages > 1 the mesh becomes "
+                         "(stages, 256/stages, model_par) ('stage', "
+                         "'data', 'model') — the pp×tp cell, keeping the "
+                         "pp cell's per-device batch")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CI-scale compile); record is "
+                         "tagged with a 'smoke' variant")
+    ap.add_argument("--data-par", type=int, default=None,
+                    help="data-parallel degree for --stages > 1 cells "
+                         "(default 256/stages); smaller values make "
+                         "CI-scale pipeline compiles cheap")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--schedule", choices=["gpipe", "1f1b"],
                     default="gpipe",
@@ -347,6 +397,10 @@ def main() -> None:
     ap.add_argument("--out", default=str(RESULTS))
     ap.add_argument("--parallel", type=int, default=2)
     args = ap.parse_args()
+
+    if args.model_par > 1 and args.stages <= 1:
+        ap.error("--model-par applies to pipeline cells: pass --stages "
+                 "N > 1 (pod/multipod cells fix their own tp)")
 
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -365,7 +419,8 @@ def main() -> None:
                          remat=not args.no_remat,
                          variants=tuple(args.variant),
                          stages=args.stages, n_micro=args.microbatch,
-                         schedule=args.schedule)
+                         schedule=args.schedule, model_par=args.model_par,
+                         data_par=args.data_par, smoke=args.smoke)
         tag = f"{args.arch}__{args.shape}__{rec['mesh']}"
         suffix = ""
         for v in args.variant:
@@ -380,6 +435,8 @@ def main() -> None:
             suffix += f"__ga{args.grad_accum}"
         if args.no_remat:
             suffix += "__noremat"
+        if args.smoke:
+            suffix += "__smoke"
         path = out_dir / f"{tag}{suffix}.json"
         path.write_text(json.dumps(rec, indent=2))
         print(json.dumps(rec, indent=2))

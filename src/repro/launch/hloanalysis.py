@@ -37,6 +37,11 @@ _COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[\d,]+\}(?:,\{[\d,]+\})*)\}")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(
+    r"source_target_pairs=\{(\{\d+,\d+\}(?:,\{\d+,\d+\})*)\}")
 # ops that don't touch HBM (metadata / aliasing / control)
 _FREE_OPS = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -63,6 +68,72 @@ def _shape_dims(sig: str) -> list[tuple[str, list[int]]]:
     for dt, dims in _SHAPE_RE.findall(sig):
         out.append((dt, [int(d) for d in dims.split(",") if d]))
     return out
+
+
+def mesh_axis_groups(mesh) -> dict[str, frozenset]:
+    """Device-id groups per mesh axis (and per combination of axes), for
+    attributing compiled collectives to the axis they run over.
+
+    Returns ``{"stage": {{0,4},{1,5},...}, "model": ..., "data+model":
+    ...}``: one entry per non-trivial axis (size > 1) and per combination
+    of such axes (``"+"``-joined, e.g. a gradient all-reduce over both
+    data axes matches ``"pod+data"``).  Groups are frozensets of device
+    ids, matching the ``replica_groups`` of a collective partitioned over
+    exactly those axes.
+    """
+    import itertools
+
+    import numpy as np
+
+    ids = np.vectorize(lambda d: d.id)(mesh.devices)
+    names = [n for n in mesh.axis_names if mesh.shape[n] > 1]
+    out: dict[str, frozenset] = {}
+    for r in range(1, len(names) + 1):
+        for combo in itertools.combinations(names, r):
+            axes = tuple(mesh.axis_names.index(n) for n in combo)
+            rest = [i for i in range(ids.ndim) if i not in axes]
+            arr = ids.transpose(*rest, *axes).reshape(
+                -1, int(np.prod([ids.shape[i] for i in axes])))
+            out["+".join(combo)] = frozenset(
+                frozenset(int(x) for x in row) for row in arr)
+    return out
+
+
+def _collective_axis(line: str, axis_groups: dict[str, frozenset]) -> str:
+    """Name of the mesh axis (or ``"a+b"`` combination) a collective runs
+    over, from its replica_groups / source_target_pairs; ``"other"`` when
+    the groups match no axis (mixed groups, degenerate singletons)."""
+    mp = _PAIRS_RE.search(line)
+    if mp:
+        pairs = [tuple(int(x) for x in g.split(","))
+                 for g in re.findall(r"\{(\d+,\d+)\}", mp.group(1))]
+        for name, ref in axis_groups.items():
+            if "+" in name:
+                continue             # permutes are single-axis rings here
+            if all(any(s in g and t in g for g in ref) for s, t in pairs):
+                return name
+        return "other"
+    m = _GROUPS_RE.search(line)
+    if m:
+        groups = [frozenset(int(x) for x in g.split(","))
+                  for g in re.findall(r"\{([\d,]+)\}", m.group(1))]
+    else:
+        mi = _IOTA_RE.search(line)
+        if not mi:
+            return "other"
+        import numpy as np
+        ng, gs = int(mi.group(1)), int(mi.group(2))
+        dims = [int(x) for x in mi.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if mi.group(4):
+            arr = arr.transpose([int(x) for x in mi.group(4).split(",")])
+        groups = [frozenset(int(x) for x in row)
+                  for row in arr.reshape(ng, gs)]
+    gset = frozenset(groups)
+    for name, ref in axis_groups.items():
+        if gset == ref:
+            return name
+    return "other"
 
 
 @dataclasses.dataclass
@@ -308,6 +379,9 @@ class HloStats:
     hbm_bytes: float = 0.0
     coll_bytes_by_op: dict = dataclasses.field(default_factory=dict)
     coll_count_by_op: dict = dataclasses.field(default_factory=dict)
+    # mesh axis (or "a+b" combination) → op → bytes; populated only when
+    # analyze_hlo is given `axis_groups` (see `mesh_axis_groups`)
+    coll_bytes_by_axis: dict = dataclasses.field(default_factory=dict)
     transcendental_free: bool = True   # we only count dots
 
     @property
@@ -315,7 +389,14 @@ class HloStats:
         return sum(self.coll_bytes_by_op.values())
 
 
-def analyze_hlo(text: str) -> HloStats:
+def analyze_hlo(text: str, axis_groups: dict | None = None) -> HloStats:
+    """Loop-aware roofline stats of partitioned HLO `text`.
+
+    `axis_groups` (from `mesh_axis_groups`) additionally attributes every
+    collective's bytes to the mesh axis its replica groups span —
+    `HloStats.coll_bytes_by_axis` — so e.g. a pipeline cell can report
+    stage-axis ppermute traffic separately from model-axis all-reduces.
+    """
     comps, entry = parse_computations(text)
     memo: dict[str, HloStats] = {}
 
@@ -336,6 +417,18 @@ def analyze_hlo(text: str) -> HloStats:
             if sub:
                 total += flops_only(sub, depth + 1)
         return total
+
+    def merge(st: HloStats, sub: HloStats, mult: float) -> None:
+        st.flops += sub.flops * mult
+        st.hbm_bytes += sub.hbm_bytes * mult
+        for k, v in sub.coll_bytes_by_op.items():
+            st.coll_bytes_by_op[k] += v * mult
+        for k, v in sub.coll_count_by_op.items():
+            st.coll_count_by_op[k] += v * mult
+        for ax, by_op in sub.coll_bytes_by_axis.items():
+            acc = st.coll_bytes_by_axis.setdefault(ax, defaultdict(float))
+            for k, v in by_op.items():
+                acc[k] += v * mult
 
     def analyze(cname: str, depth: int = 0) -> HloStats:
         if cname in memo:
@@ -361,6 +454,10 @@ def analyze_hlo(text: str) -> HloStats:
                     b *= 0.5
                 st.coll_bytes_by_op[base] += b
                 st.coll_count_by_op[base] += 1
+                if axis_groups is not None:
+                    ax = _collective_axis(ins.line, axis_groups)
+                    st.coll_bytes_by_axis.setdefault(
+                        ax, defaultdict(float))[base] += b
                 st.hbm_bytes += _shapes_bytes(ins.result_sig)
                 continue
             if op == "while":
@@ -371,27 +468,14 @@ def analyze_hlo(text: str) -> HloStats:
                 body = called_comp(ins, "body")
                 cond = called_comp(ins, "condition")
                 for sub_name in (body, cond):
-                    if not sub_name:
-                        continue
-                    sub = analyze(sub_name, depth + 1)
-                    st.flops += sub.flops * trips
-                    st.hbm_bytes += sub.hbm_bytes * trips
-                    for k, v in sub.coll_bytes_by_op.items():
-                        st.coll_bytes_by_op[k] += v * trips
-                    for k, v in sub.coll_count_by_op.items():
-                        st.coll_count_by_op[k] += v * trips
+                    if sub_name:
+                        merge(st, analyze(sub_name, depth + 1), trips)
                 continue
             if op in ("call", "conditional", "async-start"):
                 sub_name = (called_comp(ins, "to_apply")
                             or called_comp(ins, "calls"))
                 if sub_name:
-                    sub = analyze(sub_name, depth + 1)
-                    st.flops += sub.flops
-                    st.hbm_bytes += sub.hbm_bytes
-                    for k, v in sub.coll_bytes_by_op.items():
-                        st.coll_bytes_by_op[k] += v
-                    for k, v in sub.coll_count_by_op.items():
-                        st.coll_count_by_op[k] += v
+                    merge(st, analyze(sub_name, depth + 1), 1)
                 continue
             if op in ("dot", "convolution"):
                 st.flops += _dot_flops(ins, comp, comps)
@@ -444,6 +528,8 @@ def analyze_hlo(text: str) -> HloStats:
             st.hbm_bytes += b
         st.coll_bytes_by_op = dict(st.coll_bytes_by_op)
         st.coll_count_by_op = dict(st.coll_count_by_op)
+        st.coll_bytes_by_axis = {ax: dict(by_op) for ax, by_op
+                                 in st.coll_bytes_by_axis.items()}
         memo[cname] = st
         return st
 

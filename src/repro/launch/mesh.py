@@ -62,6 +62,11 @@ def make_train_mesh(n_stages: int = 1, model_par: int = 1,
     are the pipeline's only cross-stage traffic, so they get the slowest
     links, while data/model collectives stay within a stage's slice.
     `data_par` defaults to filling the remaining devices.
+
+    n_stages and model_par compose: ``(n_stages, data_par, model_par)``
+    is the full PP×TP training mesh — pipeline islands run
+    Megatron-sharded blocks on it (`repro.models.pipeline`), with the
+    model axis innermost so tp collectives ride the fastest links.
     """
     if n_stages < 1 or model_par < 1:
         raise ValueError("need n_stages >= 1 and model_par >= 1")

@@ -35,13 +35,12 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
           seq_len: int = 128, mesh_shape=None, axes=("data", "model"),
           lr: float = 3e-4, grad_accum: int = 1, remat: bool = True,
           seed: int = 0, stages: int = 1, microbatch: int = 0,
-          schedule: str = "gpipe", flags: tuple = ()):
+          model_par: int = 1, schedule: str = "gpipe", flags: tuple = ()):
     cfg = get_smoke(arch) if smoke else get_config(arch)
-    n_dev = len(jax.devices())
     if mesh_shape is not None:
         mesh = make_mesh(tuple(mesh_shape), tuple(axes))
     else:
-        mesh = make_train_mesh(n_stages=stages)
+        mesh = make_train_mesh(n_stages=stages, model_par=model_par)
     tp = mesh.shape.get("model", 1)
     if tp > 1:
         cfg = tp_align(cfg, tp)
@@ -54,19 +53,19 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
         if "stage" not in mesh.shape or mesh.shape["stage"] != stages:
             raise ValueError(f"mesh {dict(mesh.shape)} lacks a stage axis "
                              f"of size {stages}")
-        if tp > 1:
-            raise ValueError("pipeline stages compose with data "
-                             "parallelism only (model_par must be 1)")
+        # pipeline stages compose with both data and model parallelism:
+        # the islands run over the full stage × data × model mesh, with
+        # tensor-sharded blocks inside (see repro.models.pipeline)
         dp = data_par_size(mesh)
         n_micro = microbatch or max(global_batch // max(dp, 1), 1)
         plan = plan_pipeline(cfg, stages, n_micro,
                              global_batch=global_batch, seq_len=seq_len,
-                             dp=dp, schedule=schedule)
+                             dp=dp, tp=tp, schedule=schedule)
         log.info(
-            "pipeline plan: schedule=%s stages=%d micro=%d "
+            "pipeline plan: schedule=%s stages=%d micro=%d tp=%d "
             "repeats/stage=%d stage_time=%.3gs bubble=%.1f%% "
             "peak_act_model=%d×mb=%.3gMB block_costs=%s",
-            plan.schedule, plan.n_stages, plan.n_micro,
+            plan.schedule, plan.n_stages, plan.n_micro, plan.tp,
             plan.repeats_per_stage, plan.stage_time_s, 100 * plan.bubble,
             plan.peak_inflight, plan.peak_activation_bytes / 1e6,
             ["%.3g" % c for c in plan.block_costs_s])
@@ -130,6 +129,63 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
     return cfg, mesh, (params, opt_state), wrapped, data
 
 
+_KNOWN_AXES = ("stage", "pod", "data", "model")
+_DEFAULT_AXES = {1: ("data",), 2: ("data", "model"),
+                 3: ("stage", "data", "model")}
+
+
+def parse_mesh_cli(mesh_shape: str | None, axes: str | None,
+                   stages: int) -> tuple[tuple[int, ...] | None,
+                                         tuple[str, ...] | None]:
+    """Validate `--mesh-shape`/`--axes` against `--stages`.
+
+    Returns ``(shape, axes)`` for `build()` (both None when no explicit
+    mesh was requested, letting `make_train_mesh` pick).  Shapes are
+    comma-separated ints (``2,2,2``), axes comma-separated names from
+    ``stage/pod/data/model``; with `--mesh-shape` but no `--axes` the
+    rank picks the conventional names (3 → ``stage,data,model``).
+    """
+    if mesh_shape is None:
+        if axes is not None:
+            raise ValueError("--axes needs --mesh-shape")
+        return None, None
+    try:
+        shape = tuple(int(s) for s in mesh_shape.split(",") if s.strip())
+    except ValueError:
+        raise ValueError(
+            f"--mesh-shape wants comma-separated ints, got {mesh_shape!r}")
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"--mesh-shape entries must be >= 1: {shape}")
+    if axes is None:
+        names = _DEFAULT_AXES.get(len(shape))
+        if names is None:
+            raise ValueError(
+                f"no default axis names for a rank-{len(shape)} mesh; "
+                "pass --axes")
+    else:
+        names = tuple(a.strip() for a in axes.split(",") if a.strip())
+    if len(names) != len(shape):
+        raise ValueError(
+            f"--mesh-shape {shape} and --axes {names} disagree on rank")
+    unknown = [a for a in names if a not in _KNOWN_AXES]
+    if unknown:
+        raise ValueError(
+            f"unknown mesh axes {unknown}; the sharding substrate knows "
+            f"{_KNOWN_AXES}")
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate mesh axes in {names}")
+    stage_size = dict(zip(names, shape)).get("stage", 1)
+    if stages > 1 and stage_size != stages:
+        raise ValueError(
+            f"--stages {stages} needs a 'stage' axis of that size in the "
+            f"mesh, got {dict(zip(names, shape))}")
+    if stages <= 1 and stage_size != 1:
+        raise ValueError(
+            f"mesh carries a 'stage' axis of size {stage_size} but "
+            f"--stages is {stages}; pass --stages {stage_size}")
+    return shape, names
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -147,6 +203,16 @@ def main() -> None:
     ap.add_argument("--microbatch", type=int, default=0,
                     help="pipeline microbatches per step (default: "
                          "per-data-shard batch)")
+    ap.add_argument("--model-par", type=int, default=1,
+                    help="tensor (model) parallel degree; composes with "
+                         "--stages over a (stage, data, model) mesh")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="explicit mesh, comma-separated sizes (e.g. "
+                         "2,2,2); overrides --model-par and the default "
+                         "device fill — validated against --stages")
+    ap.add_argument("--axes", default=None,
+                    help="axis names for --mesh-shape (e.g. "
+                         "stage,data,model); defaults by rank")
     ap.add_argument("--schedule", choices=["gpipe", "1f1b"],
                     default="gpipe",
                     help="pipeline backward ordering: gpipe (scan "
@@ -165,11 +231,16 @@ def main() -> None:
 
     logging.basicConfig(level=logging.INFO)
     flags = ("grad_int8",) if args.grad_int8 else ()
+    mesh_shape, axes = parse_mesh_cli(args.mesh_shape, args.axes,
+                                      args.stages)
+    kw = {} if mesh_shape is None else {"mesh_shape": mesh_shape,
+                                        "axes": axes}
     cfg, mesh, state, step_fn, data = build(
         args.arch, smoke=args.smoke, global_batch=args.global_batch,
         seq_len=args.seq_len, lr=args.lr, grad_accum=args.grad_accum,
         stages=args.stages, microbatch=args.microbatch,
-        schedule=args.schedule, flags=flags)
+        model_par=args.model_par, schedule=args.schedule, flags=flags,
+        **kw)
     log.info("arch=%s params=%.1fM mesh=%s", cfg.name,
              cfg.n_params() / 1e6, dict(mesh.shape))
 

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import LayerKind, ModelConfig
-from repro.dist.context import constrain, flag, moe_groups
+from repro.dist.context import (MODEL_AXIS, constrain, flag, manual_tp_size,
+                                moe_groups)
 
 Array = Any
 
@@ -33,13 +34,34 @@ Array = Any
 def _row_parallel_einsum(expr: str, a: Array, w: Array, out_dtype) -> Array:
     """Row-parallel (psum-producing) projection.  Under the `ar_bf16`
     hillclimb flag the partial products are emitted in bf16, so the
-    GSPMD-inserted all-reduce moves half the bytes (accuracy note: the
-    cross-shard reduction then accumulates in bf16)."""
+    all-reduce moves half the bytes (accuracy note: the cross-shard
+    reduction then accumulates in bf16).
+
+    Under GSPMD the all-reduce over ``model`` is compiler-inserted; inside
+    a manual region with the model axis bound (a pipeline island, where
+    params arrive model-sharded) the partial products are reduced with an
+    explicit `psum` — the block math carries its own tp collective."""
     if flag("ar_bf16"):
-        return jnp.einsum(expr, a, w,
-                          preferred_element_type=jnp.bfloat16
-                          ).astype(out_dtype)
-    return jnp.einsum(expr, a, w).astype(out_dtype)
+        part = jnp.einsum(expr, a, w, preferred_element_type=jnp.bfloat16)
+    else:
+        part = jnp.einsum(expr, a, w)
+    if manual_tp_size() > 1:
+        part = jax.lax.psum(part, MODEL_AXIS)
+    return part.astype(out_dtype)
+
+
+def _tp_rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """`rmsnorm` over a dim that may be model-sharded in a manual region:
+    the mean-square is reduced over ``model`` so each shard normalizes by
+    the *global* variance (GSPMD does this insertion itself outside)."""
+    tp = manual_tp_size()
+    if tp == 1:
+        return rmsnorm(x, scale, eps)
+    x32 = x.astype(jnp.float32)
+    var = jax.lax.psum(jnp.sum(x32 * x32, axis=-1, keepdims=True),
+                       MODEL_AXIS) / (x.shape[-1] * tp)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
 
 
 # ----------------------------------------------------------------- basics
@@ -550,6 +572,10 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig,
     k = cfg.experts_per_tok
     E = cfg.num_experts
 
+    if impl == "dense" and manual_tp_size() > 1:
+        raise ValueError("moe_block(impl='dense') is the all-experts "
+                         "oracle; inside a manual-tp island experts are "
+                         "sharded — use the scatter path")
     if impl == "dense":
         # all-experts oracle: every expert computes every token
         h = jnp.einsum("td,edf->tef", xf, p["we_up"])
@@ -590,6 +616,26 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig,
             gidx, ids_f, pos_s].set(tok_of_slot, mode="drop")
         valid = jnp.zeros((G, E, C), bool).at[
             gidx, ids_f, pos_s].set(True, mode="drop")
+        w_buf = jnp.zeros((G, E, C), jnp.float32).at[
+            gidx, ids_f, pos_s].set(
+            wg.reshape(G, TK).astype(jnp.float32), mode="drop")
+        pos_t = pos.reshape(G, Tg, k)
+        keep_t = keep.reshape(G, Tg, k)
+        tp = manual_tp_size()
+        if tp > 1:
+            # manual expert parallelism (pipeline islands): this shard owns
+            # the contiguous expert block [off, off + E/tp).  Routing was
+            # computed on global ids (replicated over model), so slice the
+            # slot maps to the local block, restrict the combine to slots
+            # whose expert lives here, and psum token outputs over `model`
+            # — the collective GSPMD inserts itself in the auto-sharded
+            # (EP over "tp" constraint) path below.
+            El = E // tp
+            off = jax.lax.axis_index(MODEL_AXIS) * El
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, off, El, axis=1)
+            inv, valid, w_buf = sl(inv), sl(valid), sl(w_buf)
+            keep_t = keep_t & (idg >= off) & (idg < off + El)
+            idg = jnp.clip(idg - off, 0, El - 1)
         buf = _dispatch_gather((Tg, str(xg.dtype)), xg, inv, valid)
         # groups shard over data (each DP shard dispatches its own tokens),
         # experts shard over model (EP)
@@ -600,12 +646,10 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig,
                         p["we_down"])
         yb = constrain(yb, "dp", "tp", None, None).astype(xf.dtype)
         # combine: one (G,Tg,d) gather per top-k slot — never (G,TK,d)
-        pos_t = pos.reshape(G, Tg, k)
-        keep_t = keep.reshape(G, Tg, k)
-        w_buf = jnp.zeros((G, E, C), jnp.float32).at[
-            gidx, ids_f, pos_s].set(
-            wg.reshape(G, TK).astype(jnp.float32), mode="drop")
         y = _combine_gather(yb, inv, valid, w_buf, idg, pos_t, keep_t, wg)
+        if tp > 1:
+            # each token's experts may live on different model shards
+            y = jax.lax.psum(y, MODEL_AXIS)
         y = constrain(y, "dp", None, None).reshape(T, d)
 
     if cfg.moe_shared_expert:
@@ -722,8 +766,7 @@ def mamba_block(p: dict, x: Array, cfg: ModelConfig,
                 init_state: Array | None = None,
                 conv_state: Array | None = None):
     """Full Mamba-2 mixer. Returns (y, (ssm_state, conv_state))."""
-    B, S, d = x.shape
-    di, H, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    B, S, _d = x.shape
     P = cfg.ssm_head_dim
     w = cfg.ssm_conv_width
     z = x @ p["w_z"]
@@ -740,7 +783,11 @@ def mamba_block(p: dict, x: Array, cfg: ModelConfig,
         new_conv_state = (xs_raw[:, S - (w - 1):],
                           b_raw[:, S - (w - 1):], c_raw[:, S - (w - 1):])
 
-    xh = xs.reshape(B, S, H, P)
+    # head count from the local projection width, not cfg: inside a manual
+    # tp region xs carries d_inner/tp channels, i.e. H/tp local heads (the
+    # per-head dim P is never sharded), and w_dt/A_log/D/dt_bias are
+    # sharded over the same heads so every shape below stays consistent
+    xh = xs.reshape(B, S, -1, P)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + p["dt_bias"][None, None, :])
     A = -jnp.exp(p["A_log"])
@@ -749,9 +796,12 @@ def mamba_block(p: dict, x: Array, cfg: ModelConfig,
                             cmat.astype(jnp.float32),
                             p["D"], cfg.ssm_chunk,
                             init_state=init_state)
-    y = y.reshape(B, S, di).astype(x.dtype)
-    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
-    return y @ p["out_proj"], (state, new_conv_state)
+    y = y.reshape(B, S, xs.shape[-1]).astype(x.dtype)
+    # the gated norm normalizes over (possibly sharded) d_inner; out_proj
+    # is row-parallel — both carry explicit tp collectives in manual mode
+    y = _tp_rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return (_row_parallel_einsum("bsf,fd->bsd", y, p["out_proj"], x.dtype),
+            (state, new_conv_state))
 
 
 def mamba_decode_step(p: dict, x: Array, cfg: ModelConfig,

@@ -23,6 +23,17 @@ its own (it detects the bound manual axes), so the blocks run the exact
 baseline layer code — including custom_vjp backward rules and remat
 re-traces, which are traced outside any context manager a caller could
 hold around the forward call.
+
+Pipeline stages compose with tensor parallelism: on a
+``("stage", "data", "model")`` mesh each island's in_specs come from
+`pipeline_stage_specs` (`param_specs` composed with
+`stage_stack_specs`), so Megatron-sharded leaves stay ``P("model")``
+inside the manual region.  The schedule's ppermute/psum name only the
+``"stage"`` axis; the block math carries its own tp collectives
+(`manual_tp_size` branches in `repro.models.layers`: explicit
+``psum("model")`` after row-parallel projections, d_inner-consistent
+head counts for Mamba, local-expert dispatch + psum combine for MoE) —
+the same reductions GSPMD inserts in the non-pipelined forward.
 """
 from __future__ import annotations
 
@@ -35,7 +46,8 @@ from jax.sharding import PartitionSpec as P
 from repro.dist.compat import shard_map
 from repro.dist.context import active_mesh
 from repro.dist.pipeline import pipeline_apply_microbatched
-from repro.dist.sharding import data_axes, data_par_size
+from repro.dist.sharding import (data_axes, data_par_size,
+                                 pipeline_stage_specs)
 from repro.models.common import ModelConfig
 from repro.models.transformer import _apply_block, ce_from_hidden, encode
 from repro.models import layers as L
@@ -125,6 +137,13 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
         st = stage_stack(params["layers"][pos], n_stages)
         stage = _stage_fn(cfg, spec, remat)
         bspec = lambda t: jax.tree.map(lambda _: P(bentry), t)
+        # island in_specs are param_specs composed with stage_stack_specs:
+        # every leaf keeps its Megatron model-axis entry alongside the
+        # leading stage entry, so tensor-sharded dims stay P("model")
+        # inside the manual region (the block math reduces row-parallel
+        # partials with explicit psum("model") — see repro.models.layers)
+        # while the schedule's own collectives name only the stage axis
+        st_specs = pipeline_stage_specs(st, mesh, axis=axis)
 
         if static is None:
             def island(st, carry, _stage=stage):
@@ -132,7 +151,7 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
                     _stage, st, carry, n_micro, axis=axis,
                     schedule=schedule)
 
-            in_specs = (jax.tree.map(lambda _: P(axis), st), bspec(carry))
+            in_specs = (st_specs, bspec(carry))
             args = (st, carry)
         else:
             def island(st, carry, static, _stage=stage):
@@ -140,8 +159,7 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
                     _stage, st, carry, n_micro, axis=axis, static=static,
                     schedule=schedule)
 
-            in_specs = (jax.tree.map(lambda _: P(axis), st), bspec(carry),
-                        bspec(static))
+            in_specs = (st_specs, bspec(carry), bspec(static))
             args = (st, carry, static)
 
         carry = shard_map(

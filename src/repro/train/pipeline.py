@@ -43,11 +43,13 @@ class PipelinePlan:
     n_micro: int
     repeats_per_stage: int
     sizes: tuple[int, ...]            # balance_stages output, repeats/stage
-    block_costs_s: tuple[float, ...]  # per pattern position, one repeat
+    block_costs_s: tuple[float, ...]  # per pattern position, one repeat,
+    #                                   per model shard (already tp-divided)
     stage_time_s: float               # predicted bottleneck stage time
     bubble: float                     # analytic fill/drain bubble fraction
     axis: str = "stage"
     schedule: str = "gpipe"           # backward ordering: "gpipe" | "1f1b"
+    tp: int = 1                       # model-parallel degree inside stages
     # analytic *schedule model* (see pipeline_peak_inflight): what a
     # loss-in-schedule executor stashes.  The island-based train step
     # keeps the loss outside the schedule, so it stashes M microbatches
@@ -77,15 +79,26 @@ def _analytic_block_cost(cfg: ModelConfig, pos: int, tokens: int) -> float:
     return 6.0 * n * tokens / PEAK_FLOPS
 
 
-def estimate_block_costs(cfg: ModelConfig, batch: int, seq: int
-                         ) -> list[float]:
+def estimate_block_costs(cfg: ModelConfig, batch: int, seq: int,
+                         tp: int = 1) -> list[float]:
     """Per-pattern-position cost (seconds) of one block's forward at
     (batch, seq): XLA cost analysis of the lowered block (the stage
     profiler's FLOP/byte estimates) folded through the roofline,
     falling back to the analytic 6·N·D estimate when compilation of the
-    probe is unavailable."""
+    probe is unavailable.
+
+    `tp` prices *per-model-shard* work: the probe lowers the full block
+    and the roofline time divides by `tp`, since every sharded tensor
+    (heads, d_ff, d_inner, experts) splits its FLOPs and bytes evenly
+    over the model axis — so `balance_stages` partitions stages by the
+    work one device actually runs, not the unsharded block.  (The
+    replicated residue — norms, routers — is negligible at roofline
+    granularity; a uniform divisor also leaves the *relative* costs, and
+    hence the partition, of homogeneous stacks unchanged.)"""
     from repro.models.transformer import _apply_block, _init_block
 
+    if tp < 1:
+        raise ValueError(f"need tp >= 1, got {tp}")
     costs = []
     x_sds = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
                                  jnp.dtype(cfg.dtype))
@@ -108,15 +121,24 @@ def estimate_block_costs(cfg: ModelConfig, batch: int, seq: int
             log.debug("block cost probe failed at pos %d (%s); "
                       "using analytic estimate", pos, exc)
             cost = _analytic_block_cost(cfg, pos, batch * seq)
-        costs.append(cost)
+        costs.append(cost / tp)
     return costs
 
 
 def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
                   global_batch: int, seq_len: int, dp: int = 1,
-                  axis: str = "stage", schedule: str = "gpipe",
+                  tp: int = 1, axis: str = "stage",
+                  schedule: str = "gpipe",
                   block_costs: list[float] | None = None) -> PipelinePlan:
     """Validate and price an (n_stages, n_micro) pipeline for `cfg`.
+
+    `tp` is the model-parallel degree *inside* each stage (the mesh's
+    ``"model"`` axis): block costs are priced per model shard
+    (`estimate_block_costs(tp=...)`) so `balance_stages` and the
+    bottleneck `stage_time_s` reflect the work one device runs on a
+    stage × data × model mesh.  Microbatch activation bytes are
+    unchanged by `tp` — the residual stream is replicated over the model
+    axis inside the islands.
 
     `schedule` picks the backward ordering ("gpipe" or "1f1b"); it does
     not change the partition or the bubble, only the plan's predicted
@@ -138,6 +160,8 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
         raise ValueError(f"need n_stages >= 1, got {n_stages}")
     if n_micro < 1:
         raise ValueError(f"need n_micro >= 1, got {n_micro}")
+    if tp < 1:
+        raise ValueError(f"need tp >= 1, got {tp}")
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
     if cfg.n_repeats < n_stages:
@@ -154,7 +178,7 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
 
     mb = max(local_batch // n_micro, 1)
     costs = (list(block_costs) if block_costs is not None
-             else estimate_block_costs(cfg, mb, seq_len))
+             else estimate_block_costs(cfg, mb, seq_len, tp=tp))
     if len(costs) != len(cfg.pattern):
         raise ValueError(
             f"got {len(costs)} block costs for {len(cfg.pattern)} positions")
@@ -179,7 +203,7 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
         sizes=tuple(sizes), block_costs_s=tuple(costs),
         stage_time_s=stage_time,
         bubble=pipeline_bubble_fraction(n_micro, n_stages), axis=axis,
-        schedule=schedule,
+        schedule=schedule, tp=tp,
         peak_inflight=pipeline_peak_inflight(n_micro, n_stages, schedule),
         peak_activation_bytes=pipeline_peak_activation_bytes(
             n_micro, n_stages, schedule, mb_bytes))

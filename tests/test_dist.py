@@ -63,6 +63,25 @@ def test_batch_spec_ndims():
     assert data_axes(mesh) == ("data",)
 
 
+def test_batch_spec_searches_axis_subsets():
+    """Regression: a batch divisible only by an *inner or outer* subset of
+    the data axes must shard over that subset, not fall to replicated
+    (the old implementation dropped axes outermost-first, so batch 2 on a
+    ("pod"=2, "data"=4) mesh went replicated even though "pod" divides).
+    Ties on shard count keep the old innermost preference."""
+    from jax.sharding import AbstractMesh
+
+    pd = AbstractMesh((("pod", 2), ("data", 4), ("model", 1)))
+    assert batch_spec(pd, 8, 2) == P(("pod", "data"), None)
+    assert batch_spec(pd, 4, 2) == P(("data",), None)
+    assert batch_spec(pd, 2, 2) == P(("pod",), None)       # the fix
+    assert batch_spec(pd, 6, 2) == P(("pod",), None)       # 6 = 2·3
+    assert batch_spec(pd, 3, 2) == P(None, None)
+    sym = AbstractMesh((("pod", 2), ("data", 2), ("model", 2)))
+    assert batch_spec(sym, 2, 2) == P(("data",), None)     # tie → inner
+    assert batch_spec(sym, 4, 2) == P(("pod", "data"), None)
+
+
 # ------------------------------------------------------------- param_specs
 def test_param_specs_by_name():
     sds = jax.ShapeDtypeStruct
@@ -121,9 +140,13 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 
     pod = make_mesh((2, 2, 2), ("pod", "data", "model"))
     assert batch_spec(pod, 8, 2) == P(("pod", "data"), None)
-    # batch 2 divides only the inner data axis: the pod axis drops
+    # batch 2 divides either single axis: ties keep the inner data axis
     assert batch_spec(pod, 2, 2) == P(("data",), None)
     assert batch_spec(pod, 3, 2) == P(None, None)
+    # subset search: a batch divisible only by the outer pod axis still
+    # shards over it (used to fall all the way to replicated)
+    pd = make_mesh((2, 4, 1), ("pod", "data", "model"))
+    assert batch_spec(pd, 2, 2) == P(("pod",), None)
 
     # -- moe_groups rounds up to a multiple of the dp shard count
     with sharding_context(pod):

@@ -377,6 +377,83 @@ def test_stage_stack_specs():
     assert out["mixer"]["wq"] == P("stage", None, "model")
     with pytest.raises(ValueError):
         stage_stack_specs({"bad": P("model", None)})
+    # a rank-0 leaf's P() must raise (P("stage") is invalid for a scalar
+    # and used to surface only much later, inside with_shardings)
+    with pytest.raises(ValueError, match="rank-0"):
+        stage_stack_specs({"scalar": P()})
+
+
+# ------------------------------------- island in_specs: param ∘ stage specs
+def _stacked_abs(arch: str, n_stages: int, tp: int):
+    """Abstract stage-stacked block trees per pattern position."""
+    import jax
+    from repro.configs import get_smoke
+    from repro.models.common import tp_align
+    from repro.models.pipeline import stage_stack
+    from repro.models.transformer import abstract_params
+
+    cfg = tp_align(get_smoke(arch), tp)
+    params = abstract_params(cfg)
+    return cfg, [jax.eval_shape(lambda t, _s=n_stages: stage_stack(t, _s),
+                                pos) for pos in params["layers"]]
+
+
+def test_pipeline_stage_specs_compose():
+    """`param_specs ∘ stage_stack_specs`: every Megatron model entry lands
+    on the right-indexed dim next to the leading stage entry, for every
+    layer kind (attn / MoE / mamba)."""
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.dist.sharding import pipeline_stage_specs
+
+    mesh = AbstractMesh((("stage", 2), ("data", 2), ("model", 2)))
+
+    _, attn = _stacked_abs("granite-3-8b", 2, 2)
+    specs = pipeline_stage_specs(attn[0], mesh)
+    # stacked leaves are (S, R/S, ...): stage leads, model keeps its
+    # right-indexed dim (wq (.., d, H, hd) → heads; wo (.., H, hd, d) rows)
+    assert specs["ln1"] == P("stage", None, None)
+    assert specs["mixer"]["wq"] == P("stage", None, None, "model", None)
+    assert specs["mixer"]["wo"] == P("stage", None, "model", None, None)
+    assert specs["ffn"]["w_up"] == P("stage", None, None, "model")
+    assert specs["ffn"]["w_down"] == P("stage", None, "model", None)
+
+    _, moe = _stacked_abs("qwen3-moe-30b-a3b", 2, 2)
+    specs = pipeline_stage_specs(moe[0], mesh)
+    assert specs["ffn"]["we_up"] == P("stage", None, "model", None, None)
+    assert specs["ffn"]["we_down"] == P("stage", None, "model", None, None)
+    assert specs["ffn"]["router"] == P("stage", None, None, None)
+
+    _, mam = _stacked_abs("mamba2-370m", 2, 2)
+    specs = pipeline_stage_specs(mam[0], mesh)
+    assert specs["mixer"]["w_z"] == P("stage", None, None, "model")
+    assert specs["mixer"]["out_proj"] == P("stage", None, "model", None)
+    assert specs["mixer"]["conv_x"] == P("stage", None, None, "model")
+    # per-head tensors shard with d_inner so manual islands see
+    # consistent local head counts
+    assert specs["mixer"]["A_log"] == P("stage", None, "model")
+    assert specs["mixer"]["dt_bias"] == P("stage", None, "model")
+    assert specs["mixer"]["w_B"] == P("stage", None, None, None)
+
+
+def test_pipeline_stage_specs_sanitize_and_strict():
+    """On a mesh without a model axis the model entries drop (and nothing
+    else); on a model mesh whose size doesn't divide the sharded dims the
+    helper raises instead of silently replicating (the island's explicit
+    psums would double-count)."""
+    import jax
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.dist.sharding import pipeline_stage_specs
+
+    _, attn = _stacked_abs("granite-3-8b", 2, 1)
+    dp_mesh = AbstractMesh((("stage", 2), ("data", 2)))
+    specs = pipeline_stage_specs(attn[0], dp_mesh)
+    flat = jax.tree.leaves(specs, is_leaf=lambda l: isinstance(l, P))
+    assert all("model" not in tuple(s) for s in flat)
+    assert all(tuple(s)[0] == "stage" for s in flat)
+
+    huge_tp = AbstractMesh((("stage", 2), ("data", 1), ("model", 7)))
+    with pytest.raises(ValueError, match="model axis"):
+        pipeline_stage_specs(attn[0], huge_tp)
 
 
 # --------------------------------------- end-to-end launch-layer wiring
@@ -482,6 +559,12 @@ MOE_SCRIPT = textwrap.dedent("""
     l2 = run(2, mesh_shape=(2, 2), axes=("stage", "data"), microbatch=2)
     diffs = [abs(a - b) / abs(a) for a, b in zip(l1, l2)]
     assert all(d < 2e-2 for d in diffs), (l1, l2, diffs)
+    # stage x model: experts sharded inside the islands (manual EP with a
+    # local-expert dispatch and a psum("model") combine)
+    l3 = run(2, mesh_shape=(2, 1, 2), axes=("stage", "data", "model"),
+             microbatch=2)
+    diffs = [abs(a - b) / abs(a) for a, b in zip(l1, l3)]
+    assert all(d < 2e-2 for d in diffs), (l1, l3, diffs)
     print("MOE PIPE DP OK")
 """)
 
@@ -526,3 +609,142 @@ def test_encdec_pipeline_static_encoder_input():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
     assert "ENCDEC PIPE OK" in r.stdout
+
+
+# pipeline × tensor parallelism (the PP×TP composition): on a full
+# (stage=2, data=2, model=2) mesh the islands run Megatron-sharded blocks
+# — in_specs from param_specs ∘ stage_stack_specs, explicit psum("model")
+# tp collectives in the block math — and the loss trajectory must match
+# the tp-only baseline for BOTH schedules (acceptance criterion).
+PPTP_TRAIN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.launch.train import build
+
+    def run(stages, mesh_shape, axes, microbatch=0, schedule="gpipe"):
+        cfg, mesh, state, step, data = build(
+            "granite-3-8b", smoke=True, global_batch=8, seq_len=64,
+            stages=stages, microbatch=microbatch, schedule=schedule,
+            mesh_shape=mesh_shape, axes=axes, seed=0)
+        losses = []
+        for i in range(3):
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        return losses, state, mesh
+
+    l_tp, _, _ = run(1, (2, 2), ("data", "model"))
+    lg, sg, mesh = run(2, (2, 2, 2), ("stage", "data", "model"),
+                       microbatch=2)
+    lf, _, _ = run(2, (2, 2, 2), ("stage", "data", "model"),
+                   microbatch=2, schedule="1f1b")
+    for name, lp in (("gpipe", lg), ("1f1b", lf)):
+        diffs = [abs(a - b) / max(abs(a), 1e-9) for a, b in zip(l_tp, lp)]
+        assert all(d < 2e-2 for d in diffs), (name, l_tp, lp, diffs)
+    assert dict(mesh.shape) == {"stage": 2, "data": 2, "model": 2}
+    # the layer stack is genuinely sharded over stage AND model devices
+    leaf = sg[0]["layers"][0]["mixer"]["wq"]
+    assert str(leaf.sharding.spec[0]) == "stage"
+    assert "model" in str(leaf.sharding.spec)
+    assert len(leaf.sharding.device_set) == 8
+    print("PPTP OK", l_tp, lg, lf)
+""")
+
+
+def test_pipeline_composes_with_tensor_parallelism():
+    """(stage=2, data=2, model=2): `--stages 2` over Megatron-sharded
+    blocks matches the tp-only baseline for gpipe and 1f1b."""
+    r = subprocess.run([sys.executable, "-c", PPTP_TRAIN_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "PPTP OK" in r.stdout
+
+
+# mamba under PP×TP: d_inner-sharded projections, per-head tensors sliced
+# by the sharded specs, tp rmsnorm + row-parallel out_proj in the island
+MAMBA_PPTP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.launch.train import build
+
+    def run(stages, mesh_shape, axes, microbatch=0):
+        cfg, mesh, state, step, data = build(
+            "mamba2-370m", smoke=True, global_batch=8, seq_len=32,
+            stages=stages, microbatch=microbatch, seed=0,
+            mesh_shape=mesh_shape, axes=axes)
+        losses = []
+        for i in range(2):
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        return losses
+
+    l1 = run(1, (2, 2), ("data", "model"))
+    l2 = run(2, (2, 1, 2), ("stage", "data", "model"), microbatch=2)
+    diffs = [abs(a - b) / abs(a) for a, b in zip(l1, l2)]
+    assert all(d < 2e-2 for d in diffs), (l1, l2, diffs)
+    print("MAMBA PPTP OK")
+""")
+
+
+def test_mamba_pipeline_composes_with_model_axis():
+    r = subprocess.run([sys.executable, "-c", MAMBA_PPTP_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "MAMBA PPTP OK" in r.stdout
+
+
+# dryrun pp×tp cell: the schedule's stage-axis ppermute bytes must be
+# unchanged from the dp-only pipeline cell (the rotated activations are
+# replicated over model), while model-axis all-reduces appear in the
+# per-axis collective attribution (acceptance criterion).
+DRYRUN_PPTP_SCRIPT = textwrap.dedent("""
+    from repro.launch.dryrun import lower_cell   # sets 512 host devices
+    from repro.models.common import ShapeSpec
+
+    small = ShapeSpec("train_smoke", 64, 8, "train")
+    kw = dict(smoke=True, shape_override=small, data_par=2, n_micro=2)
+    pp = lower_cell("granite-3-8b", "train_4k", stages=2, **kw)
+    tp = lower_cell("granite-3-8b", "train_4k", stages=2, model_par=2,
+                    **kw)
+    assert pp["mesh"] == "pp2" and tp["mesh"] == "pp2xtp2", (pp, tp)
+    assert tp["pipeline"]["tp"] == 2
+    assert pp["pipeline"]["ppermute_bytes"] > 0
+    assert pp["pipeline"]["ppermute_bytes"] == tp["pipeline"][
+        "ppermute_bytes"], (pp["pipeline"], tp["pipeline"])
+    by_axis = tp["per_device"]["collective_bytes_by_axis"]
+    assert by_axis.get("model", {}).get("all-reduce", 0.0) > 0, by_axis
+    assert by_axis.get("stage", {}).get("collective-permute", 0.0) > 0
+    # per-shard pricing: tp=2 halves the estimated block costs
+    assert tp["pipeline"]["stage_time_s"] < pp["pipeline"]["stage_time_s"]
+    print("DRYRUN PPTP OK")
+""")
+
+
+def test_dryrun_pptp_cell_stage_ppermute_unchanged():
+    r = subprocess.run([sys.executable, "-c", DRYRUN_PPTP_SCRIPT],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "DRYRUN PPTP OK" in r.stdout
+
+
+# ------------------------------------------------- mesh CLI validation
+def test_parse_mesh_cli_validates_against_stages():
+    from repro.launch.train import parse_mesh_cli
+
+    assert parse_mesh_cli(None, None, 1) == (None, None)
+    assert parse_mesh_cli("2,2,2", None, 2) == \
+        ((2, 2, 2), ("stage", "data", "model"))
+    assert parse_mesh_cli("4,2", "data,model", 1) == \
+        ((4, 2), ("data", "model"))
+    with pytest.raises(ValueError):        # --axes without --mesh-shape
+        parse_mesh_cli(None, "data,model", 1)
+    with pytest.raises(ValueError):        # rank mismatch
+        parse_mesh_cli("2,2,2", "data,model", 1)
+    with pytest.raises(ValueError):        # unknown axis name
+        parse_mesh_cli("2,2", "data,expert", 1)
+    with pytest.raises(ValueError):        # stage axis size != --stages
+        parse_mesh_cli("2,2,2", "stage,data,model", 4)
+    with pytest.raises(ValueError):        # stage axis without --stages
+        parse_mesh_cli("2,2,2", "stage,data,model", 1)
+    with pytest.raises(ValueError):        # not ints
+        parse_mesh_cli("2,x", "data,model", 1)
