@@ -11,6 +11,9 @@ test:
 
 # multi-device mode: 8 fake host devices for the in-process tests too,
 # plus a PP×TP (stage=2, model=2) smoke train run through the real CLI
+# and a heterogeneous-partition smoke: --stages 3 on the jamba hybrid
+# (n_repeats=4 not divisible by 3 → padded per-stage stacks), both
+# schedules
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PY) -m pytest -q tests/test_dist.py tests/test_multidevice.py \
@@ -21,6 +24,15 @@ test-dist:
 	    --global-batch 8 --seq-len 64 --stages 2 --microbatch 2 \
 	    --mesh-shape 2,2,2 --axes stage,data,model \
 	    --ckpt-dir checkpoints/pptp-smoke
+	rm -rf checkpoints/het-smoke checkpoints/het-smoke-1f1b
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m repro.launch.train --arch jamba-v0.1-52b --smoke --steps 2 \
+	    --global-batch 4 --seq-len 32 --stages 3 --microbatch 2 \
+	    --schedule gpipe --ckpt-dir checkpoints/het-smoke
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m repro.launch.train --arch jamba-v0.1-52b --smoke --steps 2 \
+	    --global-batch 4 --seq-len 32 --stages 3 --microbatch 2 \
+	    --schedule 1f1b --ckpt-dir checkpoints/het-smoke-1f1b
 
 bench:
 	$(PY) -m benchmarks.run
@@ -32,6 +44,9 @@ bench:
 bench-smoke:
 	$(PY) -m repro.launch.dryrun --arch granite-3-8b --shape train_4k \
 	    --smoke --stages 2 --model-par 2 --data-par 4 --microbatch 2 \
+	    --out results/dryrun-smoke
+	$(PY) -m repro.launch.dryrun --arch jamba-v0.1-52b --shape train_4k \
+	    --smoke --stages 3 --data-par 2 --microbatch 2 \
 	    --out results/dryrun-smoke
 	$(PY) -m benchmarks.run --tolerate-failures
 

@@ -42,7 +42,11 @@ SMOKE = ModelConfig(
     pattern=tuple(
         LayerSpec(kind=LayerKind.ATTN if i == 1 else LayerKind.MAMBA,
                   moe=(i % 2 == 1)) for i in range(4)),
-    n_repeats=1,
+    # 4 repeats (matching the full config) keep the hybrid pattern
+    # pipeline-able at smoke scale — including the heterogeneous
+    # n_repeats % n_stages != 0 split at --stages 3 (repeats are
+    # lax.scan'd, so this costs runtime, not compile time)
+    n_repeats=4,
     d_model=64,
     num_heads=4,
     num_kv_heads=2,

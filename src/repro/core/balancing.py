@@ -46,18 +46,35 @@ def realize_factors(stage: Stage, n_uni: int,
                     max_cu: int = 4) -> Factors:
     """Fig. 13: split N_uni into unroll × simd × cu, cheapest first.
 
-    unroll takes as much as it can (bounded by the loop trip count /
-    MAX_UNROLL_FACTOR); SIMD covers the next power-of-two chunk when the
-    kernel is vectorizable; CU replication absorbs the rest.
+    The realized product equals the grant whenever the grant is
+    realizable within the bounds (unroll ≤ max_unroll, SIMD a power of
+    two ≤ 16, cu ≤ max_cu); otherwise the largest realizable product ≤
+    N_uni wins.  Ties prefer more unroll, then more SIMD — the paper's
+    increasing resource-cost order.  (The old greedy
+    ``unroll = min(n_uni, max_unroll)`` silently dropped granted factors
+    whenever the truncating ``n_uni // unroll`` lost a remainder:
+    N_uni=12 with max_unroll=8 realized only unroll=8 — product 8 — where
+    unroll=6 × cu=2 realizes the full grant.)
     """
-    unroll = min(n_uni, max_unroll)
-    rest = max(1, n_uni // max(unroll, 1))
-    simd = 1
-    if vectorizable and rest > 1:
-        simd = 1 << min(int(math.log2(rest)), 4)   # SIMD power of two, ≤16
-        rest = max(1, rest // simd)
-    cu = min(rest, max_cu)
-    return Factors(unroll=unroll, simd=simd, cu=cu)
+    n = max(1, int(n_uni))
+    simd_opts = [s for s in (16, 8, 4, 2, 1) if s <= n] \
+        if vectorizable else [1]
+    best = Factors()
+    best_key = (best.n_uni, best.unroll, best.simd)
+    for unroll in range(min(n, max(1, int(max_unroll))), 0, -1):
+        for simd in simd_opts:
+            if unroll * simd > n:
+                continue
+            cu = min(n // (unroll * simd), max_cu)
+            cand = Factors(unroll=unroll, simd=simd, cu=cu)
+            key = (cand.n_uni, cand.unroll, cand.simd)
+            if key > best_key:
+                best, best_key = cand, key
+            if cand.n_uni == n and cand.unroll == min(n, int(max_unroll)):
+                # full grant at the maximal unroll: nothing later in
+                # either loop can compare greater
+                return best
+    return best
 
 
 def _grant(n_uni: int, stage: Stage, max_unroll: int) -> int:

@@ -53,7 +53,14 @@ Tree = Any
 
 def balance_stages(times: Sequence[float], n_stages: int) -> list[int]:
     """Partition `times` into `n_stages` contiguous groups minimizing the
-    max group sum.  Returns group sizes (every group non-empty)."""
+    max group sum.  Returns group sizes (every group non-empty).
+
+    Ties are front-loaded: among the optimal partitions the last group is
+    as small as any of them allows, recursively for the prefix at its own
+    optimum, so extra layers land on earlier stages — e.g.
+    ``balance_stages([1]*4, 3) == [2, 1, 1]``.  `plan_pipeline` relies on
+    this so padded per-stage stacks pad the *tail* stages.
+    """
     n = len(times)
     if not 1 <= n_stages <= n:
         raise ValueError(f"need 1 <= n_stages={n_stages} <= n_layers={n}")
@@ -68,9 +75,10 @@ def balance_stages(times: Sequence[float], n_stages: int) -> list[int]:
         for i in range(k, n + 1):
             for j in range(k - 1, i):
                 cand = max(best[k - 1][j], prefix[i] - prefix[j])
-                # strict < keeps the earliest (most front-loaded) optimal
-                # cut, so ties put extra layers on earlier stages
-                if cand < best[k][i]:
+                # <= keeps the *latest* optimal cut, so the trailing group
+                # is as small as possible and ties front-load: extra
+                # layers go to earlier stages
+                if cand <= best[k][i]:
                     best[k][i] = cand
                     cut[k][i] = j
     sizes: list[int] = []
@@ -85,17 +93,50 @@ def balance_stages(times: Sequence[float], n_stages: int) -> list[int]:
 SCHEDULES = ("gpipe", "1f1b")
 
 
-def pipeline_bubble_fraction(n_micro: int, n_stages: int) -> float:
-    """Analytic fill/drain bubble: (S-1) / (M + S-1) of device-ticks idle.
+def pipeline_bubble_fraction(n_micro: int, n_stages: int,
+                             stage_times: Sequence[float] | None = None
+                             ) -> float:
+    """Analytic fill/drain bubble fraction of device-time idle.
 
-    The formula holds for *both* schedules (GPipe and 1F1B): with M
-    microbatches over S stages, either step program spans 2·(M + S - 1)
-    ticks of which 2·M per stage are useful — the schedules differ in
-    *peak activation memory* (`pipeline_peak_inflight`), not in bubble.
+    Uniform stages (``stage_times=None``): (S-1) / (M + S-1) — with M
+    microbatches over S equal stages, either step program spans
+    2·(M + S - 1) ticks of which 2·M per stage are useful.  The formula
+    holds for *both* schedules (GPipe and 1F1B): they differ in *peak
+    activation memory* (`pipeline_peak_inflight`), not in bubble.
+
+    Heterogeneous stages (``stage_times=[t_0, .., t_{S-1}]``): the
+    pipeline period is set by the bottleneck stage, so the span is
+    ``(M-1)·max_s t_s + Σ_s t_s`` (fill through every stage once, then
+    M-1 bottleneck periods) and the useful device-time is ``M·Σ_s t_s``
+    out of ``S`` devices busy for the whole span:
+
+        bubble = 1 − M·Σ t_s / (S·((M−1)·max t + Σ t))
+
+    which collapses to the uniform closed form when all t_s are equal.
+    Heterogeneous plans must price their bubble at least this way — the
+    uniform formula is optimistic whenever one stage is slower than the
+    rest.  Note the span models *asynchronous* stage starts (a stage
+    forwards as soon as its input arrives); `pipeline_apply_microbatched`
+    advances stages in lockstep through a per-tick ring ppermute, so its
+    realized span is the still-larger ``(M+S−1)·max_s t_s`` — this
+    overload is the schedule-independent lower-bound model, the lockstep
+    penalty on top of it is the same fill/drain geometry the uniform
+    measured-vs-analytic comparison already carries.
     """
     if n_micro < 1 or n_stages < 1:
         raise ValueError("need n_micro >= 1 and n_stages >= 1")
-    return (n_stages - 1) / (n_micro + n_stages - 1)
+    if stage_times is None:
+        return (n_stages - 1) / (n_micro + n_stages - 1)
+    ts = [float(t) for t in stage_times]
+    if len(ts) != n_stages:
+        raise ValueError(
+            f"got {len(ts)} stage_times for n_stages={n_stages}")
+    if any(t < 0.0 for t in ts) or max(ts, default=0.0) <= 0.0:
+        raise ValueError(f"stage_times must be >= 0 with a positive "
+                         f"bottleneck, got {ts}")
+    total = sum(ts)
+    span = (n_micro - 1) * max(ts) + total
+    return 1.0 - (n_micro * total) / (n_stages * span)
 
 
 def pipeline_peak_inflight(n_micro: int, n_stages: int,

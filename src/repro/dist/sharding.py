@@ -155,12 +155,16 @@ def stage_stack_specs(specs: Tree, axis: str = "stage") -> Tree:
     pipeline `axis`.
 
     The canonical param layout stacks each pattern position's blocks along
-    a leading `n_repeats` dim; with `n_repeats % n_stages == 0` that dim
-    shards over the ``"stage"`` mesh axis so device s holds exactly its
-    stage's contiguous repeats — the same slices the in-step
-    ``(S, R/S, ...)`` reshape hands to `pipeline_apply*`.  Leading stack
-    dims are never model-sharded (`_MODEL_DIM_BY_NAME` indexes from the
-    right), so the entry is always free.
+    a leading `n_repeats` dim; when that dim divides the stage axis it
+    shards so device s holds exactly its stage's contiguous repeats — the
+    same slices the in-step ``(S, R/S, ...)`` reshape hands to
+    `pipeline_apply*`.  Heterogeneous plans instead hand the executors a
+    *padded* stage-stacked view whose leading dim is exactly `n_stages`
+    (`repro.models.pipeline.stage_stack(sizes=...)`), which this spec
+    shards unchanged; the canonical storage's non-dividing `n_repeats`
+    dim then sanitizes to replicated at application time (`_sanitize`).
+    Leading stack dims are never model-sharded (`_MODEL_DIM_BY_NAME`
+    indexes from the right), so the entry is always free.
     """
     def s(spec: P) -> P:
         entries = list(spec)
@@ -187,7 +191,8 @@ def pipeline_stage_specs(stacked_abs: Tree, mesh: Mesh,
     `stage_stack_specs`, sanitized against the concrete `mesh`.
 
     `stacked_abs` is one pattern position's stage-stacked block params
-    (leaves ``(S, R/S, ...)``, see `repro.models.pipeline.stage_stack`).
+    (leaves ``(S, K, ...)`` — K = R/S for a uniform split, the padded
+    chunk length otherwise; see `repro.models.pipeline.stage_stack`).
     Each leaf's spec carries the leading ``axis`` entry *and* its
     Megatron model-axis entry, so model-sharded leaves stay ``P("model")``
     inside the shard_map island instead of replicating over the model

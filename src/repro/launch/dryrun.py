@@ -281,6 +281,23 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
             "repeats_per_stage": plan.repeats_per_stage,
             "block_costs_s": list(plan.block_costs_s),
             "stage_time_s": plan.stage_time_s,
+            # heterogeneous-partition record: which candidate won
+            # (uniform / staggered / block), the per-position per-stage
+            # valid repeats, per-stage fused-bottleneck times, and the
+            # padded-FLOPs overhead column — the cost-weighted fraction
+            # of scanned block work that is padding (masked out,
+            # skipped by the stage scan's lax.cond):
+            #   1 − R·Σc / (S · Σ_pos K_pos·c_pos)
+            "partition": plan.partition,
+            "sizes": [list(row) for row in plan.sizes],
+            "stage_times_s": list(plan.stage_times_s),
+            "padded_repeats": list(plan.padded_repeats),
+            "padded_stage_time_s": plan.padded_stage_time_s,
+            "padding_overhead": plan.padding_overhead,
+            "padded_flops_fraction": (
+                1.0 - (cfg.n_repeats * sum(plan.block_costs_s))
+                / (plan.n_stages * plan.padded_stage_time_s)
+                if plan.padded_stage_time_s > 0 else 0.0),
             "predicted_bubble": plan.bubble,
             "peak_inflight": plan.peak_inflight,
             "peak_activation_bytes": plan.peak_activation_bytes,

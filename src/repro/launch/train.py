@@ -63,17 +63,25 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
                              dp=dp, tp=tp, schedule=schedule)
         log.info(
             "pipeline plan: schedule=%s stages=%d micro=%d tp=%d "
-            "repeats/stage=%d stage_time=%.3gs bubble=%.1f%% "
+            "partition=%s stage_times=%s stage_time=%.3gs "
+            "padding_overhead=%.1f%% bubble=%.1f%% "
             "peak_act_model=%d×mb=%.3gMB block_costs=%s",
             plan.schedule, plan.n_stages, plan.n_micro, plan.tp,
-            plan.repeats_per_stage, plan.stage_time_s, 100 * plan.bubble,
+            plan.partition,
+            ["%.3g" % t for t in plan.stage_times_s],
+            plan.stage_time_s, 100 * plan.padding_overhead,
+            100 * plan.bubble,
             plan.peak_inflight, plan.peak_activation_bytes / 1e6,
             ["%.3g" % c for c in plan.block_costs_s])
 
     params = init_params(cfg, jax.random.key(seed))
     pspecs = param_specs(params)
     if plan is not None:
-        # stage-partition the layer stack: device s holds its repeats only
+        # stage-partition the layer stack: device s holds its repeats only.
+        # When n_repeats doesn't divide n_stages the canonical (R, ...)
+        # leading dim can't shard evenly, so sanitization drops the stage
+        # entry and storage replicates; the in-step padded (S, K, ...)
+        # view still computes stage-local (see models.pipeline.stage_stack)
         pspecs = dict(pspecs)
         pspecs["layers"] = [stage_stack_specs(s) for s in pspecs["layers"]]
     params = with_shardings(params, pspecs, mesh)
@@ -197,8 +205,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--stages", type=int, default=1,
-                    help="pipeline stages over a 'stage' mesh axis "
-                         "(needs >= stages devices; on CPU set "
+                    help="pipeline stages over a 'stage' mesh axis — any "
+                         "n_stages <= n_repeats (non-divisible counts run "
+                         "padded per-stage stacks; needs >= stages "
+                         "devices; on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
     ap.add_argument("--microbatch", type=int, default=0,
                     help="pipeline microbatches per step (default: "

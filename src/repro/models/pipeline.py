@@ -10,9 +10,11 @@ stay in the automatically-sharded outer world.
 Layer order matches the baseline `forward` exactly: the baseline applies
 all `n_repeats` of pattern position 0, then all of position 1, etc.
 (position-major), so each position's repeats are pipelined
-*independently* — stage s holds repeats ``[s·k, (s+1)·k)`` of every
-position, and sequential composition across stages reproduces the
-baseline scan order op-for-op.  Per microbatch, every op is the same op
+*independently* — stage s holds a contiguous chunk of every position's
+repeats (equal chunks ``[s·k, (s+1)·k)`` for a uniform plan, per-stage
+counts from `PipelinePlan.sizes` for a heterogeneous one, padded and
+masked so every stage scans the same chunk shape), and sequential
+composition across stages reproduces the baseline scan order op-for-op.  Per microbatch, every op is the same op
 the non-pipelined step runs on the same rows, so ``--stages > 1``
 matches the baseline to numerical tolerance (bf16 reduction tiling is
 the only difference), and MoE auxiliary losses are averaged over
@@ -37,7 +39,7 @@ the same reductions GSPMD inserts in the non-pipelined forward.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,25 +57,71 @@ from repro.models import layers as L
 Array = Any
 
 
-def stage_stack(stacked: Any, n_stages: int) -> Any:
-    """(R, ...) stacked block params → (S, R/S, ...): a free reshape that
-    views the canonical layout as per-stage chunks (leading dim shardable
-    over the ``"stage"`` axis, see `repro.dist.sharding.stage_stack_specs`)."""
+def stage_stack(stacked: Any, n_stages: int,
+                sizes: Sequence[int] | None = None) -> Any:
+    """(R, ...) stacked block params → (S, K, ...) per-stage chunks
+    (leading dim shardable over the ``"stage"`` axis, see
+    `repro.dist.sharding.stage_stack_specs`).
+
+    With `sizes=None` the split is uniform — K = R/S, a free reshape —
+    and requires `R % n_stages == 0`.  A heterogeneous `sizes` (one
+    entry per stage, summing to R, entries may be 0) pads each stage's
+    contiguous repeat chunk to ``K = max(sizes)``: padded slots
+    replicate the chunk's last valid repeat (a stage with no valid
+    repeats gets repeat 0) so they stay finite under autodiff, and the
+    stage scan masks them out (`_stage_fn` keeps an identity carry and
+    zero aux for slot r >= sizes[s]).  Their cotangents are exactly
+    zero, so the gather's scatter-add transpose leaves the real repeats'
+    gradients untouched.
+    """
+    uniform = sizes is None
+    if sizes is not None:
+        sizes = tuple(int(k) for k in sizes)
+        if len(sizes) != n_stages or any(k < 0 for k in sizes):
+            raise ValueError(
+                f"sizes={sizes} is not a per-stage split for "
+                f"n_stages={n_stages}")
+        # all-equal sizes take the free-reshape path below, but only
+        # after the sum-to-R check — collapsing first would silently
+        # run a *different* split than the caller asked for
+        uniform = min(sizes) == max(sizes)
+
     def r(leaf):
         R = leaf.shape[0]
-        if R % n_stages:
-            raise ValueError(
-                f"n_repeats={R} not divisible by n_stages={n_stages}")
-        return leaf.reshape(n_stages, R // n_stages, *leaf.shape[1:])
+        if sizes is not None and sum(sizes) != R:
+            raise ValueError(f"sizes={sizes} must sum to n_repeats={R}")
+        if uniform:
+            if R % n_stages:
+                raise ValueError(
+                    f"n_repeats={R} not divisible by n_stages={n_stages} "
+                    "— pass the plan's heterogeneous per-stage `sizes` "
+                    "to use padded per-stage stacks")
+            return leaf.reshape(n_stages, R // n_stages, *leaf.shape[1:])
+        kmax = max(sizes)
+        offs = [0]
+        for k in sizes:
+            offs.append(offs[-1] + k)
+        idx = [[offs[s] + min(r, sizes[s] - 1) if sizes[s] else 0
+                for r in range(kmax)] for s in range(n_stages)]
+        return jnp.take(leaf, jnp.asarray(idx, jnp.int32), axis=0)
 
     return jax.tree.map(r, stacked)
 
 
-def _stage_fn(cfg: ModelConfig, spec, remat: bool):
+def _stage_fn(cfg: ModelConfig, spec, remat: bool,
+              sizes: Sequence[int] | None = None, axis: str = "stage"):
     """One pipeline stage: scan the local chunk of repeats of one pattern
     position.  The rotating carry is batch-leading: ``x`` (b, S, d) and
     ``aux`` (b,); the encoder output for enc-dec archs arrives as the
-    schedule's *static* side input (read locally, never ppermuted)."""
+    schedule's *static* side input (read locally, never ppermuted).
+
+    A heterogeneous `sizes` (per-stage valid-repeat counts, see
+    `stage_stack`) switches the scan to masked form: every stage scans
+    the same padded ``max(sizes)`` chunks, but slot r only updates the
+    carry when ``r < sizes[axis_index(axis)]`` — padded repeats keep the
+    identity carry and contribute zero aux, so the composition across
+    stages is exactly the sequential stack.
+    """
     def body(enc, carry, p):
         x, aux = carry["x"], carry["aux"]
         # `constrain` self-suppresses under the shard_map manual axes, so
@@ -84,10 +132,44 @@ def _stage_fn(cfg: ModelConfig, spec, remat: bool):
     if remat:
         body = jax.checkpoint(body)
 
+    if sizes is not None and min(sizes) == max(sizes):
+        sizes = None            # equal chunks: every scanned slot is valid
+
+    if sizes is None:
+        def stage(local, carry, static=None):
+            enc = None if static is None else static["enc"]
+            carry, _ = jax.lax.scan(
+                lambda c, p: body(enc, c, p), carry, local)
+            return carry
+
+        return stage
+
+    valid_by_stage = tuple(int(k) for k in sizes)
+
     def stage(local, carry, static=None):
         enc = None if static is None else static["enc"]
+        valid = jnp.asarray(valid_by_stage, jnp.int32)[
+            jax.lax.axis_index(axis)]
+        kmax = jax.tree.leaves(local)[0].shape[0]
+
+        def masked(c, rp):
+            r, p = rp
+            # lax.cond, not where: the predicate is uniform across a
+            # stage's (data, model) peers — axis_index(stage) and the
+            # scan counter — so every collective participant inside the
+            # block body takes the same branch, and padded slots *skip*
+            # the block compute instead of computing-and-discarding.
+            # The per-tick stage cost then tracks the valid work the
+            # plan's bottleneck `stage_time_s` prices, not the padded
+            # scan length.
+            return jax.lax.cond(
+                r < valid,
+                lambda c, p: body(enc, c, p)[0],
+                lambda c, p: c,
+                c, p), None
+
         carry, _ = jax.lax.scan(
-            lambda c, p: body(enc, c, p), carry, local)
+            masked, carry, (jnp.arange(kmax, dtype=jnp.int32), local))
         return carry
 
     return stage
@@ -99,7 +181,9 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
                       frames: Array | None = None,
                       remat: bool = False,
                       axis: str = "stage",
-                      schedule: str = "gpipe") -> tuple[Array, Array]:
+                      schedule: str = "gpipe",
+                      sizes: Sequence[Sequence[int]] | None = None
+                      ) -> tuple[Array, Array]:
     """Pipeline-parallel `forward`: → (hidden (B, S_total, d), aux_loss).
 
     Must trace inside a `sharding_context` whose mesh carries the `axis`
@@ -112,6 +196,12 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
     either value matches the baseline to the same tolerance; "1f1b"
     differentiates through an explicit stash/pop step program instead of
     the scan transpose (see `repro.dist.pipeline`).
+
+    `sizes` is the plan's heterogeneous partition
+    (`PipelinePlan.sizes`): one per-stage valid-repeat row per pattern
+    position.  `None` (or all-equal rows) keeps the uniform unpadded
+    split; ragged rows run padded per-stage stacks with the masked
+    stage scan (see `stage_stack` / `_stage_fn`).
     """
     mesh = active_mesh()
     if mesh is None or axis not in mesh.shape:
@@ -121,6 +211,10 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
         raise ValueError(
             f"mesh {axis!r} axis is {mesh.shape[axis]}, plan says "
             f"{n_stages} stages")
+    if sizes is not None and len(sizes) != len(cfg.pattern):
+        raise ValueError(
+            f"sizes has {len(sizes)} rows for {len(cfg.pattern)} pattern "
+            "positions")
 
     x = jnp.take(params["embed"], tokens, axis=0)
     if patch_embeds is not None:
@@ -134,8 +228,9 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
     static = None if enc_out is None else {"enc": enc_out}
 
     for pos, spec in enumerate(cfg.pattern):
-        st = stage_stack(params["layers"][pos], n_stages)
-        stage = _stage_fn(cfg, spec, remat)
+        pos_sizes = None if sizes is None else tuple(sizes[pos])
+        st = stage_stack(params["layers"][pos], n_stages, sizes=pos_sizes)
+        stage = _stage_fn(cfg, spec, remat, sizes=pos_sizes, axis=axis)
         bspec = lambda t: jax.tree.map(lambda _: P(bentry), t)
         # island in_specs are param_specs composed with stage_stack_specs:
         # every leaf keeps its Megatron model-axis entry alongside the
@@ -178,13 +273,15 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
 def loss_fn_pipelined(params: dict, cfg: ModelConfig, batch: dict,
                       n_stages: int, n_micro: int, ce_chunk: int = 512,
                       remat: bool = False, axis: str = "stage",
-                      schedule: str = "gpipe") -> Array:
+                      schedule: str = "gpipe",
+                      sizes: Sequence[Sequence[int]] | None = None
+                      ) -> Array:
     """`loss_fn` with the layer stack executed as a stage pipeline."""
     h, aux = forward_pipelined(
         params, cfg, batch["tokens"], n_stages, n_micro,
         patch_embeds=batch.get("patch_embeds"),
         frames=batch.get("frames"), remat=remat, axis=axis,
-        schedule=schedule)
+        schedule=schedule, sizes=sizes)
     return ce_from_hidden(params, cfg, h, batch["labels"],
                           ce_chunk=ce_chunk) + 0.01 * aux
 

@@ -5,20 +5,59 @@ bottleneck stage is as fast as possible.  Here the "kernels" are the
 transformer blocks: `estimate_block_costs` prices one block per pattern
 position through the same XLA cost-analysis path the MKPipe stage
 profiler uses (`repro.core.planner._stage_cost`), converts FLOPs/bytes
-into a roofline time, and `plan_pipeline` runs `balance_stages` over the
-per-repeat cost vector to derive the per-stage repeat counts.
+into a roofline time, and `choose_partition` runs `balance_stages` over
+the resulting cost vectors to derive per-stage repeat counts.
 
-Stacked per-stage params require every stage to hold the same number of
-repeats of every position; the planner verifies the balanced partition
-is uniform (true exactly when `n_repeats % n_stages == 0`, since all
-repeats of a position cost the same) and reports the predicted bottleneck
-stage time and fill/drain bubble for the chosen (n_micro, n_stages).
+Partitions may be *heterogeneous*: stages need not hold equal repeat
+counts, and different pattern positions may split their repeats across
+the stages differently.  Two cost models matter, because the executor
+runs one pipeline island per pattern position (position-major order):
+
+- **realized island time** `padded_stage_time_s = Σ_p K_p·c_p` (K_p the
+  position's longest per-stage chunk): each island ticks at its own
+  bottleneck stage, so the per-microbatch critical path sums the
+  per-position maxima — this is what today's executor pays;
+- **fused bottleneck** `stage_time_s = max_s Σ_p sizes[p][s]·c_p`: the
+  load-balance bound a schedule that fuses all positions into one tick
+  per stage would pay — MKPipe Alg. 1's objective.
+
+`choose_partition` compares three candidates and keeps the best by
+``(realized island time, fused bottleneck)`` — never trading away
+realized time for a better-looking bound (ties keep the
+earlier-listed, less-padded candidate):
+
+- **uniform** : every position splits `balance_stages([Σcosts]·R, S)`
+  the same way — the old unpadded behavior when `n_repeats % n_stages
+  == 0` (then provably optimal on both metrics, always kept), a
+  front-loaded ceil/floor split otherwise;
+- **staggered** (`n_repeats % n_stages != 0` only): every row keeps
+  chunks in {floor(R/S), ceil(R/S)} — so the realized island time
+  *equals* the uniform split's — but each position places its extra
+  repeats on the stages least loaded so far, heaviest positions first;
+  heterogeneous per-position costs (jamba-style mamba/attn/MoE mixes)
+  make the staggering strictly lower the fused bottleneck — the MKPipe
+  move of balancing unequal kernels in one CKE pipeline;
+- **block** (`n_repeats % n_stages != 0` only): the chain of all
+  `R·P` blocks in position-major execution order cut by
+  `balance_stages` on the flattened per-block cost vector.  The
+  aligned cut minimizes the fused bottleneck but concentrates whole
+  positions on single stages, so its realized island time is provably
+  ≥ the uniform split's — it wins only in degenerate cost vectors
+  (e.g. zero-cost positions) and otherwise documents the gap.
+
+The executors realize any of these with padded per-stage stacks
+(`repro.models.pipeline.stage_stack`): each stage's chunk is padded to
+the position's longest chunk and the stage scan skips the padding, and
+the plan accounts the overhead (`padded_stage_time_s`,
+`padding_overhead`).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import logging
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,16 +76,115 @@ HBM_BW = 819e9
 
 
 @dataclasses.dataclass(frozen=True)
+class StagePartition:
+    """A per-position stage assignment of the layer stack's repeats.
+
+    ``sizes[pos][s]`` is how many repeats of pattern position `pos`
+    stage `s` holds (contiguous in repeat order, possibly 0).  The
+    executors pad each position's chunks to ``padded_repeats[pos] =
+    max_s sizes[pos][s]`` and mask the padding, so every stage scans the
+    same chunk shape while only its valid repeats contribute.
+    """
+    kind: str                           # "uniform" | "staggered" | "block"
+    sizes: tuple[tuple[int, ...], ...]  # [pattern position][stage]
+    stage_times_s: tuple[float, ...]    # per-stage valid-work time
+    padded_repeats: tuple[int, ...]     # per-position padded scan length
+
+    @property
+    def bottleneck_s(self) -> float:
+        """Predicted bottleneck stage time (valid work only)."""
+        return max(self.stage_times_s)
+
+    def padded_stage_time_s(self, costs: Sequence[float]) -> float:
+        """Realized per-microbatch island time, `Σ_pos K_pos·c_pos`:
+        the executor runs one pipeline island per position, each island
+        ticks at its own bottleneck stage (the one holding the longest
+        chunk `K_pos = padded_repeats[pos]`), and the islands are
+        sequential — so this, not `bottleneck_s`, is what today's
+        per-position schedule pays per microbatch.  (It also upper
+        bounds a backend that lowers the padding mask to
+        compute-both-branches select.)"""
+        return sum(k * c for k, c in zip(self.padded_repeats, costs))
+
+
+def choose_partition(costs: Sequence[float], n_repeats: int,
+                     n_stages: int) -> StagePartition:
+    """Pick the stage partition for per-position block costs `costs`.
+
+    Compares the "uniform", "staggered" and "block" candidates (see the
+    module docstring) by ``(realized island time, fused bottleneck)`` and
+    keeps the best — ties keep the earlier-listed candidate, so a
+    divisible `n_repeats % n_stages == 0` (where uniform sits at the
+    lower bound of both metrics) always keeps the old unpadded
+    partition, and a candidate is never chosen on its bottleneck bound
+    at the price of realized time.
+    """
+    P, R, S = len(costs), int(n_repeats), int(n_stages)
+    if not 1 <= S <= R:
+        raise ValueError(f"need 1 <= n_stages={S} <= n_repeats={R}")
+    total = sum(costs)
+
+    def build(kind: str, sizes: list[list[int]]) -> StagePartition:
+        stage_times = tuple(
+            sum(sizes[p][s] * costs[p] for p in range(P)) for s in range(S))
+        return StagePartition(
+            kind=kind,
+            sizes=tuple(tuple(row) for row in sizes),
+            stage_times_s=stage_times,
+            padded_repeats=tuple(max(row) for row in sizes))
+
+    def key(part: StagePartition):
+        return (part.padded_stage_time_s(costs), part.bottleneck_s)
+
+    rsizes = balance_stages([total if total > 0 else 1.0] * R, S)
+    best = build("uniform", [list(rsizes) for _ in range(P)])
+    if R % S:
+        # staggered: rows stay within {k, k+1} (same realized island
+        # time as uniform), but each position drops its extra repeats on
+        # the least-loaded stages, heaviest positions first — on
+        # heterogeneous costs this strictly lowers the fused bottleneck
+        k, e = divmod(R, S)
+        load = [0.0] * S
+        rows: list[list[int]] = [[] for _ in range(P)]
+        for p in sorted(range(P), key=lambda p: -costs[p]):
+            extra = set(sorted(range(S), key=lambda s: (load[s], s))[:e])
+            rows[p] = [k + (1 if s in extra else 0) for s in range(S)]
+            for s in range(S):
+                load[s] += rows[p][s] * costs[p]
+        for cand in (build("staggered", rows), _block_cut(costs, R, S,
+                                                          build)):
+            if key(cand) < key(best):
+                best = cand
+    return best
+
+
+def _block_cut(costs: Sequence[float], R: int, S: int,
+               build) -> StagePartition:
+    """The aligned block-granularity candidate: `balance_stages` over
+    the position-major flattened per-block cost chain."""
+    flat = [c for c in costs for _ in range(R)]
+    cuts = [0, *itertools.accumulate(balance_stages(flat, S))]
+    sizes = [[max(0, min(cuts[s + 1], (p + 1) * R) - max(cuts[s], p * R))
+              for s in range(S)] for p in range(len(costs))]
+    return build("block", sizes)
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelinePlan:
     """A validated stage partition for `make_train_step(pipeline=...)`."""
     n_stages: int
     n_micro: int
-    repeats_per_stage: int
-    sizes: tuple[int, ...]            # balance_stages output, repeats/stage
+    repeats_per_stage: int            # longest padded per-stage chunk
+    #                                   (== n_repeats/n_stages when uniform)
+    sizes: tuple[tuple[int, ...], ...]  # [pattern position][stage] valid
+    #                                   repeats (choose_partition output)
     block_costs_s: tuple[float, ...]  # per pattern position, one repeat,
     #                                   per model shard (already tp-divided)
     stage_time_s: float               # predicted bottleneck stage time
+    #                                   (valid work of the slowest stage)
     bubble: float                     # analytic fill/drain bubble fraction
+    #                                   (bottleneck-based when stages are
+    #                                   unequal)
     axis: str = "stage"
     schedule: str = "gpipe"           # backward ordering: "gpipe" | "1f1b"
     tp: int = 1                       # model-parallel degree inside stages
@@ -57,6 +195,13 @@ class PipelinePlan:
     # executor / real-hardware bound, not today's island step's HBM.
     peak_inflight: int = 0            # stashed microbatches, worst stage
     peak_activation_bytes: float = 0.0  # peak_inflight × microbatch bytes
+    # heterogeneous-partition accounting (all zero-overhead when the
+    # partition is uniform and unpadded):
+    partition: str = "uniform"        # "uniform" | "staggered" | "block"
+    stage_times_s: tuple[float, ...] = ()   # per-stage valid-work time
+    padded_repeats: tuple[int, ...] = ()    # per-position padded scan len
+    padded_stage_time_s: float = 0.0  # lockstep scan time incl. padding
+    padding_overhead: float = 0.0     # padded_stage_time_s/stage_time_s - 1
 
 
 def _analytic_block_cost(cfg: ModelConfig, pos: int, tokens: int) -> float:
@@ -151,9 +296,17 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
     all n_micro microbatches per stage under either value (see
     docs/pipeline-schedules.md).
 
-    Raises ValueError when the partition can't produce stacked per-stage
-    params (n_repeats % n_stages != 0), the per-data-shard batch can't
-    be microbatched (global_batch/dp % n_micro != 0), or `schedule` is
+    Any `n_stages <= n_repeats` is accepted: non-uniform partitions
+    (including `n_repeats % n_stages != 0`) run as padded per-stage
+    stacks — `choose_partition` picks among the uniform split, the
+    cost-staggered extra-repeat placement (the usual winner on
+    heterogeneous costs), and the aligned block-granularity comparator,
+    and the plan reports the padding overhead the padded scan pays.
+
+    Raises ValueError when `n_stages > n_repeats` (a stage would hold no
+    repeats of any position — even the padded stacks need at least one
+    repeat per stage to split), the per-data-shard batch can't be
+    microbatched (global_batch/dp % n_micro != 0), or `schedule` is
     unknown.
     """
     if n_stages < 1:
@@ -166,7 +319,10 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
         raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
     if cfg.n_repeats < n_stages:
         raise ValueError(
-            f"{cfg.name}: n_repeats={cfg.n_repeats} < n_stages={n_stages}")
+            f"{cfg.name}: n_repeats={cfg.n_repeats} < n_stages={n_stages} "
+            "— padded per-stage stacks relax divisibility (any n_stages "
+            "<= n_repeats works), but every stage still needs at least "
+            "one repeat to hold")
     if global_batch % dp:
         raise ValueError(
             f"global_batch={global_batch} not divisible by dp={dp}")
@@ -183,30 +339,37 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
         raise ValueError(
             f"got {len(costs)} block costs for {len(cfg.pattern)} positions")
 
-    # One "layer" of the partition is one repeat of the full pattern: all
-    # positions advance stage-by-stage together (stage s holds repeats
-    # [s·k, (s+1)·k) of every position), so a repeat's cost is the sum of
-    # its blocks.  Alg. 1 then splits the repeat chain.
-    per_repeat = [sum(costs)] * cfg.n_repeats
-    sizes = balance_stages(per_repeat, n_stages)
-    if len(set(sizes)) != 1:
-        raise ValueError(
-            f"{cfg.name}: balanced partition {sizes} is not uniform — "
-            f"stacked per-stage params need n_repeats={cfg.n_repeats} "
-            f"divisible by n_stages={n_stages}")
-    k = sizes[0]
-    stage_time = k * sum(costs)
+    # Alg. 1 splits the repeat chains: `choose_partition` compares the
+    # uniform split (each repeat of the full pattern priced at
+    # sum(costs)) against, when n_repeats % n_stages != 0, the
+    # staggered and block-granularity candidates built from the
+    # per-position costs — hybrid patterns get their extra-repeat
+    # placement from the measured costs.
+    part = choose_partition(costs, cfg.n_repeats, n_stages)
+    stage_time = part.bottleneck_s
+    padded_time = part.padded_stage_time_s(costs)
+    bubble = (pipeline_bubble_fraction(n_micro, n_stages,
+                                       stage_times=part.stage_times_s)
+              if stage_time > 0.0
+              else pipeline_bubble_fraction(n_micro, n_stages))
     mb_bytes = (mb * seq_len * cfg.d_model
                 * jnp.dtype(cfg.dtype).itemsize)
     return PipelinePlan(
-        n_stages=n_stages, n_micro=n_micro, repeats_per_stage=k,
-        sizes=tuple(sizes), block_costs_s=tuple(costs),
+        n_stages=n_stages, n_micro=n_micro,
+        repeats_per_stage=max(part.padded_repeats),
+        sizes=part.sizes, block_costs_s=tuple(costs),
         stage_time_s=stage_time,
-        bubble=pipeline_bubble_fraction(n_micro, n_stages), axis=axis,
+        bubble=bubble, axis=axis,
         schedule=schedule, tp=tp,
         peak_inflight=pipeline_peak_inflight(n_micro, n_stages, schedule),
         peak_activation_bytes=pipeline_peak_activation_bytes(
-            n_micro, n_stages, schedule, mb_bytes))
+            n_micro, n_stages, schedule, mb_bytes),
+        partition=part.kind, stage_times_s=part.stage_times_s,
+        padded_repeats=part.padded_repeats,
+        padded_stage_time_s=padded_time,
+        padding_overhead=(padded_time / stage_time - 1.0
+                          if stage_time > 0.0 else 0.0))
 
 
-__all__ = ["PipelinePlan", "estimate_block_costs", "plan_pipeline"]
+__all__ = ["PipelinePlan", "StagePartition", "choose_partition",
+           "estimate_block_costs", "plan_pipeline"]

@@ -122,7 +122,7 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig | None = None,
             return loss_fn_pipelined(
                 params, cfg, batch, pipeline.n_stages, pipeline.n_micro,
                 remat=remat, axis=pipeline.axis,
-                schedule=pipeline.schedule)
+                schedule=pipeline.schedule, sizes=pipeline.sizes)
     else:
         def loss_of(params, batch):
             return loss_fn(params, cfg, batch, remat=remat)

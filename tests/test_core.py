@@ -264,6 +264,45 @@ def test_realize_factors_simd_power_of_two():
         assert f.n_uni >= 1
 
 
+def test_realize_factors_realizes_full_grant():
+    """Regression: the greedy `unroll = min(n_uni, max_unroll)` silently
+    dropped granted factors through the truncating `n_uni // unroll` —
+    realize_factors(_, 12, max_unroll=8, vectorizable=False) returned
+    product 8, not 12.  The realized product must equal the grant
+    whenever it is realizable within the unroll/SIMD/CU bounds."""
+    s = _pipeline_stages()[0]
+    # the ISSUE's exact repro: 12 = 6 (a divisor ≤ 8) × cu 2
+    f = realize_factors(s, 12, max_unroll=8, vectorizable=False)
+    assert f.n_uni == 12 and f.simd == 1
+    assert (f.unroll, f.cu) == (6, 2)    # ties prefer unroll, cheapest
+
+    # exhaustive: every grant realizable within the bounds is realized
+    def realizable(n, max_unroll, vect, max_cu=4):
+        best = 0
+        for u in range(1, max_unroll + 1):
+            for sd in ((1, 2, 4, 8, 16) if vect else (1,)):
+                for cu in range(1, max_cu + 1):
+                    if u * sd * cu <= n:
+                        best = max(best, u * sd * cu)
+        return best
+
+    for vect in (False, True):
+        for max_unroll in (1, 2, 4, 8):
+            for n in range(1, 65):
+                f = realize_factors(s, n, max_unroll=max_unroll,
+                                    vectorizable=vect)
+                assert f.unroll <= max_unroll and f.cu <= 4
+                assert f.simd & (f.simd - 1) == 0 and f.simd <= 16
+                if not vect:
+                    assert f.simd == 1
+                assert f.n_uni == realizable(n, max_unroll, vect), \
+                    (n, max_unroll, vect, f)
+    # power-of-two grants (the ×2-if-SIMD path) stay exactly realized
+    for n in (2, 4, 8, 16, 32):
+        f = realize_factors(s, n, max_unroll=8, vectorizable=True)
+        assert f.n_uni == n
+
+
 # ---------------------------------------------------------------- splitting
 def test_bp_splitting_isolates_k4():
     graph, _ = workloads.bp.build()

@@ -2,6 +2,7 @@
 shard_map + the Alg.1 stage-balancing partition + schedules (GPipe and
 1F1B step programs) + the end-to-end launch-layer wiring
 (`--stages N --microbatch M --schedule {gpipe,1f1b}`)."""
+import itertools
 import subprocess
 import sys
 import textwrap
@@ -9,6 +10,7 @@ import textwrap
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.dist.pipeline import (PIPE_BWD, PIPE_FWD, balance_stages,
                                  make_step_program,
                                  pipeline_bubble_fraction,
@@ -32,10 +34,75 @@ def test_balance_stages_uniform():
     assert balance_stages([1.0] * 8, 4) == [2, 2, 2, 2]
 
 
+def test_balance_stages_front_loads_ties():
+    # among the optimal partitions, extra layers land on earlier stages
+    # (last group minimal, recursively for the prefix at its optimum)
+    assert balance_stages([1.0] * 4, 3) == [2, 1, 1]
+    assert balance_stages([1.0] * 3, 2) == [2, 1]
+    assert balance_stages([1.0] * 7, 3) == [3, 3, 1]
+    assert balance_stages([1.0] * 5, 3) == [2, 2, 1]
+
+
+def _brute_force_partitions(n, k):
+    """All compositions of n into k positive parts."""
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        bounds = (0, *cuts, n)
+        yield [bounds[i + 1] - bounds[i] for i in range(k)]
+
+
+def _group_sums(times, sizes):
+    i, out = 0, []
+    for s in sizes:
+        out.append(sum(times[i:i + s]))
+        i += s
+    return out
+
+
+@given(times=st.lists(st.integers(min_value=1, max_value=8),
+                      min_size=1, max_size=9),
+       n_stages=st.integers(min_value=1, max_value=9))
+@settings(max_examples=200, deadline=None)
+def test_balance_stages_optimal_and_front_loaded(times, n_stages):
+    """Property (brute force): the returned contiguous partition
+    minimizes the max group sum, and ties are front-loaded — no optimal
+    partition puts fewer layers on the last stage.  (Integer costs keep
+    float sums exact, so the tie comparison is meaningful.)"""
+    times = [float(t) for t in times]
+    if n_stages > len(times):
+        return
+    sizes = balance_stages(times, n_stages)
+    assert len(sizes) == n_stages and sum(sizes) == len(times)
+    assert all(s >= 1 for s in sizes)
+    got = max(_group_sums(times, sizes))
+    optimal = [sz for sz in _brute_force_partitions(len(times), n_stages)]
+    best_val = min(max(_group_sums(times, sz)) for sz in optimal)
+    assert got == best_val
+    tied = [sz for sz in optimal
+            if max(_group_sums(times, sz)) == best_val]
+    assert sizes[-1] == min(sz[-1] for sz in tied)
+
+
 def test_bubble_fraction():
     assert pipeline_bubble_fraction(1, 4) == pytest.approx(3 / 4)
     assert pipeline_bubble_fraction(32, 4) == pytest.approx(3 / 35)
     assert pipeline_bubble_fraction(128, 2) < 0.01
+
+
+def test_bubble_fraction_stage_times():
+    # uniform stage times pin the overload to the old closed form
+    for M, S in [(1, 4), (4, 3), (32, 4), (8, 2)]:
+        assert pipeline_bubble_fraction(M, S, stage_times=[2.5] * S) == \
+            pytest.approx(pipeline_bubble_fraction(M, S))
+    # a bottleneck stage makes the uniform formula optimistic: the
+    # other stages idle while the slow stage sets the period
+    het = pipeline_bubble_fraction(4, 3, stage_times=[2.0, 1.0, 1.0])
+    assert het > pipeline_bubble_fraction(4, 3)
+    # closed form: 1 - M·Σt / (S·((M-1)·max t + Σ t))
+    assert het == pytest.approx(1.0 - 4 * 4.0 / (3 * (3 * 2.0 + 4.0)))
+    with pytest.raises(ValueError):
+        pipeline_bubble_fraction(4, 3, stage_times=[1.0, 1.0])
+    with pytest.raises(ValueError):
+        pipeline_bubble_fraction(4, 2, stage_times=[0.0, 0.0])
 
 
 # ------------------------------------------- step programs & memory model
@@ -335,12 +402,16 @@ def test_plan_pipeline_partitions_and_prices():
 
     cfg = get_smoke("granite-3-8b")          # n_repeats=2, homogeneous
     plan = plan_pipeline(cfg, 2, 4, global_batch=8, seq_len=64)
-    assert plan.sizes == (1, 1)
+    assert plan.sizes == ((1, 1),) * len(cfg.pattern)
     assert plan.repeats_per_stage == 1
+    assert plan.partition == "uniform" and plan.padding_overhead == 0.0
     assert plan.bubble == pytest.approx(pipeline_bubble_fraction(4, 2))
     assert len(plan.block_costs_s) == len(cfg.pattern)
     assert all(c > 0 for c in plan.block_costs_s)
     assert plan.stage_time_s == pytest.approx(sum(plan.block_costs_s))
+    assert plan.stage_times_s == pytest.approx(
+        (plan.stage_time_s,) * 2)
+    assert plan.padded_stage_time_s == pytest.approx(plan.stage_time_s)
     # schedule threading: same partition/bubble, smaller predicted stash
     assert plan.schedule == "gpipe" and plan.peak_inflight == 4
     p2 = plan_pipeline(cfg, 2, 4, global_batch=8, seq_len=64,
@@ -356,7 +427,8 @@ def test_plan_pipeline_rejects_bad_partitions():
     from repro.train.pipeline import plan_pipeline
 
     cfg = get_smoke("granite-3-8b")
-    with pytest.raises(ValueError):          # 2 repeats don't split 3 ways
+    # 3 stages > 2 repeats: even padded stacks need one repeat per stage
+    with pytest.raises(ValueError, match="padded per-stage stacks"):
         plan_pipeline(cfg, 3, 1, global_batch=8, seq_len=64)
     with pytest.raises(ValueError):          # microbatch doesn't divide
         plan_pipeline(cfg, 2, 3, global_batch=8, seq_len=64)
@@ -365,6 +437,125 @@ def test_plan_pipeline_rejects_bad_partitions():
     with pytest.raises(ValueError):          # unknown schedule
         plan_pipeline(cfg, 2, 1, global_batch=8, seq_len=64,
                       schedule="interleaved")
+
+
+# --------------------------------------- heterogeneous stage partitions
+def test_choose_partition_uniform_when_divisible():
+    """R % S == 0 sits at the total/S lower bound: the uniform unpadded
+    split is always kept, whatever the per-position costs."""
+    from repro.train.pipeline import choose_partition
+
+    part = choose_partition([1.0, 5.0, 2.0], 4, 2)
+    assert part.kind == "uniform"
+    assert part.sizes == ((2, 2),) * 3
+    assert part.padded_repeats == (2, 2, 2)
+    assert part.bottleneck_s == pytest.approx(2 * 8.0)
+    assert part.padded_stage_time_s([1.0, 5.0, 2.0]) == \
+        pytest.approx(part.bottleneck_s)
+
+
+def test_choose_partition_heterogeneous_beats_uniform_padding():
+    """Acceptance criterion: on a heterogeneous per-position cost vector
+    the chosen partition's predicted bottleneck never exceeds the
+    uniform-padded alternative's — and genuinely improves on it for a
+    jamba-style cost spread — while its *realized* per-microbatch island
+    time (the per-position maxima sum today's executor pays) never
+    exceeds the uniform split's either."""
+    from repro.train.pipeline import choose_partition
+
+    costs = [1.0, 3.0, 1.0, 5.0]             # mamba / attn+moe-ish spread
+    R, S = 4, 3
+    part = choose_partition(costs, R, S)
+    uni = balance_stages([sum(costs)] * R, S)
+    uni_bottleneck = max(uni) * sum(costs)
+    assert part.bottleneck_s <= uni_bottleneck
+    assert part.kind == "staggered" and part.bottleneck_s < uni_bottleneck
+    # staggered rows stay within {floor(R/S), ceil(R/S)}: the realized
+    # island time equals the uniform split's, only the placement moves
+    assert part.padded_stage_time_s(costs) == pytest.approx(
+        max(uni) * sum(costs))
+    for row, kmax in zip(part.sizes, part.padded_repeats):
+        assert len(row) == S and sum(row) == R
+        assert kmax == max(row)
+        assert set(row) <= {R // S, R // S + 1}
+    assert part.stage_times_s == tuple(
+        sum(part.sizes[p][s] * costs[p] for p in range(len(costs)))
+        for s in range(S))
+
+
+@given(costs=st.lists(st.integers(min_value=1, max_value=9),
+                      min_size=1, max_size=5),
+       n_repeats=st.integers(min_value=1, max_value=8),
+       n_stages=st.integers(min_value=1, max_value=8))
+@settings(max_examples=100, deadline=None)
+def test_choose_partition_never_worse_than_uniform_padded(
+        costs, n_repeats, n_stages):
+    from repro.train.pipeline import choose_partition
+
+    costs = [float(c) for c in costs]
+    if n_stages > n_repeats:
+        return
+    part = choose_partition(costs, n_repeats, n_stages)
+    uni = balance_stages([sum(costs)] * n_repeats, n_stages)
+    # never worse than uniform-padded on EITHER metric: the fused
+    # bottleneck bound (acceptance criterion) or the realized
+    # per-position island time today's executor pays
+    assert part.bottleneck_s <= max(uni) * sum(costs) + 1e-9
+    assert part.padded_stage_time_s(costs) <= \
+        max(uni) * sum(costs) + 1e-9
+    for row in part.sizes:
+        assert sum(row) == n_repeats and len(row) == n_stages
+
+
+def test_plan_pipeline_heterogeneous_jamba():
+    from repro.configs import get_smoke
+    from repro.train.pipeline import plan_pipeline
+
+    cfg = get_smoke("jamba-v0.1-52b")        # n_repeats=4, hybrid
+    plan = plan_pipeline(cfg, 3, 2, global_batch=4, seq_len=32)
+    assert plan.n_stages == 3
+    for row in plan.sizes:
+        assert len(row) == 3 and sum(row) == cfg.n_repeats
+    assert len(plan.sizes) == len(cfg.pattern)
+    assert plan.stage_time_s == pytest.approx(max(plan.stage_times_s))
+    assert plan.padded_stage_time_s >= plan.stage_time_s
+    assert plan.padding_overhead >= 0.0
+    assert plan.repeats_per_stage == max(plan.padded_repeats)
+    # the bottleneck-based bubble prices the unequal stages
+    assert plan.bubble == pytest.approx(pipeline_bubble_fraction(
+        2, 3, stage_times=plan.stage_times_s))
+
+
+def test_stage_stack_heterogeneous_pads_and_replicates_edge():
+    import jax.numpy as jnp
+    from repro.models.pipeline import stage_stack
+
+    w = jnp.arange(4 * 3, dtype=jnp.float32).reshape(4, 3)  # R=4
+    wn = np.asarray(w)
+    st_ = stage_stack({"w": w}, 3, sizes=(2, 1, 1))
+    assert st_["w"].shape == (3, 2, 3)
+    np.testing.assert_array_equal(np.asarray(st_["w"][0]), wn[0:2])
+    # padded slots replicate the chunk's last valid repeat
+    np.testing.assert_array_equal(np.asarray(st_["w"][1]), wn[[2, 2]])
+    np.testing.assert_array_equal(np.asarray(st_["w"][2]), wn[[3, 3]])
+    # a zero-size stage gets repeat 0 as (masked) filler
+    st0 = stage_stack({"w": w}, 2, sizes=(4, 0))
+    assert st0["w"].shape == (2, 4, 3)
+    np.testing.assert_array_equal(np.asarray(st0["w"][1]),
+                                  wn[[0, 0, 0, 0]])
+    # uniform sizes fall back to the free reshape
+    stu = stage_stack({"w": w}, 2, sizes=(2, 2))
+    np.testing.assert_array_equal(np.asarray(stu["w"]),
+                                  wn.reshape(2, 2, 3))
+    with pytest.raises(ValueError, match="sum to"):
+        stage_stack({"w": w}, 2, sizes=(3, 2))
+    # regression: all-equal sizes must still fail the sum-to-R check
+    # (the uniform-reshape shortcut used to bypass it, silently running
+    # a different split than requested)
+    with pytest.raises(ValueError, match="sum to"):
+        stage_stack({"w": w}, 2, sizes=(1, 1))
+    with pytest.raises(ValueError, match="padded per-stage"):
+        stage_stack({"w": w}, 3)             # 4 % 3, no sizes given
 
 
 def test_stage_stack_specs():
@@ -531,6 +722,44 @@ def test_1f1b_train_matches_gpipe_and_baseline():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
     assert "F1B TRAIN OK" in r.stdout
+
+
+# heterogeneous partition end to end (acceptance criterion): a
+# jamba-style hybrid with n_repeats=4 over 3 stages (4 % 3 != 0) trains
+# through BOTH schedules — padded per-stage stacks, cond-masked stage
+# scans, block-granularity partition — and matches the sequential
+# (stages=1) loss trajectory.
+HET_TRAIN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=3"
+    from repro.launch.train import build
+
+    def run(stages, microbatch=0, schedule="gpipe"):
+        cfg, mesh, state, step, data = build(
+            "jamba-v0.1-52b", smoke=True, global_batch=4, seq_len=32,
+            stages=stages, microbatch=microbatch, schedule=schedule,
+            seed=0)
+        losses = []
+        for i in range(2):
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        return losses
+
+    l1 = run(1)
+    lg = run(3, microbatch=2, schedule="gpipe")
+    lf = run(3, microbatch=2, schedule="1f1b")
+    for name, lp in (("gpipe", lg), ("1f1b", lf)):
+        diffs = [abs(a - b) / max(abs(a), 1e-9) for a, b in zip(l1, lp)]
+        assert all(d < 2e-2 for d in diffs), (name, l1, lp, diffs)
+    print("HET TRAIN OK", l1, lg, lf)
+""")
+
+
+def test_heterogeneous_jamba_train_matches_baseline():
+    r = subprocess.run([sys.executable, "-c", HET_TRAIN_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "HET TRAIN OK" in r.stdout
 
 
 # MoE across a (stage=2, data=2) mesh: exercises the stage×data
