@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist bench bench-smoke quickstart docs-check
+.PHONY: test test-dist bench bench-smoke lint-programs quickstart \
+	docs-check
 
 # tier-1: the fast single-device suite (multi-device cases run in
 # subprocesses that set their own XLA_FLAGS, so this works on 1 CPU)
@@ -49,6 +50,13 @@ bench-smoke:
 	    --smoke --stages 3 --data-par 2 --microbatch 2 \
 	    --out results/dryrun-smoke
 	$(PY) -m benchmarks.run --tolerate-failures
+
+# mklint: statically verify every bench-smoke launch config (both
+# schedules, the heterogeneous --stages 3 cell, the pp×tp mesh) without
+# compiling anything — exits 1 on any error-severity diagnostic.  Rule
+# catalog: docs/static-analysis.md
+lint-programs:
+	$(PY) tools/mklint.py --preset bench-smoke
 
 quickstart:
 	$(PY) examples/quickstart.py

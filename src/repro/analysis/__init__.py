@@ -1,0 +1,29 @@
+"""mklint: pre-compile static verification of launch configurations.
+
+MKPipe statically analyzes the multi-kernel graph before it enqueues
+anything; this package is the mesh-scale analogue.  `verify_launch`
+checks a (config, mesh, schedule) combination — collective alignment
+inside the shard_map islands, step-program dataflow, sharding-spec
+composition, Pallas kernel geometry — and returns structured
+diagnostics (stable rule ID, severity, location, fix hint) instead of
+asserting, deadlocking, or tracebacking mid-compile.
+
+Surfaces: ``tools/mklint.py`` (CLI), ``--verify`` on the train/dryrun
+launchers, and this importable API.  Rule catalog: `RULES` here,
+prose in ``docs/static-analysis.md``.
+
+Import layering: `diagnostics`/`meshcli`/`dataflow` are jax-free (the
+launchers use them before touching devices); `verify_launch` imports
+jax lazily on first call.
+"""
+from .dataflow import check_step_program
+from .diagnostics import (RULES, Diagnostic, DiagnosticError, Report,
+                          Severity, error, info, warning)
+from .meshcli import check_mesh_cli, resolve_mesh_cli
+from .verify import verify_launch
+
+__all__ = [
+    "Diagnostic", "DiagnosticError", "RULES", "Report", "Severity",
+    "check_mesh_cli", "check_step_program", "error", "info",
+    "resolve_mesh_cli", "verify_launch", "warning",
+]

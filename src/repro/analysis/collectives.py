@@ -1,0 +1,378 @@
+"""Collective-alignment verification (rule family ``MK-C``).
+
+The deadlock class this guards against: inside a shard_map island every
+member of a mesh axis must issue the *same* sequence of collectives over
+that axis, or a psum blocks forever waiting for a peer that branched the
+other way.  XLA cannot see this — `lax.cond` lowers both branches and
+the mismatch only manifests at run time as a hang.
+
+The checker is a small abstract interpreter over jaxprs.  Each value is
+summarized by its *varying set*: the mesh axes along which the value may
+differ between members.  ``axis_index(A)`` introduces {A}; reductions
+over an axis (psum/pmax/all_gather/...) remove it; ``ppermute`` keeps
+it; everything else unions its inputs.  A `lax.cond` whose branches
+issue different per-axis collective sequences is then an error *only*
+when the predicate's varying set contains that axis — members that agree
+on the predicate take the same branch, so e.g. PR 5's masked stage scan
+(predicate varies over ``stage`` only, branches disagree on ``model``
+collectives never — identity vs body both psum over ``model``… and when
+they genuinely differ over ``model`` the stage-uniform predicate keeps
+it legal) passes clean while a data-dependent one-sided psum is flagged.
+
+Entry points: `check_closed_jaxpr` for a traced function (axis sizes
+from ``axis_env`` tracing or a mesh), `check_shard_map_islands` to walk
+an outer jaxpr, find every shard_map island, seed varying sets from its
+``in_names``, and verify each island body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Mapping
+
+from .diagnostics import Diagnostic, error, warning
+
+# collective primitive name → effect on the varying set of its output
+# w.r.t. the named axes: "remove" (reduction / gather makes the value
+# identical across the axis), "keep" (members still hold different
+# values afterwards)
+COLLECTIVE_PRIMS: dict[str, str] = {
+    "psum": "remove",
+    "pmax": "remove",
+    "pmin": "remove",
+    "all_gather": "remove",
+    "ppermute": "keep",
+    "pbroadcast": "keep",
+    "all_to_all": "keep",
+    "reduce_scatter": "keep",
+    "psum_scatter": "keep",
+}
+
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+def _axis_names(eqn) -> tuple[str, ...]:
+    """The named mesh axes a collective eqn operates over (positional
+    integer axes from vmap-style code are ignored — they are not mesh
+    axes and cannot deadlock)."""
+    raw = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    if not isinstance(raw, (tuple, list)):
+        raw = (raw,)
+    return tuple(a for a in raw if isinstance(a, str))
+
+
+def _as_open(jaxpr):
+    """Sub-jaxpr params hold either open Jaxprs or ClosedJaxprs."""
+    return jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+
+
+@dataclasses.dataclass
+class _Ctx:
+    mesh_axes: Mapping[str, int]     # axis name → size
+    loc: str
+    diags: list[Diagnostic]
+    emit: bool = True                # False during fixpoint warm-up
+
+    def add(self, d: Diagnostic) -> None:
+        if self.emit:
+            self.diags.append(d)
+
+
+class _Env:
+    """Var → varying set; literals never vary."""
+
+    def __init__(self) -> None:
+        self._m: dict[Any, frozenset[str]] = {}
+
+    def read(self, atom) -> frozenset[str]:
+        if hasattr(atom, "val"):       # Literal
+            return frozenset()
+        return self._m.get(atom, frozenset())
+
+    def write(self, var, v: frozenset[str]) -> None:
+        if not hasattr(var, "val"):    # skip DropVar-safe? DropVar is a Var
+            self._m[var] = v
+
+
+def _check_perm(eqn, axes: tuple[str, ...], ctx: _Ctx) -> None:
+    perm = tuple((int(s), int(d)) for s, d in eqn.params.get("perm", ()))
+    for axis in axes:
+        size = ctx.mesh_axes.get(axis)
+        if size is None:
+            continue                   # MK-C001 already reported
+        loc = f"{ctx.loc}: ppermute over {axis!r}"
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        bad = False
+        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+            ctx.add(error(
+                "MK-C003", loc,
+                f"perm {perm} repeats a source or destination — each "
+                "member may send and receive at most once"))
+            bad = True
+        out_of_range = [i for i in srcs + dsts if not 0 <= i < size]
+        if out_of_range:
+            ctx.add(error(
+                "MK-C003", loc,
+                f"perm {perm} references indices {sorted(set(out_of_range))} "
+                f"outside the axis (size {size})"))
+            bad = True
+        if not bad and (set(srcs) != set(range(size))
+                        or set(dsts) != set(range(size))):
+            missing = sorted(set(range(size)) - set(srcs)
+                             | set(range(size)) - set(dsts))
+            ctx.add(error(
+                "MK-C003", loc,
+                f"perm {perm} is not a complete permutation of the axis "
+                f"(size {size}): members {missing} are dropped and would "
+                "receive zeros / send into nothing",
+                "pipeline rings must rotate every member: "
+                "perm=[(i, (i+1) % size) for i in range(size)]"))
+            bad = True
+        if not bad and axis == "stage":
+            shifts = {(d - s) % size for s, d in perm}
+            if len(shifts) != 1:
+                ctx.add(warning(
+                    "MK-C004", loc,
+                    f"stage-axis perm {perm} is a permutation but not a "
+                    "uniform ring shift — the pipeline executors assume "
+                    "neighbor transfers",
+                    "expected a rotation like "
+                    "[(i, (i+1) % size) for i in range(size)]"))
+
+
+def _interp(jaxpr, in_varying: Iterable[frozenset[str]], ctx: _Ctx,
+            ) -> tuple[list[frozenset[str]], list[tuple[str, str]]]:
+    """Abstract-interpret an *open* jaxpr.
+
+    Returns (per-output varying sets, collective event sequence) where
+    each event is ``(axis, primitive_name)`` in program order — the
+    per-axis subsequences are what cond branches must agree on.
+    """
+    env = _Env()
+    for var in jaxpr.constvars:
+        env.write(var, frozenset())
+    for var, v in zip(jaxpr.invars, in_varying):
+        env.write(var, v)
+    events: list[tuple[str, str]] = []
+
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        in_v = [env.read(a) for a in eqn.invars]
+        joined = frozenset().union(*in_v) if in_v else frozenset()
+
+        if name == "axis_index":
+            axis = eqn.params.get("axis_name")
+            axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+            axes = tuple(a for a in axes if isinstance(a, str))
+            for a in axes:
+                if a not in ctx.mesh_axes:
+                    ctx.add(error(
+                        "MK-C001", ctx.loc,
+                        f"axis_index({a!r}) but the mesh axes are "
+                        f"{tuple(ctx.mesh_axes)}"))
+            env.write(eqn.outvars[0], joined | frozenset(
+                a for a in axes if a in ctx.mesh_axes))
+
+        elif name in COLLECTIVE_PRIMS:
+            axes = _axis_names(eqn)
+            for a in axes:
+                if a not in ctx.mesh_axes:
+                    ctx.add(error(
+                        "MK-C001", ctx.loc,
+                        f"{name} over axis {a!r} but the mesh axes are "
+                        f"{tuple(ctx.mesh_axes)}",
+                        "collectives over a nonexistent axis fail at "
+                        "lowering or, under axis_env tracing, at run "
+                        "time"))
+            if name == "ppermute":
+                _check_perm(eqn, axes, ctx)
+            events.extend((a, name) for a in axes)
+            out_v = joined
+            if COLLECTIVE_PRIMS[name] == "remove":
+                out_v = joined - frozenset(axes)
+            for var in eqn.outvars:
+                env.write(var, out_v)
+
+        elif name == "cond":
+            pred_v = in_v[0]
+            branches = [_as_open(b) for b in eqn.params["branches"]]
+            branch_out: list[list[frozenset[str]]] = []
+            branch_seq: list[list[tuple[str, str]]] = []
+            for b in branches:
+                o, s = _interp(b, in_v[1:], ctx)
+                branch_out.append(o)
+                branch_seq.append(s)
+            axes_seen = {a for s in branch_seq for a, _ in s}
+            for axis in sorted(axes_seen):
+                per = [tuple(p for ax, p in s if ax == axis)
+                       for s in branch_seq]
+                if len(set(per)) > 1 and axis in pred_v:
+                    shapes = ", ".join(
+                        f"branch {i}: [{' '.join(p) or 'none'}]"
+                        for i, p in enumerate(per))
+                    ctx.add(error(
+                        "MK-C002", ctx.loc,
+                        f"cond predicate may vary over axis {axis!r} but "
+                        f"its branches issue different collective "
+                        f"sequences over it ({shapes}) — members taking "
+                        "different branches would deadlock",
+                        "hoist the collective out of the cond, or make "
+                        "every branch issue the same collectives (the "
+                        "masked-stage pattern: identity branch still "
+                        "psums a zero)"))
+            for s in branch_seq:
+                events.extend(s)
+            for i, var in enumerate(eqn.outvars):
+                v = frozenset().union(*(o[i] for o in branch_out))
+                env.write(var, v | pred_v)
+
+        elif name == "scan":
+            body = _as_open(eqn.params["jaxpr"])
+            nc = eqn.params["num_consts"]
+            ncar = eqn.params["num_carry"]
+            const_v, carry_v = in_v[:nc], list(in_v[nc:nc + ncar])
+            xs_v = in_v[nc + ncar:]
+            # fixpoint on the carry varying sets, then one emitting pass
+            sub = dataclasses.replace(ctx, emit=False)
+            for _ in range(len(ctx.mesh_axes) + 2):
+                out_v, _ = _interp(body, const_v + carry_v + xs_v, sub)
+                new_carry = [carry_v[i] | out_v[i] for i in range(ncar)]
+                if new_carry == carry_v:
+                    break
+                carry_v = new_carry
+            out_v, seq = _interp(body, const_v + carry_v + xs_v, ctx)
+            events.extend(seq)
+            for i, var in enumerate(eqn.outvars):
+                env.write(var, out_v[i] if i < len(out_v) else joined)
+
+        elif name == "while":
+            cond_j = _as_open(eqn.params["cond_jaxpr"])
+            body_j = _as_open(eqn.params["body_jaxpr"])
+            cn = eqn.params["cond_nconsts"]
+            bn = eqn.params["body_nconsts"]
+            cconst_v = in_v[:cn]
+            bconst_v = in_v[cn:cn + bn]
+            carry_v = list(in_v[cn + bn:])
+            sub = dataclasses.replace(ctx, emit=False)
+            for _ in range(len(ctx.mesh_axes) + 2):
+                out_v, _ = _interp(body_j, bconst_v + carry_v, sub)
+                new_carry = [carry_v[i] | out_v[i]
+                             for i in range(len(carry_v))]
+                if new_carry == carry_v:
+                    break
+                carry_v = new_carry
+            pred_v, _ = _interp(cond_j, cconst_v + carry_v, sub)
+            trip_v = pred_v[0] if pred_v else frozenset()
+            out_v, seq = _interp(body_j, bconst_v + carry_v, ctx)
+            events.extend(seq)
+            flagged: set[str] = set()
+            for axis, prim in seq:
+                if axis in trip_v and axis not in flagged:
+                    flagged.add(axis)
+                    ctx.add(error(
+                        "MK-C005", ctx.loc,
+                        f"{prim} over axis {axis!r} inside a while loop "
+                        "whose trip count may vary over that axis — "
+                        "members running extra iterations issue extra "
+                        "collectives and deadlock",
+                        "make the trip count axis-uniform (pmax the "
+                        "bound) or run a fixed count with a mask"))
+            for i, var in enumerate(eqn.outvars):
+                v = out_v[i] if i < len(out_v) else joined
+                env.write(var, v | trip_v)
+
+        elif name == "shard_map":
+            inner = _as_open(eqn.params["jaxpr"])
+            in_names = eqn.params.get("in_names", ())
+            inner_v = []
+            for i, v in enumerate(in_v):
+                names = in_names[i] if i < len(in_names) else {}
+                axes = frozenset(
+                    a for dim_axes in names.values() for a in dim_axes)
+                inner_v.append(v | axes)
+            out_v, seq = _interp(inner, inner_v, ctx)
+            events.extend(seq)
+            for i, var in enumerate(eqn.outvars):
+                env.write(var, out_v[i] if i < len(out_v) else joined)
+
+        else:
+            sub = None
+            for key in _SUBJAXPR_KEYS:
+                if key in eqn.params:
+                    sub = _as_open(eqn.params[key])
+                    break
+            if sub is not None:
+                n = len(sub.invars)
+                if len(in_v) >= n:
+                    sub_in = in_v[len(in_v) - n:]
+                else:
+                    sub_in = [joined] * n
+                out_v, seq = _interp(sub, sub_in, ctx)
+                events.extend(seq)
+                for i, var in enumerate(eqn.outvars):
+                    env.write(var,
+                              out_v[i] if i < len(out_v) else joined)
+            else:
+                for var in eqn.outvars:
+                    env.write(var, joined)
+
+    return [env.read(v) for v in jaxpr.outvars], events
+
+
+def check_closed_jaxpr(closed, mesh_axes: Mapping[str, int],
+                       in_varying: Iterable[frozenset[str]] | None = None,
+                       loc: str = "jaxpr") -> list[Diagnostic]:
+    """Verify collective alignment of a traced function.
+
+    `closed` is a ClosedJaxpr (e.g. from ``jax.make_jaxpr(f,
+    axis_env=[...])``); `mesh_axes` maps axis name → size.  `in_varying`
+    seeds the inputs' varying sets (default: nothing varies — inputs are
+    replicated, so only ``axis_index`` introduces variance, which is the
+    right model for shard_map islands over replicated-in operands)."""
+    jaxpr = _as_open(closed)
+    if in_varying is None:
+        in_varying = [frozenset()] * len(jaxpr.invars)
+    ctx = _Ctx(mesh_axes=dict(mesh_axes), loc=loc, diags=[])
+    _interp(jaxpr, list(in_varying), ctx)
+    return ctx.diags
+
+
+def iter_shard_map_eqns(jaxpr):
+    """Yield every shard_map eqn reachable from an open jaxpr."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "shard_map":
+            # the island check interprets its interior inline (including
+            # nested islands) — descending here would double-report
+            yield eqn
+            continue
+        for key in ("branches",):
+            for b in eqn.params.get(key, ()):
+                yield from iter_shard_map_eqns(_as_open(b))
+        for key in (*_SUBJAXPR_KEYS, "cond_jaxpr", "body_jaxpr"):
+            if key in eqn.params:
+                yield from iter_shard_map_eqns(_as_open(eqn.params[key]))
+
+
+def check_shard_map_islands(closed, mesh_axes: Mapping[str, int],
+                            loc: str = "launch") -> list[Diagnostic]:
+    """Find every shard_map island under a traced computation and verify
+    each body, seeding input varying sets from the island's ``in_names``
+    (an operand sharded over an axis varies over it inside the island)."""
+    diags: list[Diagnostic] = []
+    jaxpr = _as_open(closed)
+    for n, eqn in enumerate(iter_shard_map_eqns(jaxpr)):
+        inner = _as_open(eqn.params["jaxpr"])
+        in_names = eqn.params.get("in_names", ())
+        in_varying = []
+        for i in range(len(inner.invars)):
+            names = in_names[i] if i < len(in_names) else {}
+            in_varying.append(frozenset(
+                a for dim_axes in names.values() for a in dim_axes))
+        ctx = _Ctx(mesh_axes=dict(mesh_axes),
+                   loc=f"{loc}: shard_map island #{n}", diags=diags)
+        _interp(inner, in_varying, ctx)
+    return diags
+
+
+__all__ = ["COLLECTIVE_PRIMS", "check_closed_jaxpr",
+           "check_shard_map_islands", "iter_shard_map_eqns"]

@@ -1,0 +1,175 @@
+"""Step-program dataflow verification (rule family ``MK-P``).
+
+`repro.dist.pipeline.make_step_program` builds the statically unrolled
+per-tick (op, microbatch) schedule both pipeline executors scan over.
+Its invariants used to live in `_check_program` as bare asserts — tuples
+like ``AssertionError((3, 1))`` that vanish under ``python -O``.  This
+module is the reporting form: `check_step_program` validates *any*
+program (hand-built interleaved-1F1B experiments included) and returns
+diagnostics that name the schedule, tick, stage and microbatch, so new
+schedules land on a checker instead of growing new asserts.
+
+Invariants (see `make_step_program`'s docstring for the derivation):
+
+- every tick row covers every stage (MK-P001), entries are well-formed
+  (MK-P006), and each (stage, microbatch) forward/backward is scheduled
+  exactly once (MK-P002 / MK-P003);
+- F(s, m) runs >= 1 tick after F(s-1, m): activations travel the ring
+  ppermute with one tick of latency (MK-P004);
+- B(s, m) runs exactly 1 tick after B(s+1, m) — cotangents are consumed
+  the tick they arrive, the executors keep no cotangent buffer — and the
+  last stage's B(s, m) runs >= 1 tick after its F(s, m) (MK-P005);
+- the measured stash occupancy (`program_peak_inflight`) stays within
+  the schedule's analytic bound `pipeline_peak_inflight` (MK-P007), so
+  the executors' ``m % K`` stash slots cannot collide.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.dist.pipeline import (PIPE_BWD, PIPE_FWD, PIPE_IDLE, SCHEDULES,
+                                 pipeline_peak_inflight,
+                                 program_peak_inflight)
+
+from .diagnostics import Diagnostic, error, info
+
+_OPS = (PIPE_IDLE, PIPE_FWD, PIPE_BWD)
+_OP_NAMES = {PIPE_IDLE: "idle", PIPE_FWD: "F", PIPE_BWD: "B"}
+
+
+def _loc(schedule: str | None, t: int | None = None,
+         s: int | None = None, m: int | None = None) -> str:
+    parts = [f"schedule={schedule or '?'}"]
+    if t is not None:
+        parts.append(f"tick={t}")
+    if s is not None:
+        parts.append(f"stage={s}")
+    if m is not None:
+        parts.append(f"microbatch={m}")
+    return " ".join(parts)
+
+
+def check_step_program(prog: Sequence[Sequence[tuple[int, int]]],
+                       n_micro: int, n_stages: int,
+                       schedule: str | None = None) -> list[Diagnostic]:
+    """Verify a step program's dataflow; returns diagnostics (possibly
+    empty).  `schedule` is only used for messages and for picking the
+    analytic peak-inflight bound (no bound is checked when it is None or
+    unknown)."""
+    M, S = int(n_micro), int(n_stages)
+    diags: list[Diagnostic] = []
+    f_tick: dict[tuple[int, int], int] = {}
+    b_tick: dict[tuple[int, int], int] = {}
+    structural_ok = True
+
+    for t, row in enumerate(prog):
+        if len(row) != S:
+            diags.append(error(
+                "MK-P001", _loc(schedule, t=t),
+                f"tick row has {len(row)} stage slots, the pipeline has "
+                f"{S} stages",
+                "every tick must state what each stage does (PIPE_IDLE "
+                "for nothing)"))
+            structural_ok = False
+            continue
+        for s, entry in enumerate(row):
+            try:
+                op, m = entry
+            except (TypeError, ValueError):
+                diags.append(error(
+                    "MK-P006", _loc(schedule, t=t, s=s),
+                    f"entry {entry!r} is not an (op, microbatch) pair"))
+                structural_ok = False
+                continue
+            if op not in _OPS:
+                diags.append(error(
+                    "MK-P006", _loc(schedule, t=t, s=s),
+                    f"unknown op code {op!r}",
+                    "use PIPE_IDLE / PIPE_FWD / PIPE_BWD"))
+                structural_ok = False
+                continue
+            if op != PIPE_IDLE and not 0 <= m < M:
+                diags.append(error(
+                    "MK-P006", _loc(schedule, t=t, s=s),
+                    f"microbatch index {m} outside [0, {M})"))
+                structural_ok = False
+                continue
+            book = f_tick if op == PIPE_FWD else b_tick
+            if op != PIPE_IDLE:
+                if (s, m) in book:
+                    diags.append(error(
+                        "MK-P002", _loc(schedule, t=t, s=s, m=m),
+                        f"{_OP_NAMES[op]}(stage={s}, microbatch={m}) "
+                        f"already ran at tick {book[(s, m)]} — a stage "
+                        "slot can hold one micro-step per (op, "
+                        "microbatch)"))
+                    structural_ok = False
+                else:
+                    book[(s, m)] = t
+
+    missing = [(which, s, m)
+               for which, book in (("F", f_tick), ("B", b_tick))
+               for s in range(S) for m in range(M) if (s, m) not in book]
+    for which, s, m in missing:
+        diags.append(error(
+            "MK-P003", _loc(schedule, s=s, m=m),
+            f"{which}(stage={s}, microbatch={m}) never scheduled — the "
+            "program must run every forward and backward exactly once"))
+    if missing:
+        structural_ok = False
+
+    if not structural_ok:
+        return diags
+
+    for s in range(S):
+        for m in range(M):
+            if s > 0 and f_tick[(s, m)] < f_tick[(s - 1, m)] + 1:
+                diags.append(error(
+                    "MK-P004", _loc(schedule, t=f_tick[(s, m)], s=s, m=m),
+                    f"F(stage={s}, microbatch={m}) at tick "
+                    f"{f_tick[(s, m)]} but stage {s - 1} only forwards "
+                    f"it at tick {f_tick[(s - 1, m)]} — the ring "
+                    "ppermute delivers activations one tick later",
+                    "delay the forward to tick "
+                    f">= {f_tick[(s - 1, m)] + 1}"))
+            if s < S - 1 and b_tick[(s, m)] != b_tick[(s + 1, m)] + 1:
+                diags.append(error(
+                    "MK-P005", _loc(schedule, t=b_tick[(s, m)], s=s, m=m),
+                    f"B(stage={s}, microbatch={m}) at tick "
+                    f"{b_tick[(s, m)]} but stage {s + 1} retires it at "
+                    f"tick {b_tick[(s + 1, m)]} — cotangents are "
+                    "consumed the tick after they are emitted (the "
+                    "executors keep no cotangent buffer)",
+                    f"schedule it at tick {b_tick[(s + 1, m)] + 1} "
+                    "exactly"))
+            if s == S - 1 and b_tick[(s, m)] < f_tick[(s, m)] + 1:
+                diags.append(error(
+                    "MK-P005", _loc(schedule, t=b_tick[(s, m)], s=s, m=m),
+                    f"last-stage B(microbatch={m}) at tick "
+                    f"{b_tick[(s, m)]} precedes its own forward at tick "
+                    f"{f_tick[(s, m)]}"))
+
+    if any(d.is_error for d in diags):
+        return diags
+
+    measured = program_peak_inflight(prog, S)
+    if schedule in SCHEDULES:
+        bound = pipeline_peak_inflight(M, S, schedule)
+        if measured > bound:
+            diags.append(error(
+                "MK-P007", _loc(schedule),
+                f"measured peak stash occupancy {measured} exceeds the "
+                f"{schedule} analytic bound "
+                f"pipeline_peak_inflight={bound} — the executors' "
+                "m % K stash slots would collide",
+                "reorder backwards to retire stashed microbatches "
+                "sooner, or size the stash to the measured peak"))
+    else:
+        diags.append(info(
+            "MK-P007", _loc(schedule),
+            f"measured peak stash occupancy: {measured} (no analytic "
+            "bound checked for an unnamed schedule)"))
+    return diags
+
+
+__all__ = ["check_step_program"]

@@ -1,0 +1,190 @@
+"""Structured diagnostics for the mklint static verifier.
+
+Every check in `repro.analysis` reports `Diagnostic` records instead of
+asserting: a stable rule ID (the contract tests and CI pin against), a
+severity, a human-readable location (which schedule/tick, which spec
+leaf, which jaxpr equation), a message stating the violated invariant,
+and a fix hint.  `Report` aggregates them per verification run and knows
+how to format itself for the CLI; `DiagnosticError` is the exception the
+runtime layers (`make_step_program`, `parse_mesh_cli`) raise when a
+check that used to be a bare `assert` fails — it subclasses ValueError
+so existing callers' error handling keeps working, carries the
+structured records, and (unlike an assert) still fires under
+``python -O``.
+
+Rule families (catalog in `RULES`, prose in docs/static-analysis.md):
+
+- ``MK-C...`` collective alignment (jaxpr traversal)
+- ``MK-P...`` step-program dataflow
+- ``MK-S...`` sharding-spec lint
+- ``MK-K...`` Pallas kernel geometry
+- ``MK-M...`` mesh CLI / axis validation
+- ``MK-L...`` launch-configuration arithmetic
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterable, Iterator
+
+
+class Severity(enum.Enum):
+    ERROR = "error"       # would deadlock, miscompute, or fail to compile
+    WARNING = "warning"   # legal but suspicious (silent replication, ...)
+    INFO = "info"         # measurement / note, never gates a launch
+
+    def __str__(self) -> str:          # "error", not "Severity.ERROR"
+        return self.value
+
+
+# stable rule catalog: ID → one-line description.  IDs are a public
+# contract (tests pin them, CI greps them); add, never renumber.
+RULES: dict[str, str] = {
+    # collective alignment
+    "MK-C001": "collective names an axis the mesh does not have",
+    "MK-C002": "cond/switch branches issue different collective "
+               "sequences over an axis the predicate may vary on",
+    "MK-C003": "ppermute permutation is not a complete, duplicate-free "
+               "permutation of the axis",
+    "MK-C004": "stage-axis ppermute is not a uniform ring shift",
+    "MK-C005": "collective inside a while loop whose trip count may "
+               "vary over the collective's axis",
+    # step-program dataflow
+    "MK-P001": "step-program tick row does not cover every stage",
+    "MK-P002": "micro-step scheduled more than once (occupancy clash)",
+    "MK-P003": "micro-step never scheduled",
+    "MK-P004": "forward runs before its input can arrive on the ring",
+    "MK-P005": "backward breaks cotangent timing",
+    "MK-P006": "malformed step-program entry (op code / microbatch)",
+    "MK-P007": "measured stash occupancy exceeds the schedule's "
+               "analytic peak-inflight bound",
+    # sharding specs
+    "MK-S001": "PartitionSpec names an axis the mesh does not have",
+    "MK-S002": "sharded dim not divisible by its axes (drops to "
+               "replicated at application time)",
+    "MK-S003": "model-axis entry would drop inside a manual island "
+               "(explicit psum would double-count)",
+    "MK-S004": "PartitionSpec names one mesh axis in two dims",
+    "MK-S005": "PartitionSpec rank exceeds the leaf rank",
+    "MK-S006": "constraint spec names an axis that is already manual "
+               "inside the island",
+    # Pallas kernels
+    "MK-K001": "block shape does not divide the operand dim",
+    "MK-K002": "index map leaves the operand's block grid",
+    "MK-K003": "grid × block does not cover every output block",
+    # mesh CLI
+    "MK-M001": "malformed --mesh-shape literal",
+    "MK-M002": "--axes and --mesh-shape disagree (or --axes alone)",
+    "MK-M003": "unknown mesh axis name",
+    "MK-M004": "duplicate mesh axis name",
+    "MK-M005": "'stage' axis size disagrees with --stages",
+    "MK-M006": "--model-par disagrees with the explicit mesh",
+    # launch arithmetic
+    "MK-L001": "n_stages exceeds n_repeats",
+    "MK-L002": "global batch not divisible by the data-parallel degree",
+    "MK-L003": "per-shard batch not divisible by the microbatch count",
+    "MK-L004": "unknown pipeline schedule",
+    "MK-L005": "mutually exclusive launch flags",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: rule ID + severity + location + message + fix hint."""
+    rule: str
+    severity: Severity
+    loc: str
+    msg: str
+    hint: str = ""
+
+    def __post_init__(self) -> None:
+        if self.rule not in RULES:
+            raise ValueError(f"unknown rule id {self.rule!r}")
+
+    @property
+    def is_error(self) -> bool:
+        return self.severity is Severity.ERROR
+
+    def format(self) -> str:
+        head = f"{self.rule} {self.severity}: [{self.loc}] {self.msg}"
+        return head + (f"\n    hint: {self.hint}" if self.hint else "")
+
+
+def error(rule: str, loc: str, msg: str, hint: str = "") -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, loc, msg, hint)
+
+
+def warning(rule: str, loc: str, msg: str, hint: str = "") -> Diagnostic:
+    return Diagnostic(rule, Severity.WARNING, loc, msg, hint)
+
+
+def info(rule: str, loc: str, msg: str, hint: str = "") -> Diagnostic:
+    return Diagnostic(rule, Severity.INFO, loc, msg, hint)
+
+
+@dataclasses.dataclass
+class Report:
+    """The result of one verification run.
+
+    `wall_s` is the verifier's own cost for this config — the number the
+    CLI prints so `--verify` can be judged cheap enough to default on.
+    """
+    target: str = ""
+    diagnostics: list[Diagnostic] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+
+    def add(self, diag: Diagnostic) -> None:
+        self.diagnostics.append(diag)
+
+    def extend(self, diags: Iterable[Diagnostic]) -> None:
+        self.diagnostics.extend(diags)
+
+    def __iter__(self) -> Iterator[Diagnostic]:
+        return iter(self.diagnostics)
+
+    @property
+    def errors(self) -> list[Diagnostic]:
+        return [d for d in self.diagnostics if d.is_error]
+
+    @property
+    def warnings(self) -> list[Diagnostic]:
+        return [d for d in self.diagnostics
+                if d.severity is Severity.WARNING]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def rules_fired(self) -> set[str]:
+        return {d.rule for d in self.diagnostics}
+
+    def format(self, verbose: bool = False) -> str:
+        shown = [d for d in self.diagnostics
+                 if verbose or d.severity is not Severity.INFO]
+        lines = [d.format() for d in shown]
+        verdict = "clean" if self.ok else (
+            f"{len(self.errors)} error(s), {len(self.warnings)} "
+            "warning(s)")
+        lines.append(f"mklint: {self.target or 'target'}: {verdict} "
+                     f"({self.wall_s:.2f}s)")
+        return "\n".join(lines)
+
+
+class DiagnosticError(ValueError):
+    """Raised by runtime entry points when a verifier check fails.
+
+    Subclasses ValueError so call sites that caught the old asserts'
+    sibling errors keep working; str() is the formatted diagnostics, so
+    failures name the schedule, tick and microbatch in readable text
+    (and, being a real raise, survive ``python -O``).
+    """
+
+    def __init__(self, diagnostics: Iterable[Diagnostic],
+                 prefix: str = "") -> None:
+        self.diagnostics = list(diagnostics)
+        body = "\n".join(d.format() for d in self.diagnostics)
+        super().__init__(f"{prefix}\n{body}" if prefix else body)
+
+
+__all__ = ["Diagnostic", "DiagnosticError", "Report", "RULES", "Severity",
+           "error", "info", "warning"]

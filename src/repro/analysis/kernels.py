@@ -1,0 +1,275 @@
+"""Pallas kernel geometry checks (rule family ``MK-K``).
+
+The five kernels under `src/repro/kernels/` each build a `pallas_call`
+whose correctness rests on grid arithmetic: block shapes must divide the
+(padded) operand dims, index maps must stay inside each operand's block
+grid, and the union of output blocks visited over the grid must cover
+the whole output — a gap is silently-uninitialized memory, an overrun is
+an interpreter error on CPU and garbage on hardware.
+
+Nothing compiles here.  `record_pallas_calls` monkeypatches
+``pallas.pallas_call`` with a recorder that captures (grid, specs,
+out_shape, operand shapes, scalar-prefetch arrays) and returns zeros, so
+running a kernel *builder* eagerly on small concrete inputs yields a
+`PallasCallRecord` per call site; `check_pallas_call` then evaluates
+every index map over the whole grid with concrete integers (scalar-
+prefetch tables are real numpy arrays, so prefetch-driven maps like
+flash attention's ``pi[p]`` evaluate exactly).  `check_repo_kernels`
+drives the five builders on dividing smoke shapes — the same geometry
+class the real configs use, ~1e2 grid points, milliseconds."""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import math
+from typing import Any, Callable, Iterator, Sequence
+
+import numpy as np
+
+from .diagnostics import Diagnostic, error
+
+_MAX_GRID_POINTS = 200_000   # guard: lint evaluates index maps per point
+
+
+@dataclasses.dataclass
+class PallasCallRecord:
+    """One captured pallas_call: everything the geometry checks need."""
+    name: str
+    grid: tuple[int, ...]
+    in_specs: list[Any]                  # BlockSpec per non-prefetch operand
+    out_specs: list[Any]
+    out_shapes: list[tuple[int, ...]]
+    operand_shapes: list[tuple[int, ...]]
+    prefetch: tuple[Any, ...] = ()       # concrete scalar-prefetch arrays
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (tuple, list)) else [x]
+
+
+@contextlib.contextmanager
+def record_pallas_calls(records: list[PallasCallRecord],
+                        name: str = "pallas_call") -> Iterator[None]:
+    """Swap ``pallas.pallas_call`` for a recorder.
+
+    Inside the context, kernel builders run eagerly but nothing lowers:
+    each call site appends a `PallasCallRecord` and the returned callable
+    hands back numpy zeros of ``out_shape`` (so builder post-processing —
+    reshapes, transposes — still runs, off jax's dispatch path)."""
+    from jax.experimental import pallas
+
+    real = pallas.pallas_call
+
+    def recorder(kernel, *, grid=None, grid_spec=None, in_specs=None,
+                 out_specs=None, out_shape=None, **kw):
+        nsp = 0
+        if grid_spec is not None:
+            grid = getattr(grid_spec, "grid", grid)
+            in_specs = getattr(grid_spec, "in_specs", in_specs)
+            out_specs = getattr(grid_spec, "out_specs", out_specs)
+            nsp = int(getattr(grid_spec, "num_scalar_prefetch", 0))
+        out_shapes = _as_list(out_shape)
+
+        def run(*operands):
+            prefetch = tuple(np.asarray(o) for o in operands[:nsp])
+            records.append(PallasCallRecord(
+                name=name,
+                grid=tuple(int(g) for g in _as_list(grid)),
+                in_specs=_as_list(in_specs),
+                out_specs=_as_list(out_specs),
+                out_shapes=[tuple(s.shape) for s in out_shapes],
+                operand_shapes=[tuple(o.shape)
+                                for o in operands[nsp:]],
+                prefetch=prefetch,
+            ))
+            outs = [np.zeros(s.shape, s.dtype) for s in out_shapes]
+            if isinstance(out_shape, (tuple, list)):
+                return type(out_shape)(outs)
+            return outs[0]
+
+        return run
+
+    pallas.pallas_call = recorder
+    try:
+        yield
+    finally:
+        pallas.pallas_call = real
+
+
+def _block_counts(shape: Sequence[int], block: Sequence[int | None],
+                  ) -> list[int]:
+    return [math.ceil(dim / (bs or 1)) for dim, bs in zip(shape, block)]
+
+
+def _check_one_spec(rec: PallasCallRecord, spec, shape: Sequence[int],
+                    what: str, coverage: bool,
+                    ) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    loc = f"kernel {rec.name}: {what}"
+    block = getattr(spec, "block_shape", None)
+    index_map = getattr(spec, "index_map", None)
+    if block is None:
+        return diags
+
+    if len(block) != len(shape):
+        diags.append(error(
+            "MK-K001", loc,
+            f"block shape {tuple(block)} has rank {len(block)} but the "
+            f"operand is rank {len(shape)} ({tuple(shape)})"))
+        return diags
+    for d, (dim, bs) in enumerate(zip(shape, block)):
+        if bs is not None and dim % bs:
+            diags.append(error(
+                "MK-K001", loc,
+                f"dim {d}: block size {bs} does not divide the operand "
+                f"dim {dim} (shape {tuple(shape)})",
+                "pad the operand to a multiple of the block, or clamp "
+                "the block (the repo kernels min() their block args)"))
+    if diags or index_map is None:
+        return diags   # non-dividing blocks poison the bounds math below
+
+    counts = _block_counts(shape, block)
+    n_points = 1
+    for g in rec.grid:
+        n_points *= g
+    if n_points > _MAX_GRID_POINTS:
+        return diags   # lint stays O(small); real configs never hit this
+
+    visited: set[tuple[int, ...]] = set()
+    reported_oob = False
+    for ids in itertools.product(*(range(g) for g in rec.grid)):
+        try:
+            idx = index_map(*ids, *rec.prefetch)
+        except Exception as e:   # a crashing map is itself a finding
+            diags.append(error(
+                "MK-K002", loc,
+                f"index map raised {type(e).__name__}: {e} at grid "
+                f"point {ids}"))
+            return diags
+        idx = tuple(int(i) for i in _as_list(idx))
+        if len(idx) != len(block):
+            diags.append(error(
+                "MK-K002", loc,
+                f"index map returned {len(idx)} indices for a rank-"
+                f"{len(block)} block at grid point {ids}"))
+            return diags
+        oob = [d for d, i in enumerate(idx)
+               if not 0 <= i < counts[d]]
+        if oob and not reported_oob:
+            reported_oob = True
+            diags.append(error(
+                "MK-K002", loc,
+                f"index map returns block index {idx} at grid point "
+                f"{ids}, outside the block grid {tuple(counts)} (operand "
+                f"{tuple(shape)}, block {tuple(block)})",
+                "block indices count blocks, not elements"))
+        if not oob:
+            visited.add(idx)
+
+    if coverage and not reported_oob:
+        total = 1
+        for c in counts:
+            total *= c
+        if len(visited) < total:
+            missing = next(
+                idx for idx in itertools.product(
+                    *(range(c) for c in counts)) if idx not in visited)
+            diags.append(error(
+                "MK-K003", loc,
+                f"grid x block covers {len(visited)} of {total} output "
+                f"blocks (first uncovered: {missing}) — unvisited "
+                "blocks are never written",
+                "the grid (or the prefetch pair tables driving it) must "
+                "reach every output block"))
+    return diags
+
+
+def check_pallas_call(rec: PallasCallRecord) -> list[Diagnostic]:
+    """Geometry-check one recorded pallas_call (pure, no jax tracing)."""
+    diags: list[Diagnostic] = []
+    if len(rec.in_specs) != len(rec.operand_shapes):
+        diags.append(error(
+            "MK-K001", f"kernel {rec.name}",
+            f"{len(rec.in_specs)} in_specs for "
+            f"{len(rec.operand_shapes)} operands"))
+        return diags
+    for i, (spec, shape) in enumerate(zip(rec.in_specs,
+                                          rec.operand_shapes)):
+        diags.extend(_check_one_spec(rec, spec, shape, f"operand {i}",
+                                     coverage=False))
+    for i, (spec, shape) in enumerate(zip(rec.out_specs, rec.out_shapes)):
+        diags.extend(_check_one_spec(rec, spec, shape, f"output {i}",
+                                     coverage=True))
+    return diags
+
+
+def _smoke_builders() -> list[tuple[str, Callable[[], None]]]:
+    """The five kernel builders on tiny dividing shapes — geometry-
+    equivalent to the real configs, milliseconds to evaluate.  Inputs
+    are numpy: the builders only reshape/transpose operands before the
+    (recorded) pallas_call, and numpy keeps the lint off jax's dispatch
+    path."""
+    f32 = np.float32
+
+    def flash():
+        from repro.kernels.flash_attention.kernel import (
+            flash_attention_kernel)
+        q = np.zeros((1, 128, 2, 8), f32)
+        k = np.zeros((1, 128, 1, 8), f32)
+        flash_attention_kernel(q, k, k, causal=True, q_blk=64, kv_blk=64)
+
+    def mlp():
+        from repro.kernels.fused_mlp.kernel import fused_mlp_kernel
+        x = np.zeros((128, 16), f32)
+        wu = np.zeros((16, 256), f32)
+        wd = np.zeros((256, 16), f32)
+        fused_mlp_kernel(x, wu, wd, np.zeros((16, 256), f32),
+                         bm=64, bff=128)
+        fused_mlp_kernel(x, wu, wd, None, act="gelu", bm=64, bff=128)
+
+    def rmsnorm():
+        from repro.kernels.fused_rmsnorm.kernel import fused_rmsnorm_kernel
+        fused_rmsnorm_kernel(np.zeros((128, 16), f32),
+                             np.zeros((16,), f32), bm=64)
+
+    def moe():
+        from repro.kernels.moe_gmm.kernel import moe_gmm_kernel
+        moe_gmm_kernel(np.zeros((2, 64, 32), f32),
+                       np.zeros((2, 32, 64), f32), bc=32, bf=32, bd=16)
+
+    def ssd():
+        from repro.kernels.ssd_chunk.kernel import ssd_chunk_kernel
+        ssd_chunk_kernel(np.zeros((4, 2, 16, 8), f32),
+                         np.zeros((4, 2, 1, 16), f32),
+                         np.zeros((2,), f32), np.zeros((4, 16, 4), f32),
+                         np.zeros((4, 16, 4), f32))
+
+    return [("flash_attention", flash), ("fused_mlp", mlp),
+            ("fused_rmsnorm", rmsnorm), ("moe_gmm", moe),
+            ("ssd_chunk", ssd)]
+
+
+def check_repo_kernels() -> list[Diagnostic]:
+    """Record and geometry-check every kernel under `src/repro/kernels/`."""
+    diags: list[Diagnostic] = []
+    for name, build in _smoke_builders():
+        records: list[PallasCallRecord] = []
+        try:
+            with record_pallas_calls(records, name=name):
+                build()
+        except Exception as e:
+            diags.append(error(
+                "MK-K001", f"kernel {name}",
+                f"builder failed under the recorder: "
+                f"{type(e).__name__}: {e}"))
+            continue
+        for rec in records:
+            diags.extend(check_pallas_call(rec))
+    return diags
+
+
+__all__ = ["PallasCallRecord", "check_pallas_call", "check_repo_kernels",
+           "record_pallas_calls"]

@@ -1,0 +1,131 @@
+"""Mesh-configuration rules (family ``MK-M``): pure string/arithmetic
+validation of ``--mesh-shape/--axes/--stages/--model-par`` combinations.
+
+No jax import — these rules run before any device allocation, so an
+axis typo in a launch command fails with a readable diagnostic instead
+of a shard_map traceback after the mesh (and its arrays) exist.
+`repro.launch.train.parse_mesh_cli` routes through `check_mesh_cli` and
+raises `DiagnosticError` (a ValueError) listing every finding at once.
+"""
+from __future__ import annotations
+
+from .diagnostics import Diagnostic, error, warning
+
+# the axis names the sharding substrate understands (mirrors
+# repro.dist.context: DATA_AXES + MODEL_AXIS + the pipeline stage axis)
+KNOWN_AXES = ("stage", "pod", "data", "model")
+DEFAULT_AXES = {1: ("data",), 2: ("data", "model"),
+                3: ("stage", "data", "model")}
+
+
+def resolve_mesh_cli(mesh_shape: str | None, axes: str | None,
+                     stages: int, model_par: int = 1
+                     ) -> tuple[tuple[int, ...] | None,
+                                tuple[str, ...] | None,
+                                list[Diagnostic]]:
+    """Parse + verify the mesh CLI; returns ``(shape, names, diags)``.
+
+    ``shape``/``names`` are None when no explicit mesh was requested (or
+    when it was malformed beyond parsing); callers must treat any
+    error-severity diagnostic as fatal.
+    """
+    diags: list[Diagnostic] = []
+    loc = f"--mesh-shape {mesh_shape} --axes {axes}"
+    if mesh_shape is None:
+        if axes is not None:
+            diags.append(error(
+                "MK-M002", loc, "--axes given without --mesh-shape",
+                "pass both, or neither (the default mesh fills the "
+                "available devices)"))
+        return None, None, diags
+
+    try:
+        shape = tuple(int(s) for s in mesh_shape.split(",") if s.strip())
+    except ValueError:
+        diags.append(error(
+            "MK-M001", loc,
+            f"--mesh-shape wants comma-separated ints, got "
+            f"{mesh_shape!r}", "e.g. --mesh-shape 2,2,2"))
+        return None, None, diags
+    if not shape or any(s < 1 for s in shape):
+        diags.append(error(
+            "MK-M001", loc,
+            f"--mesh-shape entries must be >= 1: {shape}"))
+        return None, None, diags
+
+    if axes is None:
+        names = DEFAULT_AXES.get(len(shape))
+        if names is None:
+            diags.append(error(
+                "MK-M002", loc,
+                f"no default axis names for a rank-{len(shape)} mesh",
+                "pass --axes, e.g. --axes stage,data,model"))
+            return None, None, diags
+    else:
+        names = tuple(a.strip() for a in axes.split(",") if a.strip())
+        if len(names) != len(shape):
+            diags.append(error(
+                "MK-M002", loc,
+                f"--mesh-shape {shape} and --axes {names} disagree on "
+                "rank"))
+            return None, None, diags
+
+    for a in names:
+        if a not in KNOWN_AXES:
+            close = _closest(a)
+            diags.append(error(
+                "MK-M003", loc,
+                f"unknown mesh axis {a!r}; the sharding substrate knows "
+                f"{KNOWN_AXES}",
+                f"did you mean {close!r}?" if close else
+                "collectives and PartitionSpecs only name these axes"))
+    if len(set(names)) != len(names):
+        dup = sorted({a for a in names if names.count(a) > 1})
+        diags.append(error(
+            "MK-M004", loc, f"duplicate mesh axes {dup} in {names}"))
+
+    sizes = dict(zip(names, shape))
+    stage_size = sizes.get("stage", 1)
+    if stages > 1 and stage_size != stages:
+        diags.append(error(
+            "MK-M005", loc,
+            f"--stages {stages} needs a 'stage' axis of that size in "
+            f"the mesh, got {sizes}"))
+    if stages <= 1 and stage_size != 1:
+        diags.append(error(
+            "MK-M005", loc,
+            f"mesh carries a 'stage' axis of size {stage_size} but "
+            f"--stages is {stages}",
+            f"pass --stages {stage_size}"))
+    model_size = sizes.get("model", 1)
+    if model_par > 1 and model_size != model_par:
+        diags.append(warning(
+            "MK-M006", loc,
+            f"--model-par {model_par} is ignored when --mesh-shape is "
+            f"explicit (the mesh's model axis is {model_size})",
+            "drop --model-par or make the mesh's model axis match"))
+    return shape, names, diags
+
+
+def _closest(name: str) -> str | None:
+    """Cheap typo hint: the known axis sharing the longest prefix."""
+    best, best_len = None, 0
+    for known in KNOWN_AXES:
+        n = 0
+        for a, b in zip(name.lower(), known):
+            if a != b:
+                break
+            n += 1
+        if n > best_len:
+            best, best_len = known, n
+    return best if best_len >= 2 else None
+
+
+def check_mesh_cli(mesh_shape: str | None, axes: str | None, stages: int,
+                   model_par: int = 1) -> list[Diagnostic]:
+    """Diagnostics-only form of `resolve_mesh_cli`."""
+    return resolve_mesh_cli(mesh_shape, axes, stages, model_par)[2]
+
+
+__all__ = ["DEFAULT_AXES", "KNOWN_AXES", "check_mesh_cli",
+           "resolve_mesh_cli"]

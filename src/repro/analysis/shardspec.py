@@ -1,0 +1,158 @@
+"""Sharding-spec lint (rule family ``MK-S``).
+
+`repro.dist.sharding` builds mesh-independent PartitionSpec trees and
+clamps them against the concrete mesh only at application time
+(`_sanitize`): an axis the mesh lacks, or a shard count that doesn't
+divide the dim, silently drops to replicated.  That permissiveness is
+what lets one spec tree serve every mesh — but it also swallows typos
+("modle" replicates everything with no sign) and, inside a *manual*
+shard_map island, silent replication of a model-sharded leaf is an
+outright correctness bug: the layer code reduces row-parallel partial
+products with explicit ``psum("model")``, which double-counts a leaf
+that secretly arrived replicated (the hard error `pipeline_stage_specs`
+already raises ad hoc).  These checks generalize that: lint any
+spec/leaf tree against a symbolic ``{axis: size}`` mesh description and
+report what sanitization *would* do before it quietly does it.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .diagnostics import Diagnostic, error, warning
+from .meshcli import KNOWN_AXES
+
+Tree = Any
+
+
+def _entries(spec: P) -> list[tuple[str, ...]]:
+    """Normalize a spec to per-dim axis tuples (None → empty tuple)."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(())
+        elif isinstance(entry, tuple):
+            out.append(tuple(entry))
+        else:
+            out.append((entry,))
+    return out
+
+
+def check_spec(spec: P, shape: Sequence[int] | None,
+               mesh_axes: Mapping[str, int], loc: str,
+               manual_axes: Sequence[str] = (),
+               constraint: bool = False,
+               known_axes: Sequence[str] = KNOWN_AXES) -> list[Diagnostic]:
+    """Lint one PartitionSpec against a symbolic mesh.
+
+    Spec trees here are *mesh-independent* by design (`param_specs`
+    names the logical ``model`` axis even when the concrete mesh lacks
+    it, and `_sanitize` drops the entry at application time) — so an
+    axis that is in `known_axes` but absent from this mesh is the
+    documented sanitize-to-replicated path, not a finding.  MK-S001
+    fires only for axes the substrate does not know at all: those are
+    typos, and sanitization would silently replicate them everywhere.
+
+    `shape` is the leaf shape the spec will be applied to (None skips
+    rank/divisibility checks); `manual_axes` are the axes that are
+    manual inside the surrounding shard_map island.  Two roles:
+
+    - island *in_specs* (``constraint=False``): naming manual axes is
+      how shard_map works, but a ``model`` entry that would sanitize
+      away there is an error (MK-S003) — the block math psums partials
+      it believes are sharded;
+    - *constraint* specs issued inside the island (``constraint=True``):
+      naming a manual axis at all is an error (MK-S006), because inside
+      the island that axis no longer exists for the partitioner.
+    """
+    diags: list[Diagnostic] = []
+    entries = _entries(spec)
+
+    if shape is not None and len(entries) > len(shape):
+        diags.append(error(
+            "MK-S005", loc,
+            f"spec {spec} has {len(entries)} entries for a rank-"
+            f"{len(shape)} leaf of shape {tuple(shape)}"))
+        # rank mismatch poisons the per-dim checks below
+        entries = entries[:len(shape)]
+
+    seen: dict[str, int] = {}
+    for d, axes in enumerate(entries):
+        for a in axes:
+            if a in seen:
+                diags.append(error(
+                    "MK-S004", loc,
+                    f"axis {a!r} appears in dims {seen[a]} and {d} of "
+                    f"{spec} — one mesh axis can shard one dim"))
+            seen.setdefault(a, d)
+            if a not in mesh_axes and a not in known_axes:
+                diags.append(error(
+                    "MK-S001", loc,
+                    f"spec {spec} names axis {a!r}, which neither this "
+                    f"mesh ({tuple(mesh_axes)}) nor the sharding "
+                    f"substrate ({tuple(known_axes)}) knows",
+                    "sanitization would silently replicate this dim — "
+                    "fix the axis name or the mesh"))
+            elif constraint and a in manual_axes:
+                diags.append(error(
+                    "MK-S006", loc,
+                    f"constraint spec {spec} names {a!r}, which is "
+                    "manual inside this island — the partitioner no "
+                    "longer sees that axis",
+                    "constraints inside shard_map may only name the "
+                    "island's auto axes"))
+
+    if shape is None:
+        return diags
+
+    for d, axes in enumerate(entries):
+        known = [a for a in axes if a in mesh_axes]
+        if not known:
+            continue
+        size = 1
+        for a in known:
+            size *= mesh_axes[a]
+        if size > 1 and shape[d] % size:
+            rule, make = ("MK-S002", warning)
+            if (not constraint and "model" in known
+                    and "model" in manual_axes):
+                # inside a manual island a dropped model entry is not a
+                # perf wart but a double-count (explicit psum reduces a
+                # leaf that arrived replicated)
+                rule, make = ("MK-S003", error)
+            diags.append(make(
+                rule, loc,
+                f"dim {d} of shape {tuple(shape)} is not divisible by "
+                f"{'x'.join(known)}={size}; the entry drops to "
+                "replicated at application time",
+                "pad the dim (e.g. tp_align) or lower the axis size"))
+    return diags
+
+
+def check_spec_tree(tree_abs: Tree, specs: Tree,
+                    mesh_axes: Mapping[str, int], loc_prefix: str = "",
+                    manual_axes: Sequence[str] = (),
+                    constraint: bool = False,
+                    known_axes: Sequence[str] = KNOWN_AXES,
+                    ) -> list[Diagnostic]:
+    """Lint a whole spec tree against its (abstract) leaf tree."""
+    diags: list[Diagnostic] = []
+
+    def visit(path, leaf, spec):
+        loc = f"{loc_prefix}{jax.tree_util.keystr(path)}"
+        shape = getattr(leaf, "shape", None)
+        diags.extend(check_spec(spec, shape, mesh_axes, loc,
+                                manual_axes=manual_axes,
+                                constraint=constraint,
+                                known_axes=known_axes))
+        return spec
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree_abs, specs,
+        is_leaf=lambda l: isinstance(l, P))
+    return diags
+
+
+__all__ = ["check_spec", "check_spec_tree"]

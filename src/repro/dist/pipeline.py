@@ -217,7 +217,17 @@ def make_step_program(n_micro: int, n_stages: int,
     prog = [[(PIPE_IDLE, 0)] * S for _ in range(T)]
 
     def put(t, s, op, m):
-        assert prog[t][s][0] == PIPE_IDLE, (t, s, prog[t][s])
+        prev_op, prev_m = prog[t][s]
+        if prev_op != PIPE_IDLE:
+            # a real raise (asserts vanish under python -O) naming the
+            # schedule/tick/stage/microbatch, matching mklint's wording
+            prev = "F" if prev_op == PIPE_FWD else "B"
+            this = "F" if op == PIPE_FWD else "B"
+            raise ValueError(
+                f"make_step_program({schedule!r}): tick {t} stage {s} "
+                f"already runs {prev}(microbatch={prev_m}), cannot also "
+                f"run {this}(microbatch={m}) — one micro-step per stage "
+                "per tick")
         prog[t][s] = (op, m)
 
     for s in range(S):
@@ -229,32 +239,31 @@ def make_step_program(n_micro: int, n_stages: int,
             else:
                 put(s + m if m < warm else 2 * m + s, s, PIPE_FWD, m)
                 put(2 * S - 1 - s + 2 * m, s, PIPE_BWD, m)
-    _check_program(prog, M, S)
+    _check_program(prog, M, S, schedule=schedule)
     return prog
 
 
-def _check_program(prog, n_micro: int, n_stages: int) -> None:
-    """Validate a step program's dataflow (see `make_step_program`)."""
-    f_tick: dict = {}
-    b_tick: dict = {}
-    for t, row in enumerate(prog):
-        assert len(row) == n_stages
-        for s, (op, m) in enumerate(row):
-            if op == PIPE_FWD:
-                assert (s, m) not in f_tick
-                f_tick[(s, m)] = t
-            elif op == PIPE_BWD:
-                assert (s, m) not in b_tick
-                b_tick[(s, m)] = t
-    for s in range(n_stages):
-        for m in range(n_micro):
-            assert (s, m) in f_tick and (s, m) in b_tick, (s, m)
-            if s > 0:
-                assert f_tick[(s, m)] >= f_tick[(s - 1, m)] + 1, (s, m)
-            if s < n_stages - 1:
-                assert b_tick[(s, m)] == b_tick[(s + 1, m)] + 1, (s, m)
-            else:
-                assert b_tick[(s, m)] >= f_tick[(s, m)] + 1, (s, m)
+def _check_program(prog, n_micro: int, n_stages: int,
+                   schedule: str | None = None) -> None:
+    """Validate a step program's dataflow (see `make_step_program`).
+
+    Thin raising wrapper over the reporting verifier
+    (`repro.analysis.dataflow.check_step_program`): any error-severity
+    diagnostic becomes a `DiagnosticError` (a ValueError) whose message
+    names the schedule, tick, stage and microbatch — unlike the bare
+    assert tuples this used to raise, it survives ``python -O``.  The
+    import is lazy to keep this module's import graph analysis-free.
+    """
+    from repro.analysis.dataflow import check_step_program
+    from repro.analysis.diagnostics import DiagnosticError
+
+    diags = [d for d in check_step_program(prog, n_micro, n_stages,
+                                           schedule=schedule)
+             if d.is_error]
+    if diags:
+        raise DiagnosticError(
+            diags, prefix=f"invalid step program "
+                          f"(n_micro={n_micro}, n_stages={n_stages}):")
 
 
 def program_peak_inflight(prog, n_stages: int) -> int:

@@ -407,6 +407,9 @@ def main() -> None:
                     help="pipeline schedule for --stages > 1 cells; "
                          "reported peak-activation bytes cover both")
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--verify", action="store_true",
+                    help="run the mklint static verifier on this cell "
+                         "before lowering; refuse on errors")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--variant", action="append", default=[],
                     help="optimization flags (repeatable): ar_bf16, "
@@ -426,6 +429,25 @@ def main() -> None:
         meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
         fails = run_all(meshes, out_dir, parallel=args.parallel)
         sys.exit(1 if fails else 0)
+
+    if args.verify and args.shape:
+        # lint the cell with the same mesh convention _dryrun_mesh uses
+        # ((stages, data[, model])) before any lowering work starts
+        from repro.analysis import verify_launch
+        shape = SHAPES[args.shape]
+        report = verify_launch(
+            args.arch, smoke=args.smoke,
+            global_batch=shape.global_batch, seq_len=shape.seq_len,
+            stages=args.stages, microbatch=args.microbatch,
+            model_par=args.model_par,
+            data_par=args.data_par or (max(256 // args.stages, 1)
+                                       if args.stages > 1 else None),
+            schedule=args.schedule, flags=tuple(args.variant))
+        print(report.format())
+        if not report.ok:
+            sys.exit(f"mklint: refusing to lower: {len(report.errors)} "
+                     "error(s) — fix the diagnostics above or drop "
+                     "--verify")
 
     meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
     if args.stages > 1:

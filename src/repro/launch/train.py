@@ -137,14 +137,16 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
     return cfg, mesh, (params, opt_state), wrapped, data
 
 
-_KNOWN_AXES = ("stage", "pod", "data", "model")
-_DEFAULT_AXES = {1: ("data",), 2: ("data", "model"),
-                 3: ("stage", "data", "model")}
+# single source of truth for axis names / rank defaults lives with the
+# mesh-CLI rules (kept as aliases here for older call sites)
+from repro.analysis.meshcli import (DEFAULT_AXES as _DEFAULT_AXES,
+                                    KNOWN_AXES as _KNOWN_AXES)  # noqa: E402
 
 
 def parse_mesh_cli(mesh_shape: str | None, axes: str | None,
-                   stages: int) -> tuple[tuple[int, ...] | None,
-                                         tuple[str, ...] | None]:
+                   stages: int, model_par: int = 1
+                   ) -> tuple[tuple[int, ...] | None,
+                              tuple[str, ...] | None]:
     """Validate `--mesh-shape`/`--axes` against `--stages`.
 
     Returns ``(shape, axes)`` for `build()` (both None when no explicit
@@ -152,45 +154,22 @@ def parse_mesh_cli(mesh_shape: str | None, axes: str | None,
     comma-separated ints (``2,2,2``), axes comma-separated names from
     ``stage/pod/data/model``; with `--mesh-shape` but no `--axes` the
     rank picks the conventional names (3 → ``stage,data,model``).
+
+    The checks live in `repro.analysis.meshcli` (rule family ``MK-M``);
+    an invalid combination raises `DiagnosticError` — a ValueError whose
+    message carries every finding with its rule ID and fix hint, before
+    any device is touched.
     """
-    if mesh_shape is None:
-        if axes is not None:
-            raise ValueError("--axes needs --mesh-shape")
-        return None, None
-    try:
-        shape = tuple(int(s) for s in mesh_shape.split(",") if s.strip())
-    except ValueError:
-        raise ValueError(
-            f"--mesh-shape wants comma-separated ints, got {mesh_shape!r}")
-    if not shape or any(s < 1 for s in shape):
-        raise ValueError(f"--mesh-shape entries must be >= 1: {shape}")
-    if axes is None:
-        names = _DEFAULT_AXES.get(len(shape))
-        if names is None:
-            raise ValueError(
-                f"no default axis names for a rank-{len(shape)} mesh; "
-                "pass --axes")
-    else:
-        names = tuple(a.strip() for a in axes.split(",") if a.strip())
-    if len(names) != len(shape):
-        raise ValueError(
-            f"--mesh-shape {shape} and --axes {names} disagree on rank")
-    unknown = [a for a in names if a not in _KNOWN_AXES]
-    if unknown:
-        raise ValueError(
-            f"unknown mesh axes {unknown}; the sharding substrate knows "
-            f"{_KNOWN_AXES}")
-    if len(set(names)) != len(names):
-        raise ValueError(f"duplicate mesh axes in {names}")
-    stage_size = dict(zip(names, shape)).get("stage", 1)
-    if stages > 1 and stage_size != stages:
-        raise ValueError(
-            f"--stages {stages} needs a 'stage' axis of that size in the "
-            f"mesh, got {dict(zip(names, shape))}")
-    if stages <= 1 and stage_size != 1:
-        raise ValueError(
-            f"mesh carries a 'stage' axis of size {stage_size} but "
-            f"--stages is {stages}; pass --stages {stage_size}")
+    from repro.analysis.diagnostics import DiagnosticError
+    from repro.analysis.meshcli import resolve_mesh_cli
+
+    shape, names, diags = resolve_mesh_cli(mesh_shape, axes, stages,
+                                           model_par)
+    errors = [d for d in diags if d.is_error]
+    if errors:
+        raise DiagnosticError(errors, prefix="invalid mesh CLI:")
+    for d in diags:                    # warnings (e.g. ignored --model-par)
+        log.warning("%s", d.format())
     return shape, names
 
 
@@ -235,6 +214,10 @@ def main() -> None:
     ap.add_argument("--grad-int8", action="store_true",
                     help="int8 error-feedback gradient all-reduce "
                          "(repro.dist.compression.compressed_psum)")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the mklint static verifier (collectives, "
+                         "step program, sharding specs, kernels) before "
+                         "building anything; refuse to launch on errors")
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
@@ -242,7 +225,20 @@ def main() -> None:
     logging.basicConfig(level=logging.INFO)
     flags = ("grad_int8",) if args.grad_int8 else ()
     mesh_shape, axes = parse_mesh_cli(args.mesh_shape, args.axes,
-                                      args.stages)
+                                      args.stages, args.model_par)
+    if args.verify:
+        from repro.analysis import verify_launch
+        report = verify_launch(
+            args.arch, smoke=args.smoke, global_batch=args.global_batch,
+            seq_len=args.seq_len, stages=args.stages,
+            microbatch=args.microbatch, model_par=args.model_par,
+            mesh_shape=args.mesh_shape, axes=args.axes,
+            schedule=args.schedule, flags=flags)
+        print(report.format())
+        if not report.ok:
+            raise SystemExit(
+                f"mklint: refusing to launch: {len(report.errors)} "
+                "error(s) — fix the diagnostics above or drop --verify")
     kw = {} if mesh_shape is None else {"mesh_shape": mesh_shape,
                                         "axes": axes}
     cfg, mesh, state, step_fn, data = build(

@@ -1,0 +1,514 @@
+"""mklint static verifier: rule IDs are a public contract.
+
+Each known-bad fixture must fire its exact rule; each known-good fixture
+(including the masked heterogeneous stage scan shape from the padded
+per-stage partitions) must pass clean.  The end-to-end tests run the CLI
+and `--verify` launchers in subprocesses with faked device counts.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from _hypothesis_compat import given, settings, st
+
+from repro.analysis import (DiagnosticError, RULES, Severity,
+                            check_mesh_cli, check_step_program,
+                            resolve_mesh_cli, verify_launch)
+from repro.analysis.collectives import check_closed_jaxpr
+from repro.analysis.kernels import (PallasCallRecord, check_pallas_call,
+                                    check_repo_kernels)
+from repro.analysis.shardspec import check_spec
+from repro.dist.pipeline import (PIPE_BWD, PIPE_FWD, PIPE_IDLE,
+                                 _check_program, make_step_program)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def rules_of(diags):
+    return {d.rule for d in diags}
+
+
+def errors_of(diags):
+    return {d.rule for d in diags if d.is_error}
+
+
+# ---------------------------------------------------------------- MK-C
+
+def _trace(f, *args, axes=(("model", 2),)):
+    return jax.make_jaxpr(f, axis_env=list(axes))(*args)
+
+
+MODEL2 = {"model": 2}
+
+
+def test_cond_one_sided_psum_over_varying_pred_fires_c002():
+    def f(x):
+        pred = jax.lax.axis_index("model") == 0
+        return jax.lax.cond(
+            pred, lambda v: jax.lax.psum(v, "model"), lambda v: v, x)
+
+    diags = check_closed_jaxpr(_trace(f, jnp.ones(4)), MODEL2)
+    assert "MK-C002" in errors_of(diags)
+
+
+def test_uniform_pred_masked_cond_is_clean():
+    # the heterogeneous-stage masked scan shape: the predicate comes from
+    # replicated size constants, so one-sided collectives are uniform
+    def f(x, k):
+        return jax.lax.cond(
+            k > 0, lambda v: jax.lax.psum(v, "model"), lambda v: v, x)
+
+    diags = check_closed_jaxpr(
+        _trace(f, jnp.ones(4), jnp.int32(1)), MODEL2)
+    assert not errors_of(diags)
+
+
+def test_balanced_cond_branches_are_clean_even_when_pred_varies():
+    def f(x):
+        pred = jax.lax.axis_index("model") == 0
+        return jax.lax.cond(
+            pred,
+            lambda v: jax.lax.psum(v * 2, "model"),
+            lambda v: jax.lax.psum(v, "model"), x)
+
+    diags = check_closed_jaxpr(_trace(f, jnp.ones(4)), MODEL2)
+    assert not errors_of(diags)
+
+
+def test_collective_over_unknown_axis_fires_c001():
+    def f(x):
+        return jax.lax.psum(x, "modle")
+
+    closed = _trace(f, jnp.ones(4), axes=(("modle", 2),))
+    diags = check_closed_jaxpr(closed, MODEL2)
+    assert "MK-C001" in errors_of(diags)
+
+
+def test_ppermute_dropped_edge_fires_c003():
+    def f(x):
+        return jax.lax.ppermute(x, "model", [(0, 1)])
+
+    diags = check_closed_jaxpr(_trace(f, jnp.ones(4)), MODEL2)
+    assert "MK-C003" in errors_of(diags)
+
+
+def test_ppermute_complete_ring_is_clean():
+    def f(x):
+        return jax.lax.ppermute(x, "model", [(0, 1), (1, 0)])
+
+    diags = check_closed_jaxpr(_trace(f, jnp.ones(4)), MODEL2)
+    assert not errors_of(diags)
+
+
+def test_stage_swap_permutation_warns_c004():
+    def f(x):
+        return jax.lax.ppermute(
+            x, "stage", [(0, 1), (1, 0), (2, 3), (3, 2)])
+
+    diags = check_closed_jaxpr(
+        _trace(f, jnp.ones(4), axes=(("stage", 4),)), {"stage": 4})
+    assert "MK-C004" in rules_of(diags)
+    assert "MK-C004" not in errors_of(diags)     # warning, not error
+
+
+def test_collective_under_varying_trip_count_fires_c005():
+    def f(x):
+        def cond(c):
+            i, _ = c
+            return i < jax.lax.axis_index("model") + 1
+
+        def body(c):
+            i, v = c
+            return i + 1, jax.lax.psum(v, "model")
+
+        return jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+
+    diags = check_closed_jaxpr(_trace(f, jnp.ones(4)), MODEL2)
+    assert "MK-C005" in errors_of(diags)
+
+
+def test_scan_carrying_balanced_cond_is_clean():
+    def f(x):
+        def step(carry, _):
+            pred = jax.lax.axis_index("model") == 0
+            y = jax.lax.cond(
+                pred,
+                lambda v: jax.lax.psum(v, "model"),
+                lambda v: jax.lax.psum(v + 1, "model"), carry)
+            return y, y
+
+        out, _ = jax.lax.scan(step, x, None, length=3)
+        return out
+
+    diags = check_closed_jaxpr(_trace(f, jnp.ones(4)), MODEL2)
+    assert not errors_of(diags)
+
+
+# ---------------------------------------------------------------- MK-P
+
+F, B, I = PIPE_FWD, PIPE_BWD, PIPE_IDLE
+IDLE = (I, -1)
+
+
+def _prog(*rows):
+    return tuple(tuple(r) for r in rows)
+
+
+# valid S=2, M=1 program: F0 F1 B1 B0 down the diagonal
+GOOD_2x1 = _prog(
+    [(F, 0), IDLE],
+    [IDLE, (F, 0)],
+    [IDLE, (B, 0)],
+    [(B, 0), IDLE],
+)
+
+
+def test_generated_programs_are_clean():
+    for m in (1, 2, 4, 5):
+        for s in (1, 2, 3, 4):
+            for sched in ("gpipe", "1f1b"):
+                prog = make_step_program(m, s, sched)
+                diags = check_step_program(prog, m, s, schedule=sched)
+                assert not errors_of(diags), (m, s, sched, diags)
+
+
+def test_hand_built_program_is_clean():
+    assert not errors_of(check_step_program(GOOD_2x1, 1, 2))
+
+
+def test_short_tick_row_fires_p001():
+    bad = GOOD_2x1[:1] + (((F, 0),),) + GOOD_2x1[2:]
+    assert "MK-P001" in errors_of(check_step_program(bad, 1, 2))
+
+
+def test_duplicate_microstep_fires_p002():
+    bad = _prog([(F, 0), IDLE], [(F, 0), (F, 0)],
+                [IDLE, (B, 0)], [(B, 0), IDLE])
+    assert "MK-P002" in errors_of(check_step_program(bad, 1, 2))
+
+
+def test_missing_microstep_fires_p003():
+    bad = _prog([(F, 0), IDLE], [IDLE, (F, 0)],
+                [IDLE, (B, 0)], [IDLE, IDLE])
+    assert "MK-P003" in errors_of(check_step_program(bad, 1, 2))
+
+
+def test_forward_before_ring_delivery_fires_p004():
+    bad = _prog([(F, 0), (F, 0)], [IDLE, IDLE],
+                [IDLE, (B, 0)], [(B, 0), IDLE])
+    assert "MK-P004" in errors_of(check_step_program(bad, 1, 2))
+
+
+def test_late_backward_fires_p005():
+    bad = _prog([(F, 0), IDLE], [IDLE, (F, 0)],
+                [IDLE, (B, 0)], [IDLE, IDLE], [(B, 0), IDLE])
+    assert "MK-P005" in errors_of(check_step_program(bad, 1, 2))
+
+
+def test_backward_before_own_forward_fires_p005():
+    bad = _prog([(F, 0), (B, 0)], [IDLE, (F, 0)],
+                [(B, 0), IDLE])
+    assert "MK-P005" in errors_of(check_step_program(bad, 1, 2))
+
+
+def test_malformed_entry_fires_p006():
+    bad = _prog([(F, 0), (7, 0)], [IDLE, (F, 0)],
+                [IDLE, (B, 0)], [(B, 0), IDLE])
+    assert "MK-P006" in errors_of(check_step_program(bad, 1, 2))
+
+
+def test_stash_bound_violation_fires_p007():
+    # a valid gpipe program stashes M=4 per stage; judged against the
+    # 1f1b analytic bound min(M, S)=2 it must overflow
+    prog = make_step_program(4, 2, "gpipe")
+    assert "MK-P007" in errors_of(
+        check_step_program(prog, 4, 2, schedule="1f1b"))
+
+
+def test_unnamed_schedule_reports_peak_as_info():
+    diags = check_step_program(GOOD_2x1, 1, 2, schedule=None)
+    peak = [d for d in diags if d.rule == "MK-P007"]
+    assert peak and all(d.severity is Severity.INFO for d in peak)
+
+
+def test_check_program_raises_diagnostic_valueerror():
+    bad = _prog([(F, 0), IDLE], [IDLE, (F, 0)],
+                [IDLE, (B, 0)], [IDLE, IDLE])
+    with pytest.raises(ValueError) as ei:
+        _check_program(bad, 1, 2, schedule="gpipe")
+    assert isinstance(ei.value, DiagnosticError)
+    assert "MK-P003" in str(ei.value)
+    assert ei.value.diagnostics          # structured records ride along
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 5),
+       st.sampled_from(["gpipe", "1f1b"]), st.integers(0, 10_000))
+def test_property_generated_programs_verify_and_mutations_fail(
+        m, s, sched, seed):
+    prog = make_step_program(m, s, sched)
+    diags = check_step_program(prog, m, s, schedule=sched)
+    assert not errors_of(diags), (m, s, sched, diags)
+
+    # knock out one scheduled micro-step: the verifier must object
+    busy = [(t, st_) for t, row in enumerate(prog)
+            for st_, (op, _) in enumerate(row) if op != I]
+    t, st_ = busy[seed % len(busy)]
+    bad = [list(row) for row in prog]
+    bad[t][st_] = IDLE
+    mutated = _prog(*bad)
+    assert errors_of(check_step_program(mutated, m, s, schedule=sched))
+
+
+# ---------------------------------------------------------------- MK-M
+
+def test_mesh_cli_malformed_literal_fires_m001():
+    assert "MK-M001" in rules_of(check_mesh_cli("2,x", "data,model", 1))
+    assert "MK-M001" in rules_of(check_mesh_cli("0,2", "data,model", 1))
+
+
+def test_mesh_cli_rank_disagreements_fire_m002():
+    assert "MK-M002" in rules_of(check_mesh_cli(None, "data,model", 1))
+    assert "MK-M002" in rules_of(check_mesh_cli("2,2,2", "data,model", 1))
+    assert "MK-M002" in rules_of(check_mesh_cli("2,2,2,2", None, 1))
+
+
+def test_mesh_cli_axis_typo_fires_m003_with_hint():
+    diags = check_mesh_cli("2,2", "data,modle", 1)
+    (d,) = [d for d in diags if d.rule == "MK-M003"]
+    assert "model" in d.hint
+
+
+def test_mesh_cli_duplicate_axis_fires_m004():
+    assert "MK-M004" in rules_of(check_mesh_cli("2,2", "data,data", 1))
+
+
+def test_mesh_cli_stage_size_mismatch_fires_m005_both_ways():
+    assert "MK-M005" in rules_of(
+        check_mesh_cli("2,2,2", "stage,data,model", 4))
+    assert "MK-M005" in rules_of(
+        check_mesh_cli("2,2,2", "stage,data,model", 1))
+
+
+def test_mesh_cli_ignored_model_par_warns_m006():
+    diags = check_mesh_cli("2,4,2", "stage,data,model", 2, model_par=4)
+    (d,) = [d for d in diags if d.rule == "MK-M006"]
+    assert d.severity is Severity.WARNING
+
+
+def test_resolve_mesh_cli_accepts_the_conventional_forms():
+    assert resolve_mesh_cli(None, None, 1) == (None, None, [])
+    shape, names, diags = resolve_mesh_cli("2,2,2", None, 2)
+    assert (shape, names) == ((2, 2, 2), ("stage", "data", "model"))
+    assert not diags
+
+
+def test_parse_mesh_cli_raises_diagnostic_valueerror():
+    from repro.launch.train import parse_mesh_cli
+    with pytest.raises(ValueError) as ei:
+        parse_mesh_cli("2,2", "data,modle", 1)
+    assert "MK-M003" in str(ei.value)
+
+
+# ---------------------------------------------------------------- MK-S
+
+def test_spec_unknown_axis_fires_s001():
+    diags = check_spec(P("modle"), (8,), {"data": 2}, "t")
+    assert "MK-S001" in errors_of(diags)
+
+
+def test_spec_known_but_absent_axis_is_the_sanitize_path():
+    # param_specs names "model" even on model-less meshes by design
+    assert not check_spec(P("model"), (8,), {"data": 2}, "t")
+
+
+def test_spec_axis_in_two_dims_fires_s004():
+    diags = check_spec(P("data", "data"), (4, 4), {"data": 2}, "t")
+    assert "MK-S004" in errors_of(diags)
+
+
+def test_spec_rank_excess_fires_s005():
+    diags = check_spec(P("data", None, None), (8,), {"data": 2}, "t")
+    assert "MK-S005" in errors_of(diags)
+
+
+def test_nondividing_dim_warns_s002_outside_islands():
+    diags = check_spec(P("model"), (6,), {"model": 4}, "t")
+    assert rules_of(diags) == {"MK-S002"}
+    assert not errors_of(diags)
+
+
+def test_nondividing_model_dim_inside_island_fires_s003():
+    diags = check_spec(P("model"), (6,), {"model": 4}, "t",
+                       manual_axes=("stage", "model"))
+    assert "MK-S003" in errors_of(diags)
+
+
+def test_constraint_naming_manual_axis_fires_s006():
+    diags = check_spec(P("stage"), (8,), {"stage": 2}, "t",
+                       manual_axes=("stage",), constraint=True)
+    assert "MK-S006" in errors_of(diags)
+
+
+# ---------------------------------------------------------------- MK-K
+
+def test_repo_kernels_pass_geometry_checks():
+    diags = check_repo_kernels()
+    assert not errors_of(diags), [d.format() for d in diags]
+
+
+def _rec(out_spec, out_shape=(128,), grid=(2,)):
+    return PallasCallRecord(
+        name="fixture", grid=grid, in_specs=[], out_specs=[out_spec],
+        out_shapes=[out_shape], operand_shapes=[])
+
+
+def test_nondividing_block_fires_k001():
+    from jax.experimental import pallas as pl
+    rec = _rec(pl.BlockSpec((48,), lambda i: (i,)))
+    assert "MK-K001" in errors_of(check_pallas_call(rec))
+
+
+def test_out_of_bounds_index_map_fires_k002():
+    from jax.experimental import pallas as pl
+    rec = _rec(pl.BlockSpec((64,), lambda i: (i + 1,)))
+    assert "MK-K002" in errors_of(check_pallas_call(rec))
+
+
+def test_uncovered_output_block_fires_k003():
+    from jax.experimental import pallas as pl
+    rec = _rec(pl.BlockSpec((64,), lambda i: (0,)))
+    assert "MK-K003" in errors_of(check_pallas_call(rec))
+
+
+def test_good_record_is_clean():
+    from jax.experimental import pallas as pl
+    rec = _rec(pl.BlockSpec((64,), lambda i: (i,)))
+    assert not check_pallas_call(rec)
+
+
+# ------------------------------------------------------- verify_launch
+
+def test_verify_launch_single_stage_is_clean_and_timed():
+    report = verify_launch("granite-3-8b", smoke=True, global_batch=4,
+                           seq_len=64, check_kernels=False)
+    assert report.ok, report.format()
+    assert report.wall_s > 0
+
+
+def test_verify_launch_unknown_schedule_fires_l004():
+    report = verify_launch("granite-3-8b", smoke=True, global_batch=4,
+                           seq_len=64, schedule="zigzag",
+                           check_kernels=False, trace_collectives=False)
+    assert "MK-L004" in report.rules_fired()
+    assert not report.ok
+
+
+def test_verify_launch_mesh_errors_short_circuit():
+    report = verify_launch("granite-3-8b", smoke=True,
+                           mesh_shape="2,2", axes="data,modle",
+                           check_kernels=False, trace_collectives=False)
+    assert report.rules_fired() == {"MK-M003"}
+    assert not report.ok
+
+
+def test_rule_ids_are_stable():
+    # the catalog is a public contract: additions fine, renames are not
+    expected = {f"MK-{fam}{i:03d}"
+                for fam, n in (("C", 5), ("P", 7), ("S", 6), ("K", 3),
+                               ("M", 6), ("L", 5))
+                for i in range(1, n + 1)}
+    assert expected <= set(RULES)
+
+
+# ------------------------------------------------- subprocess end-to-end
+
+def _run(script_or_cmd, env_devices=None, timeout=600):
+    if isinstance(script_or_cmd, str):
+        cmd = [sys.executable, "-c", textwrap.dedent(script_or_cmd)]
+    else:
+        cmd = script_or_cmd
+    return subprocess.run(cmd, capture_output=True, text=True,
+                          cwd=REPO, timeout=timeout)
+
+
+def test_cli_bench_smoke_preset_is_clean_and_fast():
+    r = _run([sys.executable, str(REPO / "tools" / "mklint.py"),
+              "--preset", "bench-smoke"])
+    out = r.stdout + r.stderr
+    assert r.returncode == 0, out
+    assert "5/5 configs clean" in out
+    # satellite contract: per-config static verification stays under ~2s
+    import re
+    walls = [float(w) for w in re.findall(r"clean \((\d+\.\d+)s\)", out)]
+    assert len(walls) == 5, out
+    assert all(w < 2.0 for w in walls), walls
+
+
+def test_cli_reports_bad_arithmetic_and_exits_nonzero():
+    r = _run([sys.executable, str(REPO / "tools" / "mklint.py"),
+              "--arch", "granite-3-8b", "--smoke", "--stages", "2",
+              "--data-par", "4", "--microbatch", "3",
+              "--global-batch", "8", "--seq-len", "64"])
+    out = r.stdout + r.stderr
+    assert r.returncode == 1, out
+    assert "MK-L003" in out
+
+
+def test_train_verify_refuses_misaligned_branch_collective():
+    # sabotage the block apply inside the pipeline island with a
+    # data-dependent one-sided psum; --verify must catch it (MK-C002)
+    # and refuse before anything is built
+    script = """
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import sys
+        import jax
+        import repro.models.pipeline as MP
+
+        real = MP._apply_block
+
+        def evil(p, spec, cfg, x, enc):
+            x, a = real(p, spec, cfg, x, enc)
+            pred = jax.lax.axis_index("model") == 0
+            x = jax.lax.cond(
+                pred, lambda v: jax.lax.psum(v, "model"),
+                lambda v: v, x)
+            return x, a
+
+        MP._apply_block = evil
+        sys.argv = ["train", "--arch", "granite-3-8b", "--smoke",
+                    "--steps", "1", "--global-batch", "8",
+                    "--seq-len", "64", "--stages", "2",
+                    "--model-par", "2", "--microbatch", "2", "--verify"]
+        from repro.launch.train import main
+        main()
+    """
+    r = _run(script)
+    out = r.stdout + r.stderr
+    assert r.returncode != 0, out
+    assert "MK-C002" in out
+    assert "refusing to launch" in out
+
+
+def test_train_verify_clean_config_proceeds(tmp_path):
+    script = f"""
+        import sys
+        sys.argv = ["train", "--arch", "granite-3-8b", "--smoke",
+                    "--steps", "1", "--global-batch", "4",
+                    "--seq-len", "64", "--verify",
+                    "--ckpt-dir", {str(tmp_path / "ckpt")!r}]
+        from repro.launch.train import main
+        main()
+    """
+    r = _run(script)
+    out = r.stdout + r.stderr
+    assert r.returncode == 0, out
+    assert "clean" in out

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""mklint: statically verify launch configurations without compiling.
+
+Runs `repro.analysis.verify_launch` over one config (train.py-style
+flags) or the bench-smoke preset, prints each report with its rule IDs
+and per-config wall time, and exits 1 if any config has errors.
+
+Examples:
+
+  # one config, dryrun-style pipeline mesh
+  python tools/mklint.py --arch jamba-v0.1-52b --smoke --shape train_4k \
+      --stages 3 --data-par 2 --microbatch 2 --schedule 1f1b
+
+  # explicit pp x tp mesh, train.py-style
+  python tools/mklint.py --arch granite-3-8b --smoke --stages 2 \
+      --microbatch 2 --mesh-shape 2,2,2 --axes stage,data,model \
+      --global-batch 8 --seq-len 64
+
+  # everything `make bench-smoke` exercises (both schedules,
+  # heterogeneous --stages 3, the pp x tp cell) in one process
+  python tools/mklint.py --preset bench-smoke
+
+Device handling: argument parsing and the mesh-size arithmetic run
+before any jax import; the needed fake host device count is injected
+via XLA_FLAGS, so linting a 16-device mesh works on a laptop CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# the bench-smoke matrix (mirrors the Makefile's dryrun cells, which use
+# SHAPES["train_4k"]: global_batch=256, seq_len=4096, plus the test-dist
+# pp x tp train CLI cell), every schedule
+_BENCH_SMOKE = [
+    dict(arch="granite-3-8b", smoke=True, shape="train_4k",
+         stages=2, model_par=2, data_par=4, microbatch=2,
+         schedule="gpipe"),
+    dict(arch="granite-3-8b", smoke=True, shape="train_4k",
+         stages=2, model_par=2, data_par=4, microbatch=2,
+         schedule="1f1b"),
+    dict(arch="jamba-v0.1-52b", smoke=True, shape="train_4k",
+         stages=3, data_par=2, microbatch=2, schedule="gpipe"),
+    dict(arch="jamba-v0.1-52b", smoke=True, shape="train_4k",
+         stages=3, data_par=2, microbatch=2, schedule="1f1b"),
+    dict(arch="granite-3-8b", smoke=True, global_batch=8, seq_len=64,
+         stages=2, microbatch=2, mesh_shape="2,2,2",
+         axes="stage,data,model", schedule="gpipe"),
+]
+
+
+def _mesh_product(cfg: dict) -> int:
+    """Devices one config's mesh needs — pure arithmetic, no jax."""
+    shape = cfg.get("mesh_shape")
+    if shape:
+        n = 1
+        for s in str(shape).split(","):
+            if s.strip():
+                try:
+                    n *= max(int(s), 1)
+                except ValueError:
+                    return 1          # malformed: the mesh rules report it
+        return n
+    n = max(cfg.get("stages", 1), 1) * max(cfg.get("model_par", 1), 1)
+    return n * max(cfg.get("data_par") or 1, 1)
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        description="static verifier for launch configurations (mklint)")
+    ap.add_argument("--preset", choices=["bench-smoke"],
+                    help="lint a built-in config matrix instead of one "
+                         "--arch config")
+    ap.add_argument("--arch")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--shape", default=None,
+                    help="take global batch / seq len from a named shape "
+                         "cell (e.g. train_4k), like launch.dryrun")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--stages", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--data-par", type=int, default=None)
+    ap.add_argument("--mesh-shape", default=None)
+    ap.add_argument("--axes", default=None)
+    ap.add_argument("--schedule", default="gpipe")
+    ap.add_argument("--grad-int8", action="store_true")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the (config-independent) Pallas kernel "
+                         "geometry checks")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print info-severity diagnostics")
+    args = ap.parse_args(argv)
+    if not args.preset and not args.arch:
+        ap.error("pass --arch (one config) or --preset bench-smoke")
+    return args
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    if args.preset == "bench-smoke":
+        configs = [dict(c) for c in _BENCH_SMOKE]
+    else:
+        configs = [dict(
+            arch=args.arch, smoke=args.smoke, shape=args.shape,
+            global_batch=args.global_batch, seq_len=args.seq_len,
+            stages=args.stages, microbatch=args.microbatch,
+            model_par=args.model_par, data_par=args.data_par,
+            mesh_shape=args.mesh_shape, axes=args.axes,
+            schedule=args.schedule,
+            flags=("grad_int8",) if args.grad_int8 else ())]
+
+    # fake enough host devices for the largest mesh BEFORE jax locks the
+    # backend (same trick as launch.dryrun); never shrink a user setting
+    need = max(_mesh_product(c) for c in configs)
+    if "XLA_FLAGS" not in os.environ and need > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={need}")
+
+    from repro.analysis import verify_launch
+    from repro.configs import SHAPES
+
+    failed = 0
+    for i, cfg in enumerate(configs):
+        shape = cfg.pop("shape", None)
+        if shape:
+            cfg.setdefault("global_batch", SHAPES[shape].global_batch)
+            cfg.setdefault("seq_len", SHAPES[shape].seq_len)
+        # kernel geometry is config-independent: check it once per run
+        cfg.setdefault("check_kernels", not args.no_kernels and i == 0)
+        report = verify_launch(**cfg)
+        print(report.format(verbose=args.verbose))
+        if not report.ok:
+            failed += 1
+    if len(configs) > 1:
+        print(f"mklint: {len(configs) - failed}/{len(configs)} configs "
+              "clean")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
