@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist bench bench-smoke lint-programs quickstart \
-	docs-check
+.PHONY: test test-dist test-kernels bench bench-smoke lint-programs \
+	quickstart docs-check
 
 # tier-1: the fast single-device suite (multi-device cases run in
 # subprocesses that set their own XLA_FLAGS, so this works on 1 CPU)
@@ -34,6 +34,16 @@ test-dist:
 	$(PY) -m repro.launch.train --arch jamba-v0.1-52b --smoke --steps 2 \
 	    --global-batch 4 --seq-len 32 --stages 3 --microbatch 2 \
 	    --schedule 1f1b --ckpt-dir checkpoints/het-smoke-1f1b
+
+# kernel gate: the parity suite (five Pallas kernels, forward + grad,
+# kernel vs ref vs jnp layer path), the block-size autotuner tests, and
+# a --kernels pallas smoke train through the real CLI (docs/kernels.md)
+test-kernels:
+	$(PY) -m pytest -q tests/test_kernels.py tests/test_tune.py
+	rm -rf checkpoints/kernels-smoke
+	$(PY) -m repro.launch.train --arch granite-3-8b --smoke --steps 2 \
+	    --global-batch 2 --seq-len 64 --kernels pallas \
+	    --ckpt-dir checkpoints/kernels-smoke
 
 bench:
 	$(PY) -m benchmarks.run

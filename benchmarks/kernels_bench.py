@@ -37,6 +37,21 @@ def run() -> list[str]:
         rows.append(csv_row(
             f"kernel_fused_mlp_d{d}_ff{ff}", 0.0,
             f"hbm_hidden_bytes_eliminated={hidden_bytes:.3e}"))
+    # block-size autotuner: measured interpret-mode medians for the
+    # tuned winner on small smoke cells (relative ordering only on CPU;
+    # the same tuner runs with interpret=False on real TPUs).  Winners
+    # are persisted to the results/ cache `dispatch.block_config` reads.
+    from repro.kernels import tune as ktune
+    for kernel, shape in [("fused_rmsnorm", (128, 64)),
+                          ("fused_mlp", (128, 64, 192))]:
+        entry = ktune.tune(kernel, shape, "float32", repeats=3,
+                           max_candidates=8)
+        cfgs = ";".join(f"{k}={v}" for k, v in
+                        sorted(entry["config"].items()))
+        rows.append(csv_row(
+            f"kernel_tune_{kernel}_{'x'.join(map(str, shape))}",
+            entry["us"],
+            f"{cfgs};n_candidates={entry['n_candidates']}"))
     return rows
 
 

@@ -85,6 +85,7 @@ RULES: dict[str, str] = {
     "MK-L003": "per-shard batch not divisible by the microbatch count",
     "MK-L004": "unknown pipeline schedule",
     "MK-L005": "mutually exclusive launch flags",
+    "MK-L006": "conflicting kernel modes",
 }
 
 

@@ -252,24 +252,35 @@ def _smoke_builders() -> list[tuple[str, Callable[[], None]]]:
             ("ssd_chunk", ssd)]
 
 
+def check_kernel_builder(name: str, build: Callable[[], Any],
+                         ) -> list[Diagnostic]:
+    """Record one kernel builder and geometry-check every pallas_call it
+    makes.  A builder that raises under the recorder (shape asserts,
+    bad block arithmetic) is itself an MK-K001 finding — this is what
+    lets the autotuner screen candidate block configs without lowering
+    anything."""
+    records: list[PallasCallRecord] = []
+    try:
+        with record_pallas_calls(records, name=name):
+            build()
+    except Exception as e:
+        return [error(
+            "MK-K001", f"kernel {name}",
+            f"builder failed under the recorder: "
+            f"{type(e).__name__}: {e}")]
+    diags: list[Diagnostic] = []
+    for rec in records:
+        diags.extend(check_pallas_call(rec))
+    return diags
+
+
 def check_repo_kernels() -> list[Diagnostic]:
     """Record and geometry-check every kernel under `src/repro/kernels/`."""
     diags: list[Diagnostic] = []
     for name, build in _smoke_builders():
-        records: list[PallasCallRecord] = []
-        try:
-            with record_pallas_calls(records, name=name):
-                build()
-        except Exception as e:
-            diags.append(error(
-                "MK-K001", f"kernel {name}",
-                f"builder failed under the recorder: "
-                f"{type(e).__name__}: {e}"))
-            continue
-        for rec in records:
-            diags.extend(check_pallas_call(rec))
+        diags.extend(check_kernel_builder(name, build))
     return diags
 
 
-__all__ = ["PallasCallRecord", "check_pallas_call", "check_repo_kernels",
-           "record_pallas_calls"]
+__all__ = ["PallasCallRecord", "check_kernel_builder", "check_pallas_call",
+           "check_repo_kernels", "record_pallas_calls"]

@@ -122,6 +122,12 @@ def verify_launch(arch: str, *, smoke: bool = True, global_batch: int = 8,
             "MK-L005", loc,
             "grad_int8 and pipeline stages are mutually exclusive",
             "run one A/B at a time"))
+    if "kernels_ref" in flags and "kernels_pallas" in flags:
+        report.add(error(
+            "MK-L006", loc,
+            "kernels_ref and kernels_pallas are mutually exclusive — "
+            "the layers dispatch on one kernel mode",
+            "pass a single --kernels mode (off, ref, or pallas)"))
     if stages > cfg.n_repeats:
         report.add(error(
             "MK-L001", loc,

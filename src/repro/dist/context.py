@@ -31,6 +31,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 DATA_AXES = ("pod", "data")
 MODEL_AXIS = "model"
 
+# kernel execution modes for the compute hot-spots (--kernels CLI):
+#   off    — pure-jnp layer math (the XLA baseline)
+#   ref    — the kernels' jnp oracles (validates the dispatch plumbing
+#            and f32-accumulation numerics without interpret-mode cost)
+#   pallas — the Pallas kernels (interpret mode on CPU, compiled on TPU)
+KERNEL_MODES = ("off", "ref", "pallas")
+
 
 class _State(threading.local):
     """Per-thread active context (jit tracing happens on the calling
@@ -75,6 +82,31 @@ def active_flags() -> frozenset[str]:
     """All flags of the innermost active `sharding_context` (empty
     outside any context)."""
     return _STATE.flags
+
+
+def kernel_mode() -> str:
+    """Kernel execution mode of the active context (one of KERNEL_MODES).
+
+    Layers branch on this at trace time (like `flag`): ``"pallas"`` routes
+    the hot-spot math through `repro.kernels.dispatch`, ``"ref"`` through
+    the kernels' jnp oracles, ``"off"`` (no context / no kernel flag)
+    keeps the pure-jnp layer path.  ``kernels_pallas`` wins when both
+    flags are somehow present — but `kernel_mode_flags` (the CLI mapping)
+    never emits both, and mklint rejects the combination (MK-L006).
+    """
+    if "kernels_pallas" in _STATE.flags:
+        return "pallas"
+    if "kernels_ref" in _STATE.flags:
+        return "ref"
+    return "off"
+
+
+def kernel_mode_flags(mode: str) -> tuple[str, ...]:
+    """`--kernels MODE` CLI value → the sharding-context flag tuple."""
+    if mode not in KERNEL_MODES:
+        raise ValueError(
+            f"unknown kernel mode {mode!r}; pick one of {KERNEL_MODES}")
+    return () if mode == "off" else (f"kernels_{mode}",)
 
 
 def _axis_size(mesh: Mesh, entry: Any) -> int:

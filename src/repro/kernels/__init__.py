@@ -10,13 +10,13 @@ fused_rmsnorm   — one-pass RMSNorm
 from .flash_attention import flash_attention, flash_attention_ref
 from .fused_mlp import fused_mlp, fused_mlp_ref
 from .moe_gmm import moe_gmm, moe_gmm_ref
-from .ssd_chunk import ssd_chunk, ssd_chunk_ref
+from .ssd_chunk import ssd_chunk, ssd_chunk_ref, ssd_chunked
 from .fused_rmsnorm import fused_rmsnorm, fused_rmsnorm_ref
 
 __all__ = [
     "flash_attention", "flash_attention_ref",
     "fused_mlp", "fused_mlp_ref",
     "moe_gmm", "moe_gmm_ref",
-    "ssd_chunk", "ssd_chunk_ref",
+    "ssd_chunk", "ssd_chunk_ref", "ssd_chunked",
     "fused_rmsnorm", "fused_rmsnorm_ref",
 ]

@@ -1,0 +1,246 @@
+"""Differentiable dispatch from the layer hot-spots to the Pallas kernels.
+
+`repro.models.layers` branches on `repro.dist.context.kernel_mode()` at
+trace time and calls into this module with ``mode="ref"`` or
+``mode="pallas"`` — ``"ref"`` runs the kernels' pure-jnp oracles
+(f32-accumulation numerics, no interpret-mode cost), ``"pallas"`` runs
+the real `pallas_call` kernels (interpret mode on CPU).
+
+Shapes are *local*: inside a shard_map pipeline island the operands
+already carry tp-local head/expert/feature dims (`manual_tp_size()`
+sliced them upstream), and this module never emits a collective — the
+callers keep their explicit `psum` composition, so the kernels drop into
+the PP×TP islands unchanged.
+
+Gradients: `pallas_call` has no autodiff rule, so each pallas entry point
+is a `jax.custom_vjp` whose forward is the kernel and whose backward is
+the oracle's VJP (flash attention instead reuses the memory-linear
+chunked backward from `repro.models.layers`, recomputing the forward
+statistics rather than saving O(S²) probabilities).  On-hardware forward
+speed, reference-exact gradients.
+
+Block sizes: resolved per call as tuned-cache lookup → defaults, then
+clamped to the largest divisor of the operand dim (`_divisor`) so shapes
+that do not divide the default blocks take the shrunken-block edge path
+instead of tripping the kernels' divisibility asserts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+from .flash_attention.ops import flash_attention
+from .fused_mlp.ops import fused_mlp
+from .fused_mlp.ref import fused_mlp_ref
+from .fused_rmsnorm.ops import fused_rmsnorm
+from .moe_gmm.ops import moe_gmm
+from .moe_gmm.ref import moe_gmm_ref
+from .ssd_chunk.ops import ssd_chunked  # noqa: F401  (re-export)
+
+MODES = ("ref", "pallas")
+
+# defaults when the tuned cache has no entry (kernel signature defaults)
+_DEFAULTS = {
+    "flash_attention": {"q_blk": 256, "kv_blk": 256},
+    "fused_mlp": {"bm": 128, "bff": 512},
+    "fused_rmsnorm": {"bm": 256},
+    "moe_gmm": {"bc": 128, "bf": 256, "bd": 256},
+}
+
+
+def _divisor(n: int, target: int) -> int:
+    """Largest divisor of `n` that is ≤ `target` (the repo-wide clamp
+    pattern — see `chunked_attention` / `pick_chunk`)."""
+    d = max(min(target, n), 1)
+    while n % d:
+        d -= 1
+    return d
+
+
+def block_config(kernel: str, shape: tuple[int, ...], dtype) -> dict:
+    """Block sizes for one kernel call: tuned-cache entry if present,
+    else the kernel defaults.  `shape` is the kernel-local operand shape
+    (tp-local inside islands); lookup is keyed on it plus the manual tp
+    degree, so a tuned pp×tp island shape never collides with the GSPMD
+    one."""
+    from repro.dist.context import manual_tp_size
+
+    from .tune import cached_config
+    cfg = dict(_DEFAULTS.get(kernel, {}))
+    cfg.update(cached_config(kernel, shape, jnp.dtype(dtype).name,
+                             tp=manual_tp_size()))
+    return cfg
+
+
+# ------------------------------------------------------- flash attention
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           kv_offset=kv_offset, q_blk=q_blk, kv_blk=kv_blk)
+
+
+def _flash_pallas_fwd(q, k, v, causal, window, kv_offset, q_blk, kv_blk):
+    out = _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk)
+    # residuals: just q, k, v — the backward recomputes the online-softmax
+    # statistics chunk-by-chunk (same memory-linear recompute strategy as
+    # the XLA flash path; nothing O(S²) is saved)
+    return out, (q, k, v)
+
+
+def _flash_pallas_bwd(causal, window, kv_offset, q_blk, kv_blk, res, dout):
+    q, k, v = res
+    out, lse = L._flash_fwd_scan(q, k, v, causal, window, q_blk, kv_blk,
+                                 kv_offset)
+    return L._flash_vjp_bwd(causal, window, q_blk, kv_blk, kv_offset,
+                            (q, k, v, out.astype(q.dtype), lse), dout)
+
+
+_flash_pallas.defvjp(_flash_pallas_fwd, _flash_pallas_bwd)
+
+
+def flash_mha(q, k, v, *, causal: bool, window: int = 0,
+              kv_offset: int = 0, mode: str):
+    """Kernel-path attention.  q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D)
+    with tp-local head counts; returns (B, Sq, Hq, D)."""
+    if mode == "ref":
+        return L.attention_ref(q, k, v, causal=causal, window=window,
+                               kv_offset=kv_offset)
+    B, Sq, Hq, D = q.shape
+    Skv = k.shape[1]
+    cfg = block_config("flash_attention", q.shape, q.dtype)
+    q_blk = _divisor(Sq, cfg["q_blk"])
+    kv_blk = _divisor(Skv, cfg["kv_blk"])
+    return _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk)
+
+
+# ------------------------------------------------------------- fused MLP
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _mlp_gated_pallas(x, w_up, w_down, w_gate, act, bm, bff):
+    return fused_mlp(x, w_up, w_down, w_gate, act=act, bm=bm, bff=bff)
+
+
+def _mlp_gated_fwd(x, w_up, w_down, w_gate, act, bm, bff):
+    out = _mlp_gated_pallas(x, w_up, w_down, w_gate, act, bm, bff)
+    return out, (x, w_up, w_down, w_gate)
+
+
+def _mlp_gated_bwd(act, bm, bff, res, dy):
+    _, vjp = jax.vjp(
+        lambda x, wu, wd, wg: fused_mlp_ref(x, wu, wd, wg, act=act), *res)
+    return vjp(dy)
+
+
+_mlp_gated_pallas.defvjp(_mlp_gated_fwd, _mlp_gated_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _mlp_plain_pallas(x, w_up, w_down, act, bm, bff):
+    return fused_mlp(x, w_up, w_down, None, act=act, bm=bm, bff=bff)
+
+
+def _mlp_plain_fwd(x, w_up, w_down, act, bm, bff):
+    out = _mlp_plain_pallas(x, w_up, w_down, act, bm, bff)
+    return out, (x, w_up, w_down)
+
+
+def _mlp_plain_bwd(act, bm, bff, res, dy):
+    _, vjp = jax.vjp(
+        lambda x, wu, wd: fused_mlp_ref(x, wu, wd, None, act=act), *res)
+    return vjp(dy)
+
+
+_mlp_plain_pallas.defvjp(_mlp_plain_fwd, _mlp_plain_bwd)
+
+
+def mlp(x, w_up, w_down, w_gate=None, *, act: str, mode: str):
+    """Kernel-path FFN on a (..., d) activation; ff may be tp-local (the
+    caller psums the partial output, mirroring `_row_parallel_einsum`)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if mode == "ref":
+        out = fused_mlp_ref(x2, w_up, w_down, w_gate, act=act)
+    else:
+        T, ff = x2.shape[0], w_up.shape[1]
+        cfg = block_config("fused_mlp", (T, x2.shape[1], ff), x.dtype)
+        bm, bff = _divisor(T, cfg["bm"]), _divisor(ff, cfg["bff"])
+        if w_gate is not None:
+            out = _mlp_gated_pallas(x2, w_up, w_down, w_gate, act, bm, bff)
+        else:
+            out = _mlp_plain_pallas(x2, w_up, w_down, act, bm, bff)
+    return out.reshape(*lead, out.shape[-1])
+
+
+# -------------------------------------------------------------- RMSNorm
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_pallas(x, scale, eps, bm):
+    return fused_rmsnorm(x, scale, eps=eps, bm=bm)
+
+
+def _rmsnorm_fwd(x, scale, eps, bm):
+    return _rmsnorm_pallas(x, scale, eps, bm), (x, scale)
+
+
+def _rmsnorm_bwd(eps, bm, res, dy):
+    _, vjp = jax.vjp(lambda x, s: L.rmsnorm(x, s, eps=eps), *res)
+    return vjp(dy)
+
+
+_rmsnorm_pallas.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, mode: str):
+    """Kernel-path RMSNorm over the full last dim.  Callers must NOT use
+    this for dims sharded inside a manual region (`_tp_rmsnorm` owns the
+    psum'd variance there)."""
+    if mode == "ref":
+        return L.rmsnorm(x, scale, eps=eps)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    cfg = block_config("fused_rmsnorm", x2.shape, x.dtype)
+    bm = _divisor(x2.shape[0], cfg["bm"])
+    return _rmsnorm_pallas(x2, scale, eps, bm).reshape(*lead, x.shape[-1])
+
+
+# -------------------------------------------------- MoE grouped matmul
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _gmm_pallas(buf, w, bc, bf, bd):
+    return moe_gmm(buf, w, bc=bc, bf=bf, bd=bd)
+
+
+def _gmm_fwd(buf, w, bc, bf, bd):
+    return _gmm_pallas(buf, w, bc, bf, bd), (buf, w)
+
+
+def _gmm_bwd(bc, bf, bd, res, dy):
+    buf, w = res
+    dy32 = dy.astype(jnp.float32)
+    d_buf = jnp.einsum("ecf,edf->ecd", dy32,
+                       w.astype(jnp.float32)).astype(buf.dtype)
+    d_w = jnp.einsum("ecd,ecf->edf", buf.astype(jnp.float32),
+                     dy32).astype(w.dtype)
+    return d_buf, d_w
+
+
+_gmm_pallas.defvjp(_gmm_fwd, _gmm_bwd)
+
+
+def gmm(buf, w, *, mode: str):
+    """Expert-batched matmul.  buf: (G, E, C, d) capacity buffers with
+    tp-local experts E; w: (E, d, f).  The group dim folds into capacity
+    (w is indexed by expert only), so the kernel sees (E, G·C, d)."""
+    G, E, C, d = buf.shape
+    f = w.shape[-1]
+    folded = buf.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+    if mode == "ref":
+        out = moe_gmm_ref(folded, w)
+    else:
+        cfg = block_config("moe_gmm", (E, G * C, d, f), buf.dtype)
+        bc = _divisor(G * C, cfg["bc"])
+        bf = _divisor(f, cfg["bf"])
+        bd = _divisor(d, cfg["bd"])
+        out = _gmm_pallas(folded, w, bc, bf, bd)
+    return out.reshape(E, G, C, f).transpose(1, 0, 2, 3)

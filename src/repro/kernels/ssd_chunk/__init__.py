@@ -1,4 +1,4 @@
-from .ops import ssd_chunk
+from .ops import ssd_chunk, ssd_chunked
 from .ref import ssd_chunk_ref
 
-__all__ = ["ssd_chunk", "ssd_chunk_ref"]
+__all__ = ["ssd_chunk", "ssd_chunk_ref", "ssd_chunked"]

@@ -1,11 +1,105 @@
-"""Jitted public wrapper for the SSD chunk kernel."""
+"""Jitted public wrapper for the SSD chunk kernel, plus `ssd_chunked` —
+the full chunked-SSD composition (intra-chunk term + cross-chunk XLA
+recurrence) that `repro.models.layers.mamba_block` calls.
+
+The intra-chunk quadratic term and per-chunk input states come from one
+of three implementations selected by ``mode``:
+
+- ``"off"``/``"ref"`` — `ssd_chunk_ref`, the pure-jnp oracle.  This IS
+  the jnp layer path: the former duplicate ``layers._ssd_chunked`` was
+  deleted and routes here (identical math, single source of truth).
+- ``"pallas"`` — the Pallas kernel, wrapped in a `custom_vjp` whose
+  backward is the oracle's VJP (`pallas_call` has no autodiff rule).
+
+The cross-chunk recurrence (a tiny `lax.scan` over nc states) stays in
+XLA in all modes — it is sequential and state-sized, exactly what the
+kernel fusion should NOT swallow.
+"""
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from .kernel import ssd_chunk_kernel
+from .ref import ssd_chunk_ref
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ssd_chunk(xh, dt, A, bmat, cmat, *, interpret=True):
     return ssd_chunk_kernel(xh, dt, A, bmat, cmat, interpret=interpret)
+
+
+@jax.custom_vjp
+def _ssd_chunk_pallas(xh, dt, A, bmat, cmat):
+    return ssd_chunk(xh, dt, A, bmat, cmat)
+
+
+def _ssd_chunk_fwd(xh, dt, A, bmat, cmat):
+    return _ssd_chunk_pallas(xh, dt, A, bmat, cmat), (xh, dt, A, bmat, cmat)
+
+
+def _ssd_chunk_bwd(res, dys):
+    _, vjp = jax.vjp(ssd_chunk_ref, *res)
+    return vjp(dys)
+
+
+_ssd_chunk_pallas.defvjp(_ssd_chunk_fwd, _ssd_chunk_bwd)
+
+
+def ssd_chunked(xh, dt, A, bmat, cmat, D, chunk, init_state=None,
+                mode: str = "off"):
+    """Chunked SSD (Mamba-2 state-space duality).
+
+    xh:   (B, S, H, P)    inputs per head (H is tp-local in islands)
+    dt:   (B, S, H)       softplus'd step sizes
+    A:    (H,)            negative decay rates
+    bmat: (B, S, N), cmat: (B, S, N)   shared across heads (single group)
+    Returns (y (B, S, H, P), final_state (B, H, N, P)).
+    """
+    B, S, H, P = xh.shape
+    N = bmat.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:            # largest divisor ≤ requested chunk
+        chunk -= 1
+    Q = chunk
+    nc = S // Q
+
+    # fold to the kernel layout: (batch·chunk, head, Q, ·)
+    xc = (xh.reshape(B, nc, Q, H, P).transpose(0, 1, 3, 2, 4)
+          .reshape(B * nc, H, Q, P))
+    dtc = (dt.reshape(B, nc, Q, H).transpose(0, 1, 3, 2)
+           .reshape(B * nc, H, 1, Q))
+    bc = bmat.reshape(B * nc, Q, N)
+    cc = cmat.reshape(B * nc, Q, N)
+    if mode == "pallas":
+        y_diag, s_in = _ssd_chunk_pallas(xc, dtc, A, bc, cc)
+    else:
+        y_diag, s_in = ssd_chunk_ref(xc, dtc, A, bc, cc)
+    y_diag = y_diag.reshape(B, nc, H, Q, P)
+    s_in = s_in.reshape(B, nc, H, N, P)
+
+    # cross-chunk recurrence over per-chunk input states (XLA side)
+    la = dt * A[None, None, :]                       # log decay ≤ 0
+    cum = la.reshape(B, nc, Q, H).cumsum(axis=2)     # (B, nc, Q, H)
+    seg_end = cum[:, :, -1, :]                       # (B, nc, H)
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, N, P), s_in.dtype))
+
+    def scan_fn(s_prev, inp):
+        s_c, g_end = inp                             # (B,H,N,P), (B,H)
+        s_new = s_prev * jnp.exp(jnp.clip(g_end, -60.0, 0.0)
+                                 )[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    final_state, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (s_in.transpose(1, 0, 2, 3, 4), seg_end.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)       # (B, nc, H, N, P)
+
+    # inter-chunk contribution
+    ccg = cmat.reshape(B, nc, Q, N)
+    y_off = jnp.einsum("bcqn,bchnp->bchqp", ccg, s_prevs) * jnp.exp(
+        jnp.clip(cum, -60.0, 0.0)).transpose(0, 1, 3, 2)[..., None]
+    y = (y_diag + y_off).transpose(0, 1, 3, 2, 4).reshape(B, S, H, P)
+    y = y + xh * D[None, None, :, None]
+    return y, final_state

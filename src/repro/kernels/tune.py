@@ -1,0 +1,363 @@
+"""Block-size autotuner for the Pallas kernels.
+
+MKPipe picks kernel attributes ahead of time from a static model of the
+pipeline; this is the per-kernel analogue.  For one (kernel, operand
+shape, dtype, tp degree) the tuner:
+
+1. enumerates legal block geometries — divisors of the blocked dims
+   around the power-of-two sweet spots (`enumerate_candidates`),
+2. screens each candidate through the mklint MK-K geometry checks
+   (`repro.analysis.kernels.check_kernel_builder`) so only configs
+   whose grid/index-map/coverage arithmetic is sound are ever lowered
+   ("not crashing inside pallas_call" is a *verified* property, not an
+   observed one),
+3. times the survivors with the benchmark harness's median-wall-clock
+   `time_fn` (interpret mode on CPU — a relative ordering; on real TPUs
+   the same tuner runs with ``interpret=False``),
+4. persists the winner in a versioned JSON cache keyed by
+   ``kernel|shape|dtype|tp``.
+
+`repro.kernels.dispatch.block_config` consults `cached_config` at trace
+time: cache hit → tuned blocks; miss, stale, or corrupt → kernel
+defaults (dispatch still clamps with `_divisor`, so a wrong cache can
+slow a kernel down but never break it).  Stale means the stored config
+no longer passes the MK-K screen for its own key — e.g. a hand-edited
+cache or a kernel whose geometry rules tightened since tuning.
+
+``ssd_chunk`` takes no block arguments (its grid is (batch·chunks,
+heads)); the chunk length is a model config (`cfg.ssm_chunk`), so it is
+deliberately absent here.
+
+CLI::
+
+  python -m repro.kernels.tune --kernel fused_mlp --shape 256,64,192 \
+      --dtype float32 --cache results/kernel_tune.json
+  python -m repro.kernels.tune --preset smoke     # the smoke-mesh shapes
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+from typing import Any, Callable
+
+import numpy as np
+
+CACHE_VERSION = 1
+DEFAULT_CACHE = os.path.join("results", "kernel_tune.json")
+
+# candidate block sizes are divisors of the blocked dim nearest these
+# targets (power-of-two ladder; `_divisor` handles non-pow2 dims)
+_TARGETS = (16, 32, 64, 128, 256, 512)
+
+# which operand dim each tunable block argument divides, per kernel,
+# against the shape tuple `dispatch.block_config` passes:
+#   flash_attention: q.shape = (B, S, Hq, D)       q_blk, kv_blk | S
+#   fused_mlp:       (T, d, ff)                    bm | T, bff | ff
+#   fused_rmsnorm:   (T, d)                        bm | T
+#   moe_gmm:         (E, C, d, f)                  bc | C, bd | d, bf | f
+PARAM_DIMS: dict[str, dict[str, int]] = {
+    "flash_attention": {"q_blk": 1, "kv_blk": 1},
+    "fused_mlp": {"bm": 0, "bff": 2},
+    "fused_rmsnorm": {"bm": 0},
+    "moe_gmm": {"bc": 1, "bd": 2, "bf": 3},
+}
+
+KERNELS = tuple(PARAM_DIMS)
+
+
+def _divisor(n: int, target: int) -> int:
+    d = max(min(target, n), 1)
+    while n % d:
+        d -= 1
+    return d
+
+
+def cache_key(kernel: str, shape: tuple[int, ...], dtype: str,
+              tp: int = 1) -> str:
+    return f"{kernel}|{'x'.join(str(int(s)) for s in shape)}|{dtype}|tp{tp}"
+
+
+def enumerate_candidates(kernel: str, shape: tuple[int, ...],
+                         max_candidates: int = 32) -> list[dict[str, int]]:
+    """Legal block configs for one call: per parameter, the divisors of
+    its dim nearest the power-of-two ladder; the cartesian product,
+    deterministically capped."""
+    dims = PARAM_DIMS[kernel]
+    per_param: list[list[tuple[str, int]]] = []
+    for param, axis in dims.items():
+        n = int(shape[axis])
+        sizes = sorted({_divisor(n, t) for t in _TARGETS} | {n})
+        per_param.append([(param, s) for s in sizes])
+    configs = [dict(combo) for combo in itertools.product(*per_param)]
+    # cap from the middle outward: extremes (all-tiny, all-full) are the
+    # least likely winners, and the order stays deterministic
+    if len(configs) > max_candidates:
+        mid = len(configs) // 2
+        half = max_candidates // 2
+        configs = configs[mid - half:mid - half + max_candidates]
+    return configs
+
+
+# ------------------------------------------------------------ builders
+def _builder(kernel: str, shape: tuple[int, ...],
+             config: dict[str, int]) -> Callable[[], Any]:
+    """A zero-input builder for `check_kernel_builder`: runs the kernel's
+    construction eagerly on numpy zeros (nothing lowers under the
+    recorder), with `config`'s block sizes."""
+    f32 = np.float32
+    if kernel == "flash_attention":
+        B, S, Hq, D = shape
+        q = np.zeros((B, S, Hq, D), f32)
+        k = np.zeros((B, S, max(Hq // 2, 1), D), f32)
+
+        def build():
+            from .flash_attention.kernel import flash_attention_kernel
+            flash_attention_kernel(q, k, k, causal=True, **config)
+    elif kernel == "fused_mlp":
+        T, d, ff = shape
+        x = np.zeros((T, d), f32)
+        wu = np.zeros((d, ff), f32)
+        wd = np.zeros((ff, d), f32)
+
+        def build():
+            from .fused_mlp.kernel import fused_mlp_kernel
+            fused_mlp_kernel(x, wu, wd, np.zeros((d, ff), f32), **config)
+    elif kernel == "fused_rmsnorm":
+        T, d = shape
+        x = np.zeros((T, d), f32)
+
+        def build():
+            from .fused_rmsnorm.kernel import fused_rmsnorm_kernel
+            fused_rmsnorm_kernel(x, np.zeros((d,), f32), **config)
+    elif kernel == "moe_gmm":
+        E, C, d, f = shape
+        buf = np.zeros((E, C, d), f32)
+        w = np.zeros((E, d, f), f32)
+
+        def build():
+            from .moe_gmm.kernel import moe_gmm_kernel
+            moe_gmm_kernel(buf, w, **config)
+    else:
+        raise ValueError(f"unknown tunable kernel {kernel!r}; "
+                         f"tunable: {KERNELS}")
+    return build
+
+
+def validate_candidate(kernel: str, shape: tuple[int, ...],
+                       config: dict[str, int]) -> list:
+    """MK-K screen one candidate.  Empty list ⇒ the geometry is sound
+    (blocks divide, index maps in bounds, outputs covered)."""
+    if kernel not in PARAM_DIMS:
+        return [f"unknown kernel {kernel!r}"]
+    if set(config) != set(PARAM_DIMS[kernel]):
+        return [f"config keys {sorted(config)} != expected "
+                f"{sorted(PARAM_DIMS[kernel])}"]
+    from repro.analysis.kernels import check_kernel_builder
+    return check_kernel_builder(kernel, _builder(kernel, shape, config))
+
+
+# -------------------------------------------------------------- timing
+def _time_fn_fallback(fn, *args, repeats=5, warmup=2):
+    import time
+
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _get_time_fn():
+    try:
+        from benchmarks.common import time_fn    # repo-root harness
+        return time_fn
+    except ImportError:
+        return _time_fn_fallback
+
+
+def _timed_call(kernel: str, shape: tuple[int, ...], dtype: str,
+                config: dict[str, int]):
+    """(fn, args) running the real jitted kernel with `config`."""
+    import jax.numpy as jnp
+
+    def arr(*s):
+        n = int(np.prod(s))
+        return (jnp.arange(n, dtype=jnp.float32).reshape(*s) / n
+                ).astype(dtype)
+
+    if kernel == "flash_attention":
+        from .flash_attention.ops import flash_attention
+        B, S, Hq, D = shape
+        q, k = arr(B, S, Hq, D), arr(B, S, max(Hq // 2, 1), D)
+        return (lambda a, b, c: flash_attention(
+            a, b, c, causal=True, **config)), (q, k, k)
+    if kernel == "fused_mlp":
+        from .fused_mlp.ops import fused_mlp
+        T, d, ff = shape
+        return (lambda x, wu, wd, wg: fused_mlp(
+            x, wu, wd, wg, **config)), (
+            arr(T, d), arr(d, ff), arr(ff, d), arr(d, ff))
+    if kernel == "fused_rmsnorm":
+        from .fused_rmsnorm.ops import fused_rmsnorm
+        T, d = shape
+        return (lambda x, s: fused_rmsnorm(x, s, **config)), (
+            arr(T, d), arr(d))
+    if kernel == "moe_gmm":
+        from .moe_gmm.ops import moe_gmm
+        E, C, d, f = shape
+        return (lambda b, w: moe_gmm(b, w, **config)), (
+            arr(E, C, d), arr(E, d, f))
+    raise ValueError(f"unknown tunable kernel {kernel!r}")
+
+
+# --------------------------------------------------------------- cache
+def load_cache(path: str | None = None) -> dict:
+    """Read the tuned-config cache; any corruption (unreadable JSON,
+    wrong version, wrong top-level shape) degrades to an empty cache —
+    never an exception on the training hot path."""
+    path = path or DEFAULT_CACHE
+    empty = {"version": CACHE_VERSION, "entries": {}}
+    try:
+        with open(path) as fh:
+            cache = json.load(fh)
+    except (OSError, ValueError):
+        return empty
+    if (not isinstance(cache, dict)
+            or cache.get("version") != CACHE_VERSION
+            or not isinstance(cache.get("entries"), dict)):
+        return empty
+    return cache
+
+
+def save_cache(cache: dict, path: str | None = None) -> str:
+    path = path or DEFAULT_CACHE
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(cache, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+_MEMO: dict[tuple[str, str | None], dict[str, int]] = {}
+
+
+def cached_config(kernel: str, shape: tuple[int, ...], dtype: str,
+                  tp: int = 1, path: str | None = None) -> dict[str, int]:
+    """Read-only tuned-config lookup for `dispatch.block_config`.
+
+    Returns {} on miss, on a corrupt cache, and on a *stale* entry (one
+    that no longer passes the MK-K screen for its own key) — the caller
+    falls back to kernel defaults, and the next `tune` run overwrites
+    the bad entry.  Memoized per (key, path): the screen runs once per
+    process, not per trace."""
+    key = cache_key(kernel, shape, dtype, tp)
+    memo_key = (key, path)
+    if memo_key in _MEMO:
+        return dict(_MEMO[memo_key])
+    entry = load_cache(path)["entries"].get(key)
+    config: dict[str, int] = {}
+    if isinstance(entry, dict) and isinstance(entry.get("config"), dict):
+        cand = {k: v for k, v in entry["config"].items()
+                if isinstance(v, int) and v > 0}
+        if not validate_candidate(kernel, tuple(shape), cand):
+            config = cand
+    _MEMO[memo_key] = config
+    return dict(config)
+
+
+# ---------------------------------------------------------------- tune
+def tune(kernel: str, shape: tuple[int, ...], dtype: str = "float32",
+         tp: int = 1, path: str | None = None, repeats: int = 3,
+         max_candidates: int = 16, verbose: bool = False) -> dict:
+    """Tune one (kernel, shape, dtype, tp) cell and persist the winner.
+
+    Returns the cache entry: ``{"config", "us", "n_candidates"}``."""
+    shape = tuple(int(s) for s in shape)
+    candidates = enumerate_candidates(kernel, shape,
+                                      max_candidates=max_candidates)
+    legal = [c for c in candidates if not validate_candidate(
+        kernel, shape, c)]
+    if not legal:
+        raise ValueError(
+            f"no candidate block config for {kernel} {shape} passed the "
+            "MK-K geometry screen — the shape itself is likely invalid")
+    time_fn = _get_time_fn()
+    best, best_t = None, float("inf")
+    for config in legal:
+        fn, args = _timed_call(kernel, shape, dtype, config)
+        t = time_fn(fn, *args, repeats=repeats, warmup=1)
+        if verbose:
+            print(f"  {kernel} {config}: {t * 1e6:.0f}us")
+        if t < best_t:
+            best, best_t = config, t
+    entry = {"config": best, "us": round(best_t * 1e6, 1),
+             "n_candidates": len(legal)}
+    cache = load_cache(path)
+    cache["entries"][cache_key(kernel, shape, dtype, tp)] = entry
+    save_cache(cache, path)
+    _MEMO.pop((cache_key(kernel, shape, dtype, tp), path), None)
+    return entry
+
+
+# the smoke-mesh shapes the parity/e2e tests trace (tp-local halves of
+# the granite/jamba smoke configs included as tp=2 cells)
+_SMOKE_CELLS: list[tuple[str, tuple[int, ...], int]] = [
+    ("flash_attention", (2, 64, 4, 16), 1),
+    ("flash_attention", (2, 64, 2, 16), 2),
+    ("fused_mlp", (128, 64, 192), 1),
+    ("fused_mlp", (128, 64, 96), 2),
+    ("fused_rmsnorm", (128, 64), 1),
+    ("moe_gmm", (4, 64, 64, 128), 1),
+    ("moe_gmm", (2, 64, 64, 128), 2),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="autotune Pallas kernel block sizes (MK-K screened)")
+    ap.add_argument("--kernel", choices=list(KERNELS))
+    ap.add_argument("--shape",
+                    help="comma-separated operand shape, e.g. 256,64,192")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="manual tp degree the shape is local to")
+    ap.add_argument("--cache", default=None,
+                    help=f"cache path (default {DEFAULT_CACHE})")
+    ap.add_argument("--preset", choices=["smoke"],
+                    help="tune the smoke-mesh shape matrix instead of "
+                         "one --kernel/--shape cell")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--max-candidates", type=int, default=16)
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.preset == "smoke":
+        cells = [(k, s, tp, args.dtype) for k, s, tp in _SMOKE_CELLS]
+    elif args.kernel and args.shape:
+        shape = tuple(int(s) for s in args.shape.split(","))
+        cells = [(args.kernel, shape, args.tp, args.dtype)]
+    else:
+        ap.error("pass --kernel and --shape, or --preset smoke")
+    for kernel, shape, tp, dtype in cells:
+        entry = tune(kernel, shape, dtype, tp=tp, path=args.cache,
+                     repeats=args.repeats,
+                     max_candidates=args.max_candidates,
+                     verbose=args.verbose)
+        print(f"{cache_key(kernel, shape, dtype, tp)}: "
+              f"{entry['config']}  ({entry['us']}us over "
+              f"{entry['n_candidates']} candidates)")
+    print(f"cache: {args.cache or DEFAULT_CACHE}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -413,7 +413,13 @@ def main() -> None:
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--variant", action="append", default=[],
                     help="optimization flags (repeatable): ar_bf16, "
-                         "seq_shard, decode_bf16_scores")
+                         "seq_shard, decode_bf16_scores, kernels_ref, "
+                         "kernels_pallas")
+    ap.add_argument("--kernels", choices=["off", "ref", "pallas"],
+                    default="off",
+                    help="hot-spot kernel execution for the lowered cell "
+                         "(shorthand for --variant kernels_<mode>; the "
+                         "record is tagged with the variant)")
     ap.add_argument("--out", default=str(RESULTS))
     ap.add_argument("--parallel", type=int, default=2)
     args = ap.parse_args()
@@ -421,6 +427,12 @@ def main() -> None:
     if args.model_par > 1 and args.stages <= 1:
         ap.error("--model-par applies to pipeline cells: pass --stages "
                  "N > 1 (pod/multipod cells fix their own tp)")
+
+    if args.kernels != "off":
+        from repro.dist.context import kernel_mode_flags
+        for f in kernel_mode_flags(args.kernels):
+            if f not in args.variant:
+                args.variant.append(f)
 
     out_dir = pathlib.Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)

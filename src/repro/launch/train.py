@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs import get_config, get_smoke
 from repro.data import DataConfig, make_dataset
 from repro.dist.compression import init_stacked_errors
-from repro.dist.context import sharding_context
+from repro.dist.context import (KERNEL_MODES, kernel_mode_flags,
+                                sharding_context)
 from repro.dist.sharding import (batch_spec, data_par_size, param_specs,
                                  stage_stack_specs, with_shardings)
 from repro.launch.mesh import make_mesh, make_train_mesh
@@ -214,6 +215,13 @@ def main() -> None:
     ap.add_argument("--grad-int8", action="store_true",
                     help="int8 error-feedback gradient all-reduce "
                          "(repro.dist.compression.compressed_psum)")
+    ap.add_argument("--kernels", choices=list(KERNEL_MODES), default="off",
+                    help="hot-spot kernel execution: off = pure-jnp layer "
+                         "math, ref = the kernels' jnp oracles (plumbing "
+                         "check), pallas = the Pallas kernels (interpret "
+                         "mode on CPU; see docs/kernels.md).  Composes "
+                         "with --stages/--model-par: inside pipeline "
+                         "islands the kernels run on tp-local shapes")
     ap.add_argument("--verify", action="store_true",
                     help="run the mklint static verifier (collectives, "
                          "step program, sharding specs, kernels) before "
@@ -224,6 +232,7 @@ def main() -> None:
 
     logging.basicConfig(level=logging.INFO)
     flags = ("grad_int8",) if args.grad_int8 else ()
+    flags += kernel_mode_flags(args.kernels)
     mesh_shape, axes = parse_mesh_cli(args.mesh_shape, args.axes,
                                       args.stages, args.model_par)
     if args.verify:

@@ -25,10 +25,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import LayerKind, ModelConfig
-from repro.dist.context import (MODEL_AXIS, constrain, flag, manual_tp_size,
-                                moe_groups)
+from repro.dist.context import (MODEL_AXIS, constrain, flag, kernel_mode,
+                                manual_tp_size, moe_groups)
 
 Array = Any
+
+
+def _dispatch():
+    """The kernel dispatch module, imported lazily: `repro.kernels` pulls
+    this module in at import time (the refs delegate here), so the reverse
+    edge must resolve at call time — which is trace time, where the
+    `kernel_mode()` flag decides whether it is taken at all."""
+    from repro.kernels import dispatch
+    return dispatch
 
 
 def _row_parallel_einsum(expr: str, a: Array, w: Array, out_dtype) -> Array:
@@ -81,7 +90,15 @@ def layernorm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
 
 
 def norm(x: Array, scale: Array, kind: str) -> Array:
-    return rmsnorm(x, scale) if kind == "rmsnorm" else layernorm(x, scale)
+    if kind != "rmsnorm":
+        return layernorm(x, scale)
+    mode = kernel_mode()
+    if mode != "off":
+        # d_model is never sharded inside the manual islands (activations
+        # are replicated over "model"), so the local-variance kernel is
+        # exact here; `_tp_rmsnorm` keeps the sharded-dim cases
+        return _dispatch().rmsnorm(x, scale, mode=mode)
+    return rmsnorm(x, scale)
 
 
 def activation(x: Array, act: str) -> Array:
@@ -287,6 +304,13 @@ def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
     """
     B, Sq, Hq, D = q.shape
     _, Skv, _, _ = k.shape
+    mode = kernel_mode()
+    if mode != "off":
+        # kernel path: head counts are already tp-local here (the qkv
+        # projections were model-sharded upstream), and the wo projection
+        # after this carries the tp psum — the kernel stays collective-free
+        return _dispatch().flash_mha(q, k, v, causal=causal, window=window,
+                                     kv_offset=kv_offset, mode=mode)
     # largest divisors ≤ requested chunk (handles Skv=1500 cross-attn etc.)
     q_chunk = min(q_chunk, Sq)
     while Sq % q_chunk:
@@ -421,6 +445,16 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
 
 
 def mlp_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    mode = kernel_mode()
+    if mode != "off":
+        # the fused kernel runs up/act/down on the tp-local d_ff slice;
+        # its output is the per-shard partial sum, so the row-parallel
+        # psum stays out here (mirroring `_row_parallel_einsum`)
+        part = _dispatch().mlp(x, p["w_up"], p["w_down"], p.get("w_gate"),
+                               act=cfg.act, mode=mode)
+        if manual_tp_size() > 1:
+            part = jax.lax.psum(part, MODEL_AXIS)
+        return part.astype(x.dtype)
     h = x @ p["w_up"]
     if "w_gate" in p:
         h = activation(x @ p["w_gate"], cfg.act) * h
@@ -640,10 +674,20 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig,
         # groups shard over data (each DP shard dispatches its own tokens),
         # experts shard over model (EP)
         buf = constrain(buf, "dp", "tp", None, None)
-        h = jnp.einsum("gecd,edf->gecf", buf, p["we_up"])
-        g = jnp.einsum("gecd,edf->gecf", buf, p["we_gate"])
-        yb = jnp.einsum("gecf,efd->gecd", activation(g, "silu") * h,
-                        p["we_down"])
+        mode = kernel_mode()
+        if mode != "off":
+            # expert-batched grouped matmuls: the buf/weight expert dims
+            # are tp-local here (sliced above), the group dim folds into
+            # capacity inside the dispatch
+            dk = _dispatch()
+            h = dk.gmm(buf, p["we_up"], mode=mode)
+            g = dk.gmm(buf, p["we_gate"], mode=mode)
+            yb = dk.gmm(activation(g, "silu") * h, p["we_down"], mode=mode)
+        else:
+            h = jnp.einsum("gecd,edf->gecf", buf, p["we_up"])
+            g = jnp.einsum("gecd,edf->gecf", buf, p["we_gate"])
+            yb = jnp.einsum("gecf,efd->gecd", activation(g, "silu") * h,
+                            p["we_down"])
         yb = constrain(yb, "dp", "tp", None, None).astype(xf.dtype)
         # combine: one (G,Tg,d) gather per top-k slot — never (G,TK,d)
         y = _combine_gather(yb, inv, valid, w_buf, idg, pos_t, keep_t, wg)
@@ -699,69 +743,6 @@ def _causal_conv(x: Array, w: Array, b: Array,
     return jnp.einsum("bswc,wc->bsc", windows, w) + b
 
 
-def _ssd_chunked(xh: Array, dt: Array, A: Array, bmat: Array, cmat: Array,
-                 D: Array, chunk: int, init_state: Array | None = None):
-    """Chunked SSD (Mamba-2 state-space duality).
-
-    xh:   (B, S, H, P)    inputs per head
-    dt:   (B, S, H)       softplus'd step sizes
-    A:    (H,)            negative decay rates
-    bmat: (B, S, N), cmat: (B, S, N)   shared across heads (single group)
-    Returns (y (B,S,H,P), final_state (B,H,N,P)).
-    """
-    B, S, H, P = xh.shape
-    N = bmat.shape[-1]
-    chunk = min(chunk, S)
-    assert S % chunk == 0
-    nc = S // chunk
-    xc = xh.reshape(B, nc, chunk, H, P)
-    dtc = dt.reshape(B, nc, chunk, H)
-    bc = bmat.reshape(B, nc, chunk, N)
-    cc = cmat.reshape(B, nc, chunk, N)
-
-    la = dtc * A[None, None, None, :]            # log decay per step (≤0)
-    cum = jnp.cumsum(la, axis=2)                 # (B,nc,Q,H) within-chunk
-    seg_end = cum[:, :, -1, :]                   # (B,nc,H)
-
-    # intra-chunk (the quadratic "attention-like" term)
-    li, lj = cum[:, :, :, None, :], cum[:, :, None, :, :]     # (B,nc,Q,Q,H)
-    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))
-    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
-    gate = jnp.where(tri[None, None, :, :, None], decay, 0.0)
-    sc = jnp.einsum("bcin,bcjn->bcij", cc, bc)                # (B,nc,Q,Q)
-    att = sc[..., None] * gate * dtc[:, :, None, :, :]        # (B,nc,Q,Q,H)
-    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
-
-    # per-chunk input states
-    decay_to_end = jnp.exp(jnp.clip(seg_end[:, :, None, :] - cum, -60.0, 0.0))
-    s_in = jnp.einsum("bcqh,bcqn,bcqhp->bchnp",
-                      dtc * decay_to_end, bc, xc)             # (B,nc,H,N,P)
-
-    # cross-chunk recurrence
-    s0 = (init_state if init_state is not None
-          else jnp.zeros((B, H, N, P), s_in.dtype))
-
-    def scan_fn(carry, inp):
-        s_prev = carry
-        s_c, g_end = inp                       # (B,H,N,P), (B,H)
-        s_new = s_prev * jnp.exp(jnp.clip(g_end, -60.0, 0.0)
-                                 )[:, :, None, None] + s_c
-        return s_new, s_prev
-
-    (final_state, s_prevs) = jax.lax.scan(
-        scan_fn, s0,
-        (s_in.transpose(1, 0, 2, 3, 4), seg_end.transpose(1, 0, 2)))
-    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                # (B,nc,H,N,P)
-
-    # inter-chunk contribution
-    y_off = jnp.einsum("bcqn,bchnp->bcqhp",
-                       cc, s_prevs) * jnp.exp(
-        jnp.clip(cum, -60.0, 0.0))[..., None]
-    y = (y_diag + y_off).reshape(B, S, H, P)
-    y = y + xh * D[None, None, :, None]
-    return y, final_state
-
-
 def mamba_block(p: dict, x: Array, cfg: ModelConfig,
                 init_state: Array | None = None,
                 conv_state: Array | None = None):
@@ -791,15 +772,25 @@ def mamba_block(p: dict, x: Array, cfg: ModelConfig,
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + p["dt_bias"][None, None, :])
     A = -jnp.exp(p["A_log"])
-    y, state = _ssd_chunked(xh.astype(jnp.float32), dt, A,
-                            bmat.astype(jnp.float32),
-                            cmat.astype(jnp.float32),
-                            p["D"], cfg.ssm_chunk,
-                            init_state=init_state)
+    # the chunked SSD lives with its kernel (repro.kernels.ssd_chunk):
+    # the jnp path routes through the same ssd_chunk_ref math the Pallas
+    # kernel is verified against, and kernel_mode() swaps the intra-chunk
+    # term for the pallas_call (H is tp-local here — see comment above)
+    from repro.kernels.ssd_chunk import ssd_chunked
+    y, state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           bmat.astype(jnp.float32),
+                           cmat.astype(jnp.float32),
+                           p["D"], cfg.ssm_chunk,
+                           init_state=init_state, mode=kernel_mode())
     y = y.reshape(B, S, xs.shape[-1]).astype(x.dtype)
     # the gated norm normalizes over (possibly sharded) d_inner; out_proj
     # is row-parallel — both carry explicit tp collectives in manual mode
-    y = _tp_rmsnorm(y * jax.nn.silu(z), p["norm"])
+    gated = y * jax.nn.silu(z)
+    mode = kernel_mode()
+    if mode != "off" and manual_tp_size() == 1:
+        y = _dispatch().rmsnorm(gated, p["norm"], mode=mode)
+    else:
+        y = _tp_rmsnorm(gated, p["norm"])
     return (_row_parallel_einsum("bsf,fd->bsd", y, p["out_proj"], x.dtype),
             (state, new_conv_state))
 

@@ -410,6 +410,22 @@ def test_verify_launch_unknown_schedule_fires_l004():
     assert not report.ok
 
 
+def test_verify_launch_conflicting_kernel_modes_fires_l006():
+    report = verify_launch("granite-3-8b", smoke=True, global_batch=4,
+                           seq_len=64,
+                           flags=("kernels_ref", "kernels_pallas"),
+                           check_kernels=False, trace_collectives=False)
+    assert "MK-L006" in report.rules_fired()
+    assert not report.ok
+
+
+def test_verify_launch_kernels_pallas_flag_is_clean():
+    report = verify_launch("granite-3-8b", smoke=True, global_batch=4,
+                           seq_len=64, flags=("kernels_pallas",),
+                           check_kernels=False)
+    assert report.ok, report.format()
+
+
 def test_verify_launch_mesh_errors_short_circuit():
     report = verify_launch("granite-3-8b", smoke=True,
                            mesh_shape="2,2", axes="data,modle",
@@ -422,7 +438,7 @@ def test_rule_ids_are_stable():
     # the catalog is a public contract: additions fine, renames are not
     expected = {f"MK-{fam}{i:03d}"
                 for fam, n in (("C", 5), ("P", 7), ("S", 6), ("K", 3),
-                               ("M", 6), ("L", 5))
+                               ("M", 6), ("L", 6))
                 for i in range(1, n + 1)}
     assert expected <= set(RULES)
 
@@ -443,11 +459,11 @@ def test_cli_bench_smoke_preset_is_clean_and_fast():
               "--preset", "bench-smoke"])
     out = r.stdout + r.stderr
     assert r.returncode == 0, out
-    assert "5/5 configs clean" in out
+    assert "6/6 configs clean" in out
     # satellite contract: per-config static verification stays under ~2s
     import re
     walls = [float(w) for w in re.findall(r"clean \((\d+\.\d+)s\)", out)]
-    assert len(walls) == 5, out
+    assert len(walls) == 6, out
     assert all(w < 2.0 for w in walls), walls
 
 

@@ -889,6 +889,47 @@ def test_pipeline_composes_with_tensor_parallelism():
     assert "PPTP OK" in r.stdout
 
 
+# --kernels pallas on the full PP×TP mesh (acceptance criterion): the
+# Pallas dispatch runs inside the shard_map islands on tp-local shapes,
+# and the 3-step loss trajectory must match the plain-jnp baseline for
+# BOTH schedules.  The jnp baseline runs on the same (2,2,2) mesh so the
+# only delta is the kernel path, not the pipeline arithmetic.
+KERNELS_PPTP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.launch.train import build
+
+    def run(schedule, flags):
+        cfg, mesh, state, step, data = build(
+            "granite-3-8b", smoke=True, global_batch=8, seq_len=64,
+            stages=2, microbatch=2, schedule=schedule,
+            mesh_shape=(2, 2, 2), axes=("stage", "data", "model"),
+            seed=0, flags=flags)
+        losses = []
+        for i in range(3):
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        return losses
+
+    base = run("gpipe", ())
+    for schedule in ("gpipe", "1f1b"):
+        lk = run(schedule, ("kernels_pallas",))
+        diffs = [abs(a - b) / max(abs(a), 1e-9)
+                 for a, b in zip(base, lk)]
+        assert all(d < 2e-2 for d in diffs), (schedule, base, lk, diffs)
+    print("KERNELS PPTP OK", base)
+""")
+
+
+def test_kernels_pallas_pipeline_matches_jnp_baseline():
+    """`--kernels pallas` under (stage=2, data=2, model=2): kernel-path
+    loss trajectories match the jnp baseline for gpipe and 1f1b."""
+    r = subprocess.run([sys.executable, "-c", KERNELS_PPTP_SCRIPT],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "KERNELS PPTP OK" in r.stdout
+
+
 # mamba under PP×TP: d_inner-sharded projections, per-head tensors sliced
 # by the sharded specs, tp rmsnorm + row-parallel out_proj in the island
 MAMBA_PPTP_SCRIPT = textwrap.dedent("""

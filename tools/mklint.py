@@ -47,6 +47,12 @@ _BENCH_SMOKE = [
     dict(arch="granite-3-8b", smoke=True, global_batch=8, seq_len=64,
          stages=2, microbatch=2, mesh_shape="2,2,2",
          axes="stage,data,model", schedule="gpipe"),
+    # the --kernels pallas pp x tp cell: islands trace with the Pallas
+    # dispatch engaged, so the collective/spec rules see the kernel path
+    dict(arch="granite-3-8b", smoke=True, global_batch=8, seq_len=64,
+         stages=2, microbatch=2, mesh_shape="2,2,2",
+         axes="stage,data,model", schedule="1f1b",
+         flags=("kernels_pallas",)),
 ]
 
 
