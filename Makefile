@@ -59,12 +59,16 @@ bench-smoke:
 	$(PY) -m repro.launch.dryrun --arch jamba-v0.1-52b --shape train_4k \
 	    --smoke --stages 3 --data-par 2 --microbatch 2 \
 	    --out results/dryrun-smoke
+	$(PY) -m repro.launch.dryrun --arch jamba-v0.1-52b --shape train_4k \
+	    --smoke --stages 2 --data-par 2 --microbatch 2 \
+	    --schedule interleaved --virtual-stages 2 \
+	    --out results/dryrun-smoke
 	$(PY) -m benchmarks.run --tolerate-failures
 
-# mklint: statically verify every bench-smoke launch config (both
-# schedules, the heterogeneous --stages 3 cell, the pp×tp mesh) without
-# compiling anything — exits 1 on any error-severity diagnostic.  Rule
-# catalog: docs/static-analysis.md
+# mklint: statically verify every bench-smoke launch config (every
+# schedule incl. interleaved --virtual-stages, the heterogeneous
+# --stages 3 cell, the pp×tp mesh) without compiling anything — exits 1
+# on any error-severity diagnostic.  Rule catalog: docs/static-analysis.md
 lint-programs:
 	$(PY) tools/mklint.py --preset bench-smoke
 

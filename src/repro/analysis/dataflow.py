@@ -1,27 +1,35 @@
 """Step-program dataflow verification (rule family ``MK-P``).
 
 `repro.dist.pipeline.make_step_program` builds the statically unrolled
-per-tick (op, microbatch) schedule both pipeline executors scan over.
-Its invariants used to live in `_check_program` as bare asserts — tuples
-like ``AssertionError((3, 1))`` that vanish under ``python -O``.  This
-module is the reporting form: `check_step_program` validates *any*
-program (hand-built interleaved-1F1B experiments included) and returns
-diagnostics that name the schedule, tick, stage and microbatch, so new
-schedules land on a checker instead of growing new asserts.
+per-tick (op, microbatch[, chunk]) schedule the pipeline executors scan
+over.  Its invariants used to live in `_check_program` as bare asserts —
+tuples like ``AssertionError((3, 1))`` that vanish under ``python -O``.
+This module is the reporting form: `check_step_program` validates *any*
+program — flat (op, m) entries and interleaved (op, m, c) chunk entries
+alike — and returns diagnostics that name the schedule, tick, stage,
+chunk and microbatch, so new schedules land on a checker instead of
+growing new asserts.
 
-Invariants (see `make_step_program`'s docstring for the derivation):
+Invariants (see `make_step_program`'s docstring for the derivation;
+virtual stage q = c·S + s runs on device s = q mod S, and a flat
+program is the v=1 case with q = s):
 
 - every tick row covers every stage (MK-P001), entries are well-formed
-  (MK-P006), and each (stage, microbatch) forward/backward is scheduled
-  exactly once (MK-P002 / MK-P003);
-- F(s, m) runs >= 1 tick after F(s-1, m): activations travel the ring
-  ppermute with one tick of latency (MK-P004);
-- B(s, m) runs exactly 1 tick after B(s+1, m) — cotangents are consumed
-  the tick they arrive, the executors keep no cotangent buffer — and the
-  last stage's B(s, m) runs >= 1 tick after its F(s, m) (MK-P005);
+  (MK-P006) with chunk indices consistent with ``virtual_stages``
+  (MK-P008), and each (virtual stage, microbatch) forward/backward is
+  scheduled exactly once (MK-P002 / MK-P003);
+- F(q, m) runs >= 1 tick after F(q-1, m): activations travel the ring
+  ppermute with one tick of latency — within a chunk (MK-P004) and
+  across the S-1 → 0 chunk-wrap boundary, which rides the *same*
+  uniform ring (MK-P009);
+- B(q, m) runs exactly 1 tick after B(q+1, m) — cotangents are consumed
+  the tick they arrive, the executors keep no cotangent buffer — and
+  the last virtual stage's B(q, m) runs >= 1 tick after its F(q, m)
+  (MK-P005);
 - the measured stash occupancy (`program_peak_inflight`) stays within
   the schedule's analytic bound `pipeline_peak_inflight` (MK-P007), so
-  the executors' ``m % K`` stash slots cannot collide.
+  the flat executors' ``m % K`` stash slots — and the interleaved
+  executor's free-list slots — cannot collide.
 """
 from __future__ import annotations
 
@@ -38,29 +46,45 @@ _OP_NAMES = {PIPE_IDLE: "idle", PIPE_FWD: "F", PIPE_BWD: "B"}
 
 
 def _loc(schedule: str | None, t: int | None = None,
-         s: int | None = None, m: int | None = None) -> str:
+         s: int | None = None, m: int | None = None,
+         c: int | None = None) -> str:
     parts = [f"schedule={schedule or '?'}"]
     if t is not None:
         parts.append(f"tick={t}")
     if s is not None:
         parts.append(f"stage={s}")
+    if c is not None:
+        parts.append(f"chunk={c}")
     if m is not None:
         parts.append(f"microbatch={m}")
     return " ".join(parts)
 
 
-def check_step_program(prog: Sequence[Sequence[tuple[int, int]]],
+def check_step_program(prog: Sequence[Sequence[tuple]],
                        n_micro: int, n_stages: int,
-                       schedule: str | None = None) -> list[Diagnostic]:
+                       schedule: str | None = None,
+                       virtual_stages: int = 1) -> list[Diagnostic]:
     """Verify a step program's dataflow; returns diagnostics (possibly
     empty).  `schedule` is only used for messages and for picking the
     analytic peak-inflight bound (no bound is checked when it is None or
-    unknown)."""
+    unknown).  `virtual_stages` declares how many chunks each device
+    holds: v > 1 expects (op, m, c) entries with c in [0, v) and checks
+    the invariants on virtual stages q = c·S + s."""
     M, S = int(n_micro), int(n_stages)
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
+    V = v * S
     diags: list[Diagnostic] = []
     f_tick: dict[tuple[int, int], int] = {}
     b_tick: dict[tuple[int, int], int] = {}
     structural_ok = True
+    arities: set[int] = set()
+
+    def vname(q: int) -> str:
+        if v == 1:
+            return f"stage={q}"
+        return f"stage={q % S}, chunk={q // S}"
 
     for t, row in enumerate(prog):
         if len(row) != S:
@@ -74,11 +98,17 @@ def check_step_program(prog: Sequence[Sequence[tuple[int, int]]],
             continue
         for s, entry in enumerate(row):
             try:
-                op, m = entry
+                if len(entry) == 2:
+                    (op, m), c = entry, 0
+                elif len(entry) == 3:
+                    op, m, c = entry
+                else:
+                    raise ValueError(entry)
             except (TypeError, ValueError):
                 diags.append(error(
                     "MK-P006", _loc(schedule, t=t, s=s),
-                    f"entry {entry!r} is not an (op, microbatch) pair"))
+                    f"entry {entry!r} is not an (op, microbatch[, chunk]) "
+                    "tuple"))
                 structural_ok = False
                 continue
             if op not in _OPS:
@@ -88,32 +118,59 @@ def check_step_program(prog: Sequence[Sequence[tuple[int, int]]],
                     "use PIPE_IDLE / PIPE_FWD / PIPE_BWD"))
                 structural_ok = False
                 continue
-            if op != PIPE_IDLE and not 0 <= m < M:
+            if op == PIPE_IDLE:
+                continue
+            arities.add(len(entry))
+            if v > 1 and len(entry) == 2:
+                diags.append(error(
+                    "MK-P008", _loc(schedule, t=t, s=s, m=m),
+                    f"chunkless entry {entry!r} in a program declared "
+                    f"with virtual_stages={v}",
+                    "interleaved entries are (op, microbatch, chunk)"))
+                structural_ok = False
+                continue
+            if not 0 <= c < v:
+                diags.append(error(
+                    "MK-P008", _loc(schedule, t=t, s=s, m=m),
+                    f"chunk index {c} outside [0, {v}) — each device "
+                    f"holds virtual_stages={v} chunks"))
+                structural_ok = False
+                continue
+            if not 0 <= m < M:
                 diags.append(error(
                     "MK-P006", _loc(schedule, t=t, s=s),
                     f"microbatch index {m} outside [0, {M})"))
                 structural_ok = False
                 continue
+            q = c * S + s
             book = f_tick if op == PIPE_FWD else b_tick
-            if op != PIPE_IDLE:
-                if (s, m) in book:
-                    diags.append(error(
-                        "MK-P002", _loc(schedule, t=t, s=s, m=m),
-                        f"{_OP_NAMES[op]}(stage={s}, microbatch={m}) "
-                        f"already ran at tick {book[(s, m)]} — a stage "
-                        "slot can hold one micro-step per (op, "
-                        "microbatch)"))
-                    structural_ok = False
-                else:
-                    book[(s, m)] = t
+            if (q, m) in book:
+                diags.append(error(
+                    "MK-P002", _loc(schedule, t=t, s=s, m=m,
+                                    c=c if v > 1 else None),
+                    f"{_OP_NAMES[op]}({vname(q)}, microbatch={m}) "
+                    f"already ran at tick {book[(q, m)]} — a stage "
+                    "slot can hold one micro-step per (op, "
+                    "microbatch)"))
+                structural_ok = False
+            else:
+                book[(q, m)] = t
 
-    missing = [(which, s, m)
-               for which, book in (("F", f_tick), ("B", b_tick))
-               for s in range(S) for m in range(M) if (s, m) not in book]
-    for which, s, m in missing:
+    if len(arities) > 1:
         diags.append(error(
-            "MK-P003", _loc(schedule, s=s, m=m),
-            f"{which}(stage={s}, microbatch={m}) never scheduled — the "
+            "MK-P008", _loc(schedule),
+            "program mixes flat (op, m) and chunked (op, m, c) entries",
+            "pick one entry arity for the whole program"))
+        structural_ok = False
+
+    missing = [(which, q, m)
+               for which, book in (("F", f_tick), ("B", b_tick))
+               for q in range(V) for m in range(M) if (q, m) not in book]
+    for which, q, m in missing:
+        diags.append(error(
+            "MK-P003", _loc(schedule, s=q % S, m=m,
+                            c=q // S if v > 1 else None),
+            f"{which}({vname(q)}, microbatch={m}) never scheduled — the "
             "program must run every forward and backward exactly once"))
     if missing:
         structural_ok = False
@@ -121,47 +178,55 @@ def check_step_program(prog: Sequence[Sequence[tuple[int, int]]],
     if not structural_ok:
         return diags
 
-    for s in range(S):
+    for q in range(V):
         for m in range(M):
-            if s > 0 and f_tick[(s, m)] < f_tick[(s - 1, m)] + 1:
+            if q > 0 and f_tick[(q, m)] < f_tick[(q - 1, m)] + 1:
+                wrap = q % S == 0      # chunk boundary rides the S-1 → 0
+                #                        leg of the same uniform ring
                 diags.append(error(
-                    "MK-P004", _loc(schedule, t=f_tick[(s, m)], s=s, m=m),
-                    f"F(stage={s}, microbatch={m}) at tick "
-                    f"{f_tick[(s, m)]} but stage {s - 1} only forwards "
-                    f"it at tick {f_tick[(s - 1, m)]} — the ring "
-                    "ppermute delivers activations one tick later",
+                    "MK-P009" if wrap else "MK-P004",
+                    _loc(schedule, t=f_tick[(q, m)], s=q % S, m=m,
+                         c=q // S if v > 1 else None),
+                    f"F({vname(q)}, microbatch={m}) at tick "
+                    f"{f_tick[(q, m)]} but its producer "
+                    f"({vname(q - 1)}) only forwards it at tick "
+                    f"{f_tick[(q - 1, m)]} — the ring "
+                    "ppermute delivers activations one tick later"
+                    + (" (chunk wraps included)" if wrap else ""),
                     "delay the forward to tick "
-                    f">= {f_tick[(s - 1, m)] + 1}"))
-            if s < S - 1 and b_tick[(s, m)] != b_tick[(s + 1, m)] + 1:
+                    f">= {f_tick[(q - 1, m)] + 1}"))
+            if q < V - 1 and b_tick[(q, m)] != b_tick[(q + 1, m)] + 1:
                 diags.append(error(
-                    "MK-P005", _loc(schedule, t=b_tick[(s, m)], s=s, m=m),
-                    f"B(stage={s}, microbatch={m}) at tick "
-                    f"{b_tick[(s, m)]} but stage {s + 1} retires it at "
-                    f"tick {b_tick[(s + 1, m)]} — cotangents are "
+                    "MK-P005", _loc(schedule, t=b_tick[(q, m)], s=q % S,
+                                    m=m, c=q // S if v > 1 else None),
+                    f"B({vname(q)}, microbatch={m}) at tick "
+                    f"{b_tick[(q, m)]} but {vname(q + 1)} retires it at "
+                    f"tick {b_tick[(q + 1, m)]} — cotangents are "
                     "consumed the tick after they are emitted (the "
                     "executors keep no cotangent buffer)",
-                    f"schedule it at tick {b_tick[(s + 1, m)] + 1} "
+                    f"schedule it at tick {b_tick[(q + 1, m)] + 1} "
                     "exactly"))
-            if s == S - 1 and b_tick[(s, m)] < f_tick[(s, m)] + 1:
+            if q == V - 1 and b_tick[(q, m)] < f_tick[(q, m)] + 1:
                 diags.append(error(
-                    "MK-P005", _loc(schedule, t=b_tick[(s, m)], s=s, m=m),
-                    f"last-stage B(microbatch={m}) at tick "
-                    f"{b_tick[(s, m)]} precedes its own forward at tick "
-                    f"{f_tick[(s, m)]}"))
+                    "MK-P005", _loc(schedule, t=b_tick[(q, m)], s=q % S,
+                                    m=m, c=q // S if v > 1 else None),
+                    f"last-virtual-stage B(microbatch={m}) at tick "
+                    f"{b_tick[(q, m)]} precedes its own forward at tick "
+                    f"{f_tick[(q, m)]}"))
 
     if any(d.is_error for d in diags):
         return diags
 
     measured = program_peak_inflight(prog, S)
-    if schedule in SCHEDULES:
-        bound = pipeline_peak_inflight(M, S, schedule)
+    if schedule in SCHEDULES and (v == 1 or schedule == "interleaved"):
+        bound = pipeline_peak_inflight(M, S, schedule, virtual_stages=v)
         if measured > bound:
             diags.append(error(
                 "MK-P007", _loc(schedule),
                 f"measured peak stash occupancy {measured} exceeds the "
                 f"{schedule} analytic bound "
                 f"pipeline_peak_inflight={bound} — the executors' "
-                "m % K stash slots would collide",
+                "stash slots would collide",
                 "reorder backwards to retire stashed microbatches "
                 "sooner, or size the stash to the measured peak"))
     else:

@@ -58,6 +58,9 @@ RULES: dict[str, str] = {
     "MK-P006": "malformed step-program entry (op code / microbatch)",
     "MK-P007": "measured stash occupancy exceeds the schedule's "
                "analytic peak-inflight bound",
+    "MK-P008": "malformed chunk entry in a virtual-stage program",
+    "MK-P009": "chunk-wrap dependency violates the ring transfer "
+               "latency",
     # sharding specs
     "MK-S001": "PartitionSpec names an axis the mesh does not have",
     "MK-S002": "sharded dim not divisible by its axes (drops to "
@@ -86,6 +89,7 @@ RULES: dict[str, str] = {
     "MK-L004": "unknown pipeline schedule",
     "MK-L005": "mutually exclusive launch flags",
     "MK-L006": "conflicting kernel modes",
+    "MK-L007": "virtual-stage count inconsistent with the schedule",
 }
 
 

@@ -46,7 +46,8 @@ def verify_launch(arch: str, *, smoke: bool = True, global_batch: int = 8,
                   seq_len: int = 128, stages: int = 1, microbatch: int = 0,
                   model_par: int = 1, data_par: int | None = None,
                   mesh_shape=None, axes=None,
-                  schedule: str = "gpipe", flags: Sequence[str] = (),
+                  schedule: str = "gpipe", virtual_stages: int = 1,
+                  flags: Sequence[str] = (),
                   check_kernels: bool = True,
                   trace_collectives: bool = True) -> Report:
     """Statically verify a launch configuration; never compiles.
@@ -117,6 +118,25 @@ def verify_launch(arch: str, *, smoke: bool = True, global_batch: int = 8,
             "MK-L004", loc,
             f"unknown schedule {schedule!r}; the executors implement "
             f"{SCHEDULES}"))
+    v = int(virtual_stages)
+    if v < 1:
+        report.add(error(
+            "MK-L007", loc,
+            f"virtual_stages must be >= 1, got {virtual_stages}"))
+        v = 1
+    elif v > 1 and schedule != "interleaved":
+        report.add(error(
+            "MK-L007", loc,
+            f"--virtual-stages {v} requires --schedule interleaved "
+            f"(got {schedule!r}) — only the interleaved executor holds "
+            "multiple chunks per device",
+            "drop --virtual-stages or switch the schedule"))
+    elif v > 1 and v * stages > cfg.n_repeats:
+        report.add(error(
+            "MK-L001", loc,
+            f"{cfg.name}: n_repeats={cfg.n_repeats} < "
+            f"virtual_stages*n_stages={v * stages} — every virtual "
+            "stage needs at least one repeat to hold"))
     if stages > 1 and "grad_int8" in flags:
         report.add(error(
             "MK-L005", loc,
@@ -155,12 +175,15 @@ def verify_launch(arch: str, *, smoke: bool = True, global_batch: int = 8,
         plan = plan_pipeline(
             cfg, stages, n_micro, global_batch=global_batch,
             seq_len=seq_len, dp=dp, tp=tp, schedule=schedule,
+            virtual_stages=v,
             block_costs=[_analytic_block_cost(cfg, p, mb * seq_len)
                          for p in range(len(cfg.pattern))])
 
-        prog = make_step_program(n_micro, stages, schedule)
+        prog = make_step_program(n_micro, stages, schedule,
+                                 virtual_stages=v)
         report.extend(check_step_program(prog, n_micro, stages,
-                                         schedule=schedule))
+                                         schedule=schedule,
+                                         virtual_stages=v))
 
         params_abs = jax.eval_shape(
             lambda: init_params(cfg, jax.random.key(0)))
@@ -168,15 +191,25 @@ def verify_launch(arch: str, *, smoke: bool = True, global_batch: int = 8,
         manual = tuple(a for a in ("stage", "model")
                        if mesh_axes.get(a, 1) > 1)
         for pos in range(len(cfg.pattern)):
-            sizes_pos = tuple(plan.sizes[pos])
-            st_abs = jax.eval_shape(
-                lambda t, sz=sizes_pos: stage_stack(t, stages, sz),
-                params_abs["layers"][pos])
-            st_specs = stage_stack_specs(param_specs(st_abs))
-            report.extend(check_spec_tree(
-                st_abs, st_specs, mesh_axes,
-                loc_prefix=f"island in_specs (pattern pos {pos})",
-                manual_axes=manual))
+            row = tuple(plan.sizes[pos])
+            # an interleaved plan's sizes rows are per *group*; each
+            # chunk's S-entry slice is one island's stage stack, sliced
+            # from the chunk's contiguous repeats (models.pipeline)
+            for c in range(v):
+                chunk_sizes = row[c * stages:(c + 1) * stages]
+                off = sum(row[:c * stages])
+                cnt = sum(chunk_sizes)
+                st_abs = jax.eval_shape(
+                    lambda t, _o=off, _n=cnt, sz=chunk_sizes: stage_stack(
+                        jax.tree.map(lambda p: p[_o:_o + _n], t),
+                        stages, sz),
+                    params_abs["layers"][pos])
+                st_specs = stage_stack_specs(param_specs(st_abs))
+                report.extend(check_spec_tree(
+                    st_abs, st_specs, mesh_axes,
+                    loc_prefix=(f"island in_specs (pattern pos {pos}"
+                                + (f", chunk {c}" if v > 1 else "") + ")"),
+                    manual_axes=manual))
         if report.errors:
             return done()
 
@@ -187,7 +220,8 @@ def verify_launch(arch: str, *, smoke: bool = True, global_batch: int = 8,
                 return loss_fn_pipelined(
                     params, cfg, batch, stages, n_micro, remat=False,
                     axis=plan.axis, schedule=plan.schedule,
-                    sizes=plan.sizes)
+                    sizes=plan.sizes,
+                    virtual_stages=plan.virtual_stages)
 
             with mesh, sharding_context(mesh, flags=tuple(flags)):
                 closed = jax.make_jaxpr(lf)(params_abs, batch_abs)

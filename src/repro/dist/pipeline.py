@@ -28,17 +28,22 @@ ppermute bytes are independent of the tp degree.
 
 Scheduling (see docs/pipeline-schedules.md for diagrams and formulas):
 
-- `pipeline_apply_microbatched(schedule="gpipe"|"1f1b")` — the
-  microbatched forward executor; GPipe differentiates through the scan,
-  1F1B attaches a custom VJP whose backward is an explicit step program
-  with a stash/pop activation buffer.
+- `pipeline_apply_microbatched(schedule="gpipe"|"1f1b"|"interleaved")`
+  — the microbatched forward executor; GPipe differentiates through the
+  scan, 1F1B attaches a custom VJP whose backward is an explicit step
+  program with a stash/pop activation buffer, and interleaved composes
+  `virtual_stages` 1F1B chunk passes (device s holds chunks of virtual
+  stages q = c·S + s).
 - `make_step_program` / `program_peak_inflight` — the statically
-  unrolled per-tick (op, microbatch) schedule and its stash-occupancy
-  simulator.
+  unrolled per-tick (op, microbatch[, chunk]) schedule and its
+  stash-occupancy simulator.
 - `pipeline_train_microbatched` — the fused forward+backward executor
   (loss inside the schedule) that realizes 1F1B's min(M, S) activation
-  bound; `pipeline_bubble_fraction` and `pipeline_peak_inflight` /
-  `pipeline_peak_activation_bytes` are the matching analytic models.
+  bound — and, for ``schedule="interleaved"``, the reduced
+  (S-1)/(vM+S-1) bubble with an optional double-buffered activation
+  ppermute (``overlap=True``); `pipeline_bubble_fraction` and
+  `pipeline_peak_inflight` / `pipeline_peak_activation_bytes` are the
+  matching analytic models.
 """
 from __future__ import annotations
 
@@ -90,33 +95,55 @@ def balance_stages(times: Sequence[float], n_stages: int) -> list[int]:
     return sizes[::-1]
 
 
-SCHEDULES = ("gpipe", "1f1b")
+SCHEDULES = ("gpipe", "1f1b", "interleaved")
+
+
+def _check_virtual_stages(schedule: str, virtual_stages: int) -> int:
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
+    if v != 1 and schedule != "interleaved":
+        raise ValueError(
+            f"virtual_stages={v} requires schedule='interleaved', got "
+            f"{schedule!r}")
+    return v
 
 
 def pipeline_bubble_fraction(n_micro: int, n_stages: int,
-                             stage_times: Sequence[float] | None = None
-                             ) -> float:
+                             stage_times: Sequence[float] | None = None,
+                             virtual_stages: int = 1) -> float:
     """Analytic fill/drain bubble fraction of device-time idle.
 
     Uniform stages (``stage_times=None``): (S-1) / (M + S-1) — with M
     microbatches over S equal stages, either step program spans
     2·(M + S - 1) ticks of which 2·M per stage are useful.  The formula
-    holds for *both* schedules (GPipe and 1F1B): they differ in *peak
-    activation memory* (`pipeline_peak_inflight`), not in bubble.
+    holds for *both* flat schedules (GPipe and 1F1B): they differ in
+    *peak activation memory* (`pipeline_peak_inflight`), not in bubble.
 
-    Heterogeneous stages (``stage_times=[t_0, .., t_{S-1}]``): the
-    pipeline period is set by the bottleneck stage, so the span is
-    ``(M-1)·max_s t_s + Σ_s t_s`` (fill through every stage once, then
-    M-1 bottleneck periods) and the useful device-time is ``M·Σ_s t_s``
-    out of ``S`` devices busy for the whole span:
+    ``virtual_stages=v > 1`` models the interleaved-1F1B schedule: each
+    device holds v non-contiguous chunks of the layer stack (virtual
+    stage q = c·S + s lives on device s), so one "microbatch unit" of
+    per-device work shrinks to 1/v of a flat stage pass while the fill
+    ramp still crosses only S devices — the uniform bubble drops to
+    **(S-1) / (v·M + S-1)**.
 
-        bubble = 1 − M·Σ t_s / (S·((M−1)·max t + Σ t))
+    Heterogeneous stages (``stage_times=[t_0, .., t_{S-1}]``, or one
+    entry per *virtual* stage — v·S of them — when ``virtual_stages=v``):
+    the pipeline period is set by the bottleneck device, whose
+    per-microbatch time is ``D_s = Σ_c t_{c·S+s}`` summed over its
+    chunks.  The span is ``(vM−1)·max_s D_s/v + Σ_s D_s/v`` (fill
+    through every device once at chunk granularity, then vM−1 bottleneck
+    chunk periods) and the useful device-time is ``M·Σ_s D_s``:
 
-    which collapses to the uniform closed form when all t_s are equal.
-    Heterogeneous plans must price their bubble at least this way — the
-    uniform formula is optimistic whenever one stage is slower than the
-    rest.  Note the span models *asynchronous* stage starts (a stage
-    forwards as soon as its input arrives); `pipeline_apply_microbatched`
+        bubble = 1 − vM·Σ D_s / (S·((vM−1)·max D + Σ D))
+
+    which collapses to the uniform interleaved closed form when all
+    chunks cost the same, and to the flat heterogeneous form
+    ``1 − M·Σ t_s / (S·((M−1)·max t + Σ t))`` at v=1.  Heterogeneous
+    plans must price their bubble at least this way — the uniform
+    formula is optimistic whenever one device is slower than the rest.
+    Note the span models *asynchronous* stage starts (a stage forwards
+    as soon as its input arrives); `pipeline_apply_microbatched`
     advances stages in lockstep through a per-tick ring ppermute, so its
     realized span is the still-larger ``(M+S−1)·max_s t_s`` — this
     overload is the schedule-independent lower-bound model, the lockstep
@@ -125,55 +152,76 @@ def pipeline_bubble_fraction(n_micro: int, n_stages: int,
     """
     if n_micro < 1 or n_stages < 1:
         raise ValueError("need n_micro >= 1 and n_stages >= 1")
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
     if stage_times is None:
-        return (n_stages - 1) / (n_micro + n_stages - 1)
+        return (n_stages - 1) / (v * n_micro + n_stages - 1)
     ts = [float(t) for t in stage_times]
-    if len(ts) != n_stages:
+    if len(ts) != v * n_stages:
         raise ValueError(
-            f"got {len(ts)} stage_times for n_stages={n_stages}")
+            f"got {len(ts)} stage_times for n_stages={n_stages} × "
+            f"virtual_stages={v} (want one per virtual stage)")
     if any(t < 0.0 for t in ts) or max(ts, default=0.0) <= 0.0:
         raise ValueError(f"stage_times must be >= 0 with a positive "
                          f"bottleneck, got {ts}")
-    total = sum(ts)
-    span = (n_micro - 1) * max(ts) + total
-    return 1.0 - (n_micro * total) / (n_stages * span)
+    # per-device time across its chunks: virtual stage q = c·S + s
+    dev = [sum(ts[c * n_stages + s] for c in range(v))
+           for s in range(n_stages)]
+    total = sum(dev)
+    span = (v * n_micro - 1) * max(dev) + total
+    return 1.0 - (v * n_micro * total) / (n_stages * span)
 
 
 def pipeline_peak_inflight(n_micro: int, n_stages: int,
-                           schedule: str = "gpipe") -> int:
-    """Peak in-flight microbatches a stage must stash, by schedule.
+                           schedule: str = "gpipe",
+                           virtual_stages: int = 1) -> int:
+    """Peak in-flight micro-step activations a device must stash.
 
-    A stage holds one stashed activation per microbatch whose forward it
-    has run (or received) but whose backward it has not yet retired:
+    A device holds one stashed activation per (chunk, microbatch) whose
+    forward it has run (or received) but whose backward it has not yet
+    retired:
 
     - ``"gpipe"``: every forward completes before any backward starts, so
       the stash peaks at **M** on every stage;
     - ``"1f1b"``: stage s starts draining after min(M, S-s) warmup
       forwards and then strictly alternates forward/backward, bounding its
       stash at min(M, S-s) — **min(M, S)** in the worst case (stage 0),
-      independent of the microbatch count.
+      independent of the microbatch count;
+    - ``"interleaved"`` with v chunks per device: the steady state holds
+      up to v chunk activations of up to S microbatches plus the S-1
+      transfers in flight across the chunk boundary, and the microbatch
+      next in line to retire may keep up to v more chunks stashed while
+      its backward diagonal waits for a free slot — bounding the stash
+      at **min(v·M, v·S + S - 1 + v)**.  v=1 degenerates to the exact
+      1f1b bound min(M, S).
 
-    Returns the worst-case stage's count; multiply by the per-microbatch
-    activation bytes for a peak-memory estimate
+    Returns the worst-case device's count; multiply by the
+    per-micro-step activation bytes for a peak-memory estimate
     (`pipeline_peak_activation_bytes`).
     """
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
     if n_micro < 1 or n_stages < 1:
         raise ValueError("need n_micro >= 1 and n_stages >= 1")
+    v = _check_virtual_stages(schedule, virtual_stages)
     if schedule == "gpipe":
         return n_micro
+    if schedule == "interleaved" and v > 1:
+        return min(v * n_micro, v * n_stages + n_stages - 1 + v)
     return min(n_micro, n_stages)
 
 
 def pipeline_peak_activation_bytes(n_micro: int, n_stages: int,
                                    schedule: str,
-                                   microbatch_bytes: float) -> float:
+                                   microbatch_bytes: float,
+                                   virtual_stages: int = 1) -> float:
     """Analytic peak activation-stash bytes per stage device:
     `pipeline_peak_inflight` × the per-microbatch activation size (the
     bytes of one microbatch's stage-boundary activations, e.g.
     mb · seq · d_model · itemsize for the residual stream)."""
-    return pipeline_peak_inflight(n_micro, n_stages, schedule) \
+    return pipeline_peak_inflight(n_micro, n_stages, schedule,
+                                  virtual_stages=virtual_stages) \
         * float(microbatch_bytes)
 
 
@@ -182,37 +230,71 @@ def pipeline_peak_activation_bytes(n_micro: int, n_stages: int,
 # backward of one microbatch) while activations ppermute stage s → s+1
 # and cotangents ppermute s → s-1.  A *step program* fixes, per tick and
 # per stage, which micro-step runs — the statically unrolled schedule the
-# executors scan over.
+# executors scan over.  Flat schedules use (op, m) entries; interleaved
+# programs use (op, m, c) with c the chunk index (virtual stage
+# q = c·S + s lives on device s).
 PIPE_IDLE, PIPE_FWD, PIPE_BWD = 0, 1, 2
 
 
 def make_step_program(n_micro: int, n_stages: int,
-                      schedule: str = "1f1b") -> list[list[tuple[int, int]]]:
+                      schedule: str = "1f1b", virtual_stages: int = 1,
+                      overlap: bool = False) -> list[list[tuple]]:
     """Build the per-tick step program for a schedule.
 
     Returns a list over ticks; each tick is a list over stages of
-    ``(op, m)`` with op ∈ {PIPE_IDLE, PIPE_FWD, PIPE_BWD} and m the
-    microbatch index (0 for idle slots).  Both schedules span exactly
-    2·(M + S - 1) ticks — same bubble — and satisfy, by construction:
+    ``(op, m)`` — or ``(op, m, c)`` for interleaved programs, with c the
+    chunk index — where op ∈ {PIPE_IDLE, PIPE_FWD, PIPE_BWD} and m is
+    the microbatch index (0 for idle slots).  Every program satisfies,
+    by construction (on *virtual* stages q = c·S + s for interleaved):
 
-    - F(s, m) runs ≥ 1 tick after F(s-1, m) (activations arrive by ring
-      ppermute with one tick of latency);
-    - B(s, m) runs exactly 1 tick after B(s+1, m) (cotangents arrive the
+    - F(q, m) runs ≥ 1 tick after F(q-1, m) (activations arrive by ring
+      ppermute with one tick of latency; ≥ 2 ticks under
+      ``overlap=True``, whose executor double-buffers the activation
+      transfer);
+    - B(q, m) runs exactly 1 tick after B(q+1, m) (cotangents arrive the
       tick they are consumed, so no cotangent buffering is needed);
-    - B(S-1, m) runs ≥ 1 tick after F(S-1, m).
+    - B(V-1, m) runs ≥ 1 tick after F(V-1, m), V = v·S.
 
+    Both flat schedules span exactly 2·(M + S - 1) ticks — same bubble.
     GPipe: all forwards (stage s runs F(m) at tick s + m), then all
     backwards (B(m) at tick (M+S-1) + m + (S-1-s)).  1F1B: stage s runs
     min(M, S-s) warmup forwards back-to-back from tick s, then strictly
     alternates backward/forward — F(s, m) at tick 2m + s once steady,
     B(s, m) at tick 2S-1-s + 2m — so its stash never holds more than
     min(M, S-s) microbatches (`pipeline_peak_inflight`).
+
+    ``schedule="interleaved"`` builds the Megatron-style interleaved
+    1F1B program over V = virtual_stages·S virtual stages: a greedy
+    tick-by-tick scheduler commits each microbatch's exact backward
+    chain as soon as its last virtual-stage forward has landed and the
+    whole diagonal fits, then fills free devices with ready forwards
+    (deepest chunk first, throttled to the analytic stash bound).  The
+    span approaches the ideal 2·(vM + S - 1) chunk ticks, dropping the
+    bubble toward (S-1)/(vM+S-1); ``virtual_stages=1`` (without
+    ``overlap``) returns literally the flat 1f1b program.
     """
     M, S = int(n_micro), int(n_stages)
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
     if M < 1 or S < 1:
         raise ValueError("need n_micro >= 1 and n_stages >= 1")
+    v = _check_virtual_stages(schedule, virtual_stages)
+    if overlap and schedule != "interleaved":
+        raise ValueError(
+            f"overlap=True (double-buffered activation ppermute) requires "
+            f"schedule='interleaved', got {schedule!r}")
+    if overlap and v == 1:
+        raise ValueError(
+            "overlap=True requires virtual_stages >= 2: with one chunk "
+            "per device interleaved degenerates *exactly* to plain 1f1b, "
+            "and the stretched transfer latency would break that")
+    if schedule == "interleaved":
+        if v == 1:
+            # exact degeneration: one chunk per device IS plain 1f1b
+            return make_step_program(M, S, "1f1b")
+        prog = _make_interleaved_program(M, S, v, f_lat=2 if overlap else 1)
+        _check_program(prog, M, S, schedule=schedule, virtual_stages=v)
+        return prog
     T = 2 * (M + S - 1)
     prog = [[(PIPE_IDLE, 0)] * S for _ in range(T)]
 
@@ -243,8 +325,98 @@ def make_step_program(n_micro: int, n_stages: int,
     return prog
 
 
+def _make_interleaved_program(M: int, S: int, v: int,
+                              f_lat: int = 1) -> list[list[tuple]]:
+    """Greedy constructive interleaved-1F1B scheduler (see
+    `make_step_program`).
+
+    Virtual stage q = c·S + s runs on device s = q mod S, so *every*
+    boundary transfer — chunk wraps S-1 → 0 included — rides the same
+    uniform ring ppermute the flat executors use.  Per tick, in order:
+
+    1. **Commit the next backward diagonal** (FIFO by microbatch): once
+       F(V-1, m) has landed ≥ 1 tick ago and the whole exact chain
+       B(q, m) at t + (V-1-q) fits in unoccupied cells, reserve it
+       outright — cotangents are consumed the tick they arrive, so the
+       chain must land intact or not at all.
+    2. **Fill free devices with ready forwards**, deepest chunk first
+       (driving microbatches toward their loss, which is what retires
+       stash), where F(q, m) is ready at ≥ F(q-1, m) + f_lat.  A forward
+       is throttled when the stash it grows (its own device for the
+       q = 0 injection, the consumer device for the arrival it emits)
+       already holds the steady-state budget min(vM, vS+S-1) — except
+       for the next-to-retire microbatch, which is exempt so the
+       backward diagonal it feeds can always make progress (deadlock
+       freedom).  The exemption can park up to v extra chunks of that
+       one microbatch, which is exactly the slack the analytic bound
+       `pipeline_peak_inflight` = min(vM, vS+S-1+v) allows.
+
+    `f_lat` is the activation arrival latency the forwards must respect:
+    1 for the plain ring, 2 for the double-buffered ``overlap`` ring
+    (the transfer is issued one tick after the producing forward).
+    """
+    V = v * S
+    # steady-state throttle; the next-to-retire exemption below may add
+    # up to v more, which pipeline_peak_inflight's +v slack covers
+    bound = min(v * M, v * S + S - 1)
+    occ: dict[tuple[int, int], tuple[int, int, int]] = {}  # (t, s) → entry
+    f_tick: dict[tuple[int, int], int] = {}
+    nf = [0] * V              # per virtual stage: next microbatch to forward
+    stash = [0] * S           # conservative live-slot count per device
+    next_b = 0                # next backward diagonal to commit (FIFO)
+    t, t_max = 0, 4 * (f_lat + 1) * (V + v * M) + 64
+    while next_b < M:
+        if t > t_max:         # pragma: no cover - construction invariant
+            raise RuntimeError(
+                f"interleaved scheduler did not converge "
+                f"(M={M}, S={S}, v={v}, f_lat={f_lat})")
+        # (1) the next backward diagonal, committed whole
+        m = next_b
+        ft = f_tick.get((V - 1, m))
+        if (ft is not None and t >= ft + 1
+                and not any((t + V - 1 - q, q % S) in occ
+                            for q in range(V))):
+            for q in range(V):
+                occ[(t + V - 1 - q, q % S)] = (PIPE_BWD, m, q // S)
+            next_b += 1
+        # (2) forward fill, deepest chunk first
+        for s in range(S):
+            if (t, s) in occ:
+                continue
+            for c in range(v - 1, -1, -1):
+                q = c * S + s
+                m = nf[q]
+                if m >= M:
+                    continue
+                if q > 0 and (f_tick.get((q - 1, m)) is None
+                              or t < f_tick[(q - 1, m)] + f_lat):
+                    continue
+                grows = ([0] if q == 0 else []) \
+                    + ([(q + 1) % S] if q < V - 1 else [])
+                if m != next_b and any(stash[d] >= bound for d in grows):
+                    continue
+                occ[(t, s)] = (PIPE_FWD, m, c)
+                f_tick[(q, m)] = t
+                nf[q] += 1
+                for d in grows:
+                    stash[d] += 1
+                break
+        # backwards at this tick retire their device's stashed slot
+        for s in range(S):
+            ent = occ.get((t, s))
+            if ent is not None and ent[0] == PIPE_BWD:
+                stash[s] -= 1
+        t += 1
+    T = max(tt for tt, _ in occ) + 1
+    prog = [[(PIPE_IDLE, 0, 0)] * S for _ in range(T)]
+    for (tt, s), ent in occ.items():
+        prog[tt][s] = ent
+    return prog
+
+
 def _check_program(prog, n_micro: int, n_stages: int,
-                   schedule: str | None = None) -> None:
+                   schedule: str | None = None,
+                   virtual_stages: int = 1) -> None:
     """Validate a step program's dataflow (see `make_step_program`).
 
     Thin raising wrapper over the reporting verifier
@@ -258,7 +430,8 @@ def _check_program(prog, n_micro: int, n_stages: int,
     from repro.analysis.diagnostics import DiagnosticError
 
     diags = [d for d in check_step_program(prog, n_micro, n_stages,
-                                           schedule=schedule)
+                                           schedule=schedule,
+                                           virtual_stages=virtual_stages)
              if d.is_error]
     if diags:
         raise DiagnosticError(
@@ -266,46 +439,68 @@ def _check_program(prog, n_micro: int, n_stages: int,
                           f"(n_micro={n_micro}, n_stages={n_stages}):")
 
 
-def program_peak_inflight(prog, n_stages: int) -> int:
-    """Peak live stash *slot span* over all stages of a step program.
-
-    An entry (s, m) becomes live when the stage-s stash slot for
-    microbatch m is written — at F(s, m) on stage 0 (injection), at
-    F(s-1, m) + 1 otherwise (ppermute arrival) — and is retired by
-    B(s, m).  The executors key slots by ``m % K``; collisions are
-    impossible iff K ≥ the peak span max(live) - min(live) + 1, which is
-    what this returns (for the programs built here it equals
-    `pipeline_peak_inflight`).
-    """
+def _program_books(prog, n_stages: int):
+    """(f_tick, b_tick) keyed by (virtual stage q, microbatch): q = s for
+    flat (op, m) entries, q = c·n_stages + s for chunked (op, m, c)."""
     f_tick: dict = {}
     b_tick: dict = {}
     for t, row in enumerate(prog):
-        for s, (op, m) in enumerate(row):
+        for s, entry in enumerate(row):
+            op, m = entry[0], entry[1]
+            q = (entry[2] * n_stages + s) if len(entry) > 2 else s
             if op == PIPE_FWD:
-                f_tick[(s, m)] = t
+                f_tick[(q, m)] = t
             elif op == PIPE_BWD:
-                b_tick[(s, m)] = t
+                b_tick[(q, m)] = t
+    return f_tick, b_tick
+
+
+def program_peak_inflight(prog, n_stages: int) -> int:
+    """Peak live stash occupancy over all devices of a step program.
+
+    An entry (q, m) becomes live on device q mod S when its stash slot
+    is written — at F(q, m) for the injecting virtual stage 0, at
+    F(q-1, m) + 1 otherwise (ppermute arrival) — and is retired by
+    B(q, m).
+
+    Flat (op, m) programs report the peak slot *span*
+    max(live) - min(live) + 1: their executors key slots by ``m % K``,
+    and collisions are impossible iff K ≥ that span (for the programs
+    built here it equals `pipeline_peak_inflight`).  Chunked (op, m, c)
+    interleaved programs report the peak live *count*: their executor
+    allocates slots from a per-device free list replayed off the
+    program, so the count is exactly the slots it needs.
+    """
+    chunked = any(len(entry) > 2
+                  for row in prog for entry in row
+                  if entry[0] != PIPE_IDLE)
+    f_tick, b_tick = _program_books(prog, n_stages)
     peak = 0
     for s in range(n_stages):
-        events = []       # (tick, +1 push m / -1 pop m)
-        for (es, m), t in f_tick.items():
-            if es == s - 1:
-                events.append((t + 1, 1, m))
-            elif s == 0 and es == 0:
-                events.append((t, 1, m))
-        for (es, m), t in b_tick.items():
-            if es == s:
-                events.append((t, -1, m))
+        events = []       # (tick, +1 push (q, m) / -1 pop (q, m))
+        for (q, m), t in f_tick.items():
+            if (q + 1) % n_stages == s and ((q + 1, m) in f_tick
+                                            or (q + 1, m) in b_tick):
+                events.append((t + 1, 1, (q + 1, m)))
+            if q == 0 and s == 0:
+                events.append((t, 1, (q, m)))
+        for (q, m), t in b_tick.items():
+            if q % n_stages == s:
+                events.append((t, -1, (q, m)))
         live: set = set()
         # pushes (arrivals) land before the tick's pop (the executors
         # apply ppermute arrivals first, then run the event)
-        for t, kind, m in sorted(events, key=lambda e: (e[0], -e[1])):
+        for t, kind, qm in sorted(events, key=lambda e: (e[0], -e[1])):
             if kind == 1:
-                live.add(m)
+                live.add(qm)
                 if live:
-                    peak = max(peak, max(live) - min(live) + 1)
+                    if chunked:
+                        peak = max(peak, len(live))
+                    else:
+                        ms = [m for _, m in live]
+                        peak = max(peak, max(ms) - min(ms) + 1)
             else:
-                live.discard(m)
+                live.discard(qm)
     return peak
 
 
@@ -334,7 +529,8 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
                                 stage_params: Tree, x: Tree, n_micro: int,
                                 axis: str = "stage",
                                 static: Tree | None = None,
-                                schedule: str = "gpipe") -> Tree:
+                                schedule: str = "gpipe",
+                                virtual_stages: int = 1) -> Tree:
     """Microbatched pipeline schedule under shard_map: the scheduling form
     whose efficiency `pipeline_bubble_fraction` models.
 
@@ -376,6 +572,16 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
     `stage_fn(local_params, x, static_mb)` receives it as a third
     argument.
 
+    ``"interleaved"`` runs the chunk composition: stage params carry a
+    second leading per-device chunk dim of `virtual_stages` (leaves
+    shaped ``(1, v, ...)`` locally — virtual stage q = c·S + s on device
+    s), and the executor applies one 1F1B pass per chunk in order, so
+    the value entering chunk c+1 is exactly the sequential composition
+    through virtual stage (c+1)·S - 1.  `virtual_stages=1` is literally
+    one 1F1B pass.  (This is the numerics/differentiation form; the
+    schedule-realizing fused form — reduced bubble, per-chunk events in
+    one step program — is `pipeline_train_microbatched`.)
+
     Per microbatch the op sequence is exactly the sequential composition of
     the stages, and the whole schedule is reverse-mode differentiable
     (ppermute/psum transposes carry gradients stage-to-stage backwards).
@@ -385,6 +591,12 @@ def pipeline_apply_microbatched(stage_fn: Callable[..., Tree],
         raise ValueError(f"need n_micro >= 1, got {n_micro}")
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
+    v = _check_virtual_stages(schedule, virtual_stages)
+    if schedule == "interleaved":
+        for c in range(v):
+            chunk = jax.tree.map(lambda p, _c=c: p[:, _c], stage_params)
+            x = _apply_1f1b(stage_fn, chunk, x, n_micro, axis, static)
+        return x
     if schedule == "1f1b":
         return _apply_1f1b(stage_fn, stage_params, x, n_micro, axis, static)
     return _apply_gpipe(stage_fn, stage_params, x, n_micro, axis, static)
@@ -637,7 +849,9 @@ def pipeline_train_microbatched(stage_fn: Callable[..., Tree],
                                 loss_fn: Callable[[Tree], Any],
                                 n_micro: int, schedule: str = "1f1b",
                                 axis: str = "stage",
-                                busy_idle: bool = False) -> tuple[Any, Tree]:
+                                busy_idle: bool = False,
+                                virtual_stages: int = 1,
+                                overlap: bool = False) -> tuple[Any, Tree]:
     """Fused forward+backward pipeline step under shard_map: scan one
     step program (`make_step_program`) end to end and return
     ``(loss, stage_param_grads)``.
@@ -675,9 +889,40 @@ def pipeline_train_microbatched(stage_fn: Callable[..., Tree],
     critical-path, work: busy idles make t_pipe proportional to the
     device-tick area so 1 - t_seq/t_pipe exposes the bubble (same trick
     as the GPipe-only benchmark; keep it False on real hardware).
+
+    ``schedule="interleaved"`` takes stage params with a second leading
+    per-device chunk dim (leaves ``(1, virtual_stages, ...)`` locally;
+    grads come back the same shape) and scans the interleaved step
+    program — v micro-step slots per device per microbatch, bubble
+    toward (S-1)/(vM+S-1).  ``overlap=True`` double-buffers the
+    stage-boundary activation ppermute: the transfer of a forward's
+    output is issued at the *top* of the next tick, before that tick's
+    compute, so it depends only on carried state and XLA can overlap it
+    with the compute (the step program spaces consumer forwards ≥ 2
+    ticks after producers to cover the extra hop; cotangents keep the
+    single-buffered exact-chain ring).  ``virtual_stages=1`` degenerates
+    to plain 1f1b on the chunk-squeezed params (``overlap`` needs v ≥ 2).
     """
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
+    v = _check_virtual_stages(schedule, virtual_stages)
+    if overlap and schedule != "interleaved":
+        raise ValueError(
+            f"overlap=True (double-buffered activation ppermute) requires "
+            f"schedule='interleaved', got {schedule!r}")
+    if overlap and v == 1:
+        raise ValueError(
+            "overlap=True requires virtual_stages >= 2 (v=1 degenerates "
+            "exactly to plain 1f1b, which keeps the single-buffered ring)")
+    if schedule == "interleaved":
+        if v == 1:
+            flat = jax.tree.map(lambda p: p[:, 0], stage_params)
+            loss, grads = pipeline_train_microbatched(
+                stage_fn, flat, x, loss_fn, n_micro, schedule="1f1b",
+                axis=axis, busy_idle=busy_idle)
+            return loss, jax.tree.map(lambda g: g[:, None], grads)
+        return _train_interleaved(stage_fn, stage_params, x, loss_fn,
+                                  n_micro, v, axis, busy_idle, overlap)
     import numpy as np
 
     idx = jax.lax.axis_index(axis)
@@ -791,5 +1036,222 @@ def pipeline_train_microbatched(stage_fn: Callable[..., Tree],
               jnp.zeros((), jnp.float32))
     (_, _, _, _, g_acc, loss), _ = jax.lax.scan(tick, carry0, xs)
     loss = jax.lax.psum(loss, axis)           # loss lives on the last stage
+    grads = jax.tree.map(lambda g, p: g[None].astype(p.dtype), g_acc, local)
+    return loss, grads
+
+
+def _train_interleaved(stage_fn: Callable[..., Tree], stage_params: Tree,
+                       x: Tree, loss_fn: Callable[[Tree], Any],
+                       n_micro: int, v: int, axis: str,
+                       busy_idle: bool, overlap: bool) -> tuple[Any, Tree]:
+    """The fused interleaved-1F1B executor (see
+    `pipeline_train_microbatched`): scan the chunked step program with
+    per-event chunk params, a free-list-allocated activation stash, and
+    (optionally) a double-buffered activation ring.
+
+    Stage params carry a per-device chunk dim — leaves ``(1, v, ...)``
+    locally, virtual stage q = c·S + s in slot ``[0, c]`` of device s —
+    and gradients come back the same shape.  Stash slots are assigned
+    *statically* by replaying the program through a per-device free
+    list: a slot is written by the ring arrival of the producing
+    forward's output (the injection itself for virtual stage 0), read
+    by this device's F and B events of that (chunk, microbatch), and
+    freed the tick after the B retires it, so K is exactly the peak
+    concurrent live count (`program_peak_inflight`).  Cotangents keep
+    the flat executors' single register — the interleaved program also
+    schedules exact backward chains, so a cotangent is consumed the
+    tick it arrives, chunk wraps included (the ring's s → s-1 shift is
+    device (q-1) mod S for every virtual stage q).
+    """
+    import numpy as np
+
+    idx = jax.lax.axis_index(axis)
+    S = int(jax.lax.psum(1, axis))            # static under shard_map
+    M = int(n_micro)
+    V = v * S
+    lat = 2 if overlap else 1
+    local = jax.tree.map(lambda p: p[0], stage_params)   # (v, ...)
+    for leaf in jax.tree.leaves(local):
+        if leaf.shape[0] != v:
+            raise ValueError(
+                f"interleaved stage params need a per-device chunk dim of "
+                f"virtual_stages={v} after the stage dim, got local leaf "
+                f"shape {leaf.shape}")
+    x_mb = jax.tree.map(lambda l: _split_mb(l, M), x)
+
+    prog = make_step_program(M, S, "interleaved", virtual_stages=v,
+                             overlap=overlap)
+    T = len(prog)
+    f_tick: dict = {}
+    b_tick: dict = {}
+    for t, row in enumerate(prog):
+        for s, (o, m, c) in enumerate(row):
+            if o == PIPE_FWD:
+                f_tick[(c * S + s, m)] = t
+            elif o == PIPE_BWD:
+                b_tick[(c * S + s, m)] = t
+
+    # static stash-slot assignment: replay the program through a
+    # per-device free list (writes land before the tick's event, frees
+    # land after it, so a slot retired by a B is reusable next tick)
+    writes: list = [[] for _ in range(T)]
+    frees: list = [[] for _ in range(T)]
+    for (q, m), t in f_tick.items():
+        wt = t if q == 0 else f_tick[(q - 1, m)] + lat
+        writes[wt].append((q % S, q, m))
+    for (q, m), t in b_tick.items():
+        frees[t].append((q % S, q, m))
+    slot_of: dict = {}
+    free_list: list = [[] for _ in range(S)]
+    high = [0] * S
+    for t in range(T):
+        for s, q, m in sorted(writes[t]):
+            if free_list[s]:
+                slot_of[(q, m)] = free_list[s].pop()
+            else:
+                slot_of[(q, m)] = high[s]
+                high[s] += 1
+        for s, q, m in sorted(frees[t]):
+            free_list[s].append(slot_of[(q, m)])
+    K = max(1, *high)
+
+    # executor-internal op encoding as in the flat path: the *last
+    # virtual stage's* backward evaluates loss_fn; every other backward
+    # consumes the arrived cotangent
+    BWD_LOSS = 3
+    op = np.zeros((T, S), np.int32)
+    mb = np.zeros((T, S), np.int32)
+    ch = np.zeros((T, S), np.int32)
+    eslot = np.zeros((T, S), np.int32)
+    inject = np.zeros((T, S), np.int32)
+    fvalid = np.zeros((T, S), np.int32)
+    fslot = np.zeros((T, S), np.int32)
+    bvalid = np.zeros((T, S), np.int32)
+    for t, row in enumerate(prog):
+        for s, (o, m, c) in enumerate(row):
+            q = c * S + s
+            if o == PIPE_BWD and q == V - 1:
+                o = BWD_LOSS
+            op[t, s], mb[t, s], ch[t, s] = o, m, c
+            if o != PIPE_IDLE:
+                eslot[t, s] = slot_of[(q, m)]
+            if o == PIPE_FWD and q == 0:
+                inject[t, s] = 1
+    # arrival routing off the books: a forward's output reaches virtual
+    # stage q+1's device `lat` ticks later (the last virtual stage's
+    # output and virtual stage 0's input cotangent ride the ring too,
+    # but nothing consumes them); cotangents always arrive next tick
+    for (q, m), t in f_tick.items():
+        if q < V - 1:
+            fvalid[t + lat, (q + 1) % S] = 1
+            fslot[t + lat, (q + 1) % S] = slot_of[(q + 1, m)]
+    for (q, m), t in b_tick.items():
+        if q > 0:
+            bvalid[t + 1, (q - 1) % S] = 1
+    xs = {"op": jnp.asarray(op), "mb": jnp.asarray(mb),
+          "ch": jnp.asarray(ch), "eslot": jnp.asarray(eslot),
+          "inject": jnp.asarray(inject), "fvalid": jnp.asarray(fvalid),
+          "fslot": jnp.asarray(fslot), "bvalid": jnp.asarray(bvalid)}
+
+    stash0 = jax.tree.map(
+        lambda l: jnp.zeros((K, *l.shape[1:]), l.dtype), x_mb)
+    zero_slot = jax.tree.map(lambda l: jnp.zeros_like(l[0]), x_mb)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), local)
+    perm_f = [(i, (i + 1) % S) for i in range(S)]
+    perm_b = [(i, (i - 1) % S) for i in range(S)]
+
+    def send_f(tree):
+        return jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm_f),
+                            tree)
+
+    def send_b(tree):
+        return jax.tree.map(lambda l: jax.lax.ppermute(l, axis, perm_b),
+                            tree)
+
+    def tick(carry, xs_t):
+        if overlap:
+            stash, cot, pay_prev, f_in, b_in, g_acc, loss = carry
+            # double buffering: issue LAST tick's activation transfer
+            # before this tick's compute — it reads only carried state,
+            # so XLA is free to run the ppermute concurrently with the
+            # switch below; consumers see their input two ticks after
+            # the producing forward, which the step program's f_lat=2
+            # spacing already covers
+            f_out = send_f(pay_prev)
+        else:
+            stash, cot, f_in, b_in, g_acc, loss = carry
+        opv = xs_t["op"][idx]
+        mv = xs_t["mb"][idx]
+        cv = xs_t["ch"][idx]
+        es = xs_t["eslot"][idx]
+        # (1) arrivals from the ring land in their free-list slots
+        stash = jax.tree.map(
+            lambda b, vl: jnp.where(xs_t["fvalid"][idx],
+                                    _put(b, vl, xs_t["fslot"][idx]), b),
+            stash, f_in)
+        cot = _tree_where(xs_t["bvalid"][idx], b_in, cot)
+        lp = jax.tree.map(lambda p: _at(p, cv), local)   # chunk params
+
+        def do_idle(opd):
+            stash, cot, g_acc, loss = opd
+            if busy_idle:
+                y = stage_fn(lp, jax.tree.map(lambda b: _at(b, 0), stash))
+                # keep the discarded compute alive past DCE
+                leaf = jax.tree.leaves(y)[0]
+                loss = loss + 1e-30 * jnp.sum(leaf).astype(jnp.float32)
+            return stash, cot, g_acc, loss, zero_slot, zero_slot
+
+        def do_fwd(opd):
+            stash, cot, g_acc, loss = opd
+            xin = _tree_where(
+                xs_t["inject"][idx],
+                jax.tree.map(lambda b: _at(b, mv), x_mb),
+                jax.tree.map(lambda b: _at(b, es), stash))
+            stash = jax.tree.map(lambda b, vl: _put(b, vl, es), stash, xin)
+            y = stage_fn(lp, xin)
+            return stash, cot, g_acc, loss, y, zero_slot
+
+        def do_bwd(opd):
+            # mid-program backward: cotangent arrived on the ring
+            stash, cot, g_acc, loss = opd
+            xin = jax.tree.map(lambda b: _at(b, es), stash)
+            _, vjp_fn = jax.vjp(stage_fn, lp, xin)
+            g_p, g_x = vjp_fn(cot)
+            g_acc = jax.tree.map(
+                lambda a, gp: a.at[cv].add(gp.astype(a.dtype)),
+                g_acc, g_p)
+            return stash, cot, g_acc, loss, zero_slot, g_x
+
+        def do_bwd_loss(opd):
+            # last virtual stage's backward: seed from loss_fn
+            stash, cot, g_acc, loss = opd
+            xin = jax.tree.map(lambda b: _at(b, es), stash)
+            y, vjp_fn = jax.vjp(stage_fn, lp, xin)
+            l, gy = jax.value_and_grad(loss_fn)(y)
+            g_p, g_x = vjp_fn(gy)
+            g_acc = jax.tree.map(
+                lambda a, gp: a.at[cv].add(gp.astype(a.dtype)),
+                g_acc, g_p)
+            loss = loss + l.astype(jnp.float32)
+            return stash, cot, g_acc, loss, zero_slot, g_x
+
+        stash, cot, g_acc, loss, pay_f, pay_b = jax.lax.switch(
+            opv, [do_idle, do_fwd, do_bwd, do_bwd_loss],
+            (stash, cot, g_acc, loss))
+        b_out = send_b(pay_b)
+        if overlap:
+            return (stash, cot, pay_f, f_out, b_out, g_acc, loss), None
+        f_out = send_f(pay_f)
+        return (stash, cot, f_out, b_out, g_acc, loss), None
+
+    loss0 = jnp.zeros((), jnp.float32)
+    if overlap:
+        carry0 = (stash0, zero_slot, zero_slot, zero_slot, zero_slot,
+                  g0, loss0)
+        (_, _, _, _, _, g_acc, loss), _ = jax.lax.scan(tick, carry0, xs)
+    else:
+        carry0 = (stash0, zero_slot, zero_slot, zero_slot, g0, loss0)
+        (_, _, _, _, g_acc, loss), _ = jax.lax.scan(tick, carry0, xs)
+    loss = jax.lax.psum(loss, axis)       # loss lives on the last device
     grads = jax.tree.map(lambda g, p: g[None].astype(p.dtype), g_acc, local)
     return loss, grads

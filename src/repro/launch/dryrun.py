@@ -80,7 +80,8 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
                zero1: bool = False, grad_accum: int = 1,
                remat: bool = True, variants: tuple[str, ...] = (),
                stages: int = 1, n_micro: int = 0,
-               schedule: str = "gpipe", model_par: int = 1,
+               schedule: str = "gpipe", virtual_stages: int = 1,
+               model_par: int = 1,
                data_par: int | None = None, smoke: bool = False,
                shape_override=None):
     """Lower + compile one cell; returns the stats record.
@@ -132,7 +133,8 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
             plan = plan_pipeline(cfg, stages, micro,
                                  global_batch=shape.global_batch,
                                  seq_len=shape.seq_len, dp=dp, tp=tp,
-                                 schedule=schedule)
+                                 schedule=schedule,
+                                 virtual_stages=virtual_stages)
         except ValueError as exc:
             return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                     "skipped": f"pipeline plan: {exc}"}
@@ -273,10 +275,12 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
                     if plan.peak_inflight else 0.0)
         stage_permute = hlo.coll_bytes_by_axis.get("stage", {}).get(
             "collective-permute")
+        v_cmp = plan.virtual_stages if plan.virtual_stages > 1 else 2
         rec["pipeline"] = {
             "schedule": plan.schedule,
             "n_stages": plan.n_stages,
             "n_micro": plan.n_micro,
+            "virtual_stages": plan.virtual_stages,
             "tp": plan.tp,
             "repeats_per_stage": plan.repeats_per_stage,
             "block_costs_s": list(plan.block_costs_s),
@@ -309,11 +313,17 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
             "peak_activation_note": "analytic schedule model; the "
                                     "island train step stashes n_micro "
                                     "per stage under either schedule",
-            # both schedules side by side: same plan, different stash
+            # the schedules side by side: same plan, different stash
+            # (interleaved priced at this cell's v, or v=2 for flat
+            # cells, so every record shows the virtual-stage tradeoff)
             "peak_activation_bytes_by_schedule": {
-                s: pipeline_peak_activation_bytes(
+                **{s: pipeline_peak_activation_bytes(
                     plan.n_micro, plan.n_stages, s, mb_bytes)
-                for s in ("gpipe", "1f1b")
+                   for s in ("gpipe", "1f1b")},
+                f"interleaved(v={v_cmp})":
+                    pipeline_peak_activation_bytes(
+                        plan.n_micro, plan.n_stages, "interleaved",
+                        mb_bytes, virtual_stages=v_cmp),
             },
             # the schedule's own traffic: stage-axis ppermute bytes (per
             # axis attribution; total collective-permute as the fallback
@@ -402,10 +412,15 @@ def main() -> None:
                          "(default 256/stages); smaller values make "
                          "CI-scale pipeline compiles cheap")
     ap.add_argument("--microbatch", type=int, default=0)
-    ap.add_argument("--schedule", choices=["gpipe", "1f1b"],
+    ap.add_argument("--schedule",
+                    choices=["gpipe", "1f1b", "interleaved"],
                     default="gpipe",
                     help="pipeline schedule for --stages > 1 cells; "
-                         "reported peak-activation bytes cover both")
+                         "reported peak-activation bytes cover all "
+                         "schedules side by side")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="chunks per device for --schedule interleaved "
+                         "(the cell's plan and stash bound price v)")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--verify", action="store_true",
                     help="run the mklint static verifier on this cell "
@@ -454,7 +469,9 @@ def main() -> None:
             model_par=args.model_par,
             data_par=args.data_par or (max(256 // args.stages, 1)
                                        if args.stages > 1 else None),
-            schedule=args.schedule, flags=tuple(args.variant))
+            schedule=args.schedule,
+            virtual_stages=args.virtual_stages,
+            flags=tuple(args.variant))
         print(report.format())
         if not report.ok:
             sys.exit(f"mklint: refusing to lower: {len(report.errors)} "
@@ -470,7 +487,9 @@ def main() -> None:
                          remat=not args.no_remat,
                          variants=tuple(args.variant),
                          stages=args.stages, n_micro=args.microbatch,
-                         schedule=args.schedule, model_par=args.model_par,
+                         schedule=args.schedule,
+                         virtual_stages=args.virtual_stages,
+                         model_par=args.model_par,
                          data_par=args.data_par, smoke=args.smoke)
         tag = f"{args.arch}__{args.shape}__{rec['mesh']}"
         suffix = ""
@@ -482,6 +501,8 @@ def main() -> None:
             suffix += f"__m{args.microbatch}"
         if args.stages > 1 and args.schedule != "gpipe":
             suffix += f"__{args.schedule}"
+        if args.stages > 1 and args.virtual_stages > 1:
+            suffix += f"__v{args.virtual_stages}"
         if args.grad_accum > 1:
             suffix += f"__ga{args.grad_accum}"
         if args.no_remat:

@@ -36,7 +36,8 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
           seq_len: int = 128, mesh_shape=None, axes=("data", "model"),
           lr: float = 3e-4, grad_accum: int = 1, remat: bool = True,
           seed: int = 0, stages: int = 1, microbatch: int = 0,
-          model_par: int = 1, schedule: str = "gpipe", flags: tuple = ()):
+          model_par: int = 1, schedule: str = "gpipe",
+          virtual_stages: int = 1, flags: tuple = ()):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if mesh_shape is not None:
         mesh = make_mesh(tuple(mesh_shape), tuple(axes))
@@ -61,14 +62,15 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
         n_micro = microbatch or max(global_batch // max(dp, 1), 1)
         plan = plan_pipeline(cfg, stages, n_micro,
                              global_batch=global_batch, seq_len=seq_len,
-                             dp=dp, tp=tp, schedule=schedule)
+                             dp=dp, tp=tp, schedule=schedule,
+                             virtual_stages=virtual_stages)
         log.info(
-            "pipeline plan: schedule=%s stages=%d micro=%d tp=%d "
-            "partition=%s stage_times=%s stage_time=%.3gs "
+            "pipeline plan: schedule=%s stages=%d virtual=%d micro=%d "
+            "tp=%d partition=%s stage_times=%s stage_time=%.3gs "
             "padding_overhead=%.1f%% bubble=%.1f%% "
             "peak_act_model=%d×mb=%.3gMB block_costs=%s",
-            plan.schedule, plan.n_stages, plan.n_micro, plan.tp,
-            plan.partition,
+            plan.schedule, plan.n_stages, plan.virtual_stages,
+            plan.n_micro, plan.tp, plan.partition,
             ["%.3g" % t for t in plan.stage_times_s],
             plan.stage_time_s, 100 * plan.padding_overhead,
             100 * plan.bubble,
@@ -203,15 +205,22 @@ def main() -> None:
     ap.add_argument("--axes", default=None,
                     help="axis names for --mesh-shape (e.g. "
                          "stage,data,model); defaults by rank")
-    ap.add_argument("--schedule", choices=["gpipe", "1f1b"],
+    ap.add_argument("--schedule", choices=["gpipe", "1f1b", "interleaved"],
                     default="gpipe",
                     help="pipeline backward ordering: gpipe (scan "
-                         "transpose) or 1f1b (explicit stash/pop step "
-                         "program).  Same forward numerics and bubble; "
-                         "the plan's peak_act_model line shows the "
-                         "schedule's analytic stash bound (M vs "
-                         "min(M, S)), which loss-in-schedule executors "
-                         "realize — see docs/pipeline-schedules.md")
+                         "transpose), 1f1b (explicit stash/pop step "
+                         "program), or interleaved (virtual-stage 1f1b, "
+                         "--virtual-stages chunks per device).  Same "
+                         "forward numerics; the plan's peak_act_model "
+                         "line shows the schedule's analytic stash bound "
+                         "(M vs min(M, S) vs min(vM, vS+S-1+v)), which "
+                         "loss-in-schedule executors realize — see "
+                         "docs/pipeline-schedules.md")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="chunks of the layer stack per device for "
+                         "--schedule interleaved (v > 1 shrinks the "
+                         "bubble toward (S-1)/(vM+S-1); needs "
+                         "v*stages <= n_repeats)")
     ap.add_argument("--grad-int8", action="store_true",
                     help="int8 error-feedback gradient all-reduce "
                          "(repro.dist.compression.compressed_psum)")
@@ -242,7 +251,8 @@ def main() -> None:
             seq_len=args.seq_len, stages=args.stages,
             microbatch=args.microbatch, model_par=args.model_par,
             mesh_shape=args.mesh_shape, axes=args.axes,
-            schedule=args.schedule, flags=flags)
+            schedule=args.schedule, virtual_stages=args.virtual_stages,
+            flags=flags)
         print(report.format())
         if not report.ok:
             raise SystemExit(
@@ -254,8 +264,8 @@ def main() -> None:
         args.arch, smoke=args.smoke, global_batch=args.global_batch,
         seq_len=args.seq_len, lr=args.lr, grad_accum=args.grad_accum,
         stages=args.stages, microbatch=args.microbatch,
-        model_par=args.model_par, schedule=args.schedule, flags=flags,
-        **kw)
+        model_par=args.model_par, schedule=args.schedule,
+        virtual_stages=args.virtual_stages, flags=flags, **kw)
     log.info("arch=%s params=%.1fM mesh=%s", cfg.name,
              cfg.n_params() / 1e6, dict(mesh.shape))
 

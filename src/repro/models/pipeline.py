@@ -182,7 +182,8 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
                       remat: bool = False,
                       axis: str = "stage",
                       schedule: str = "gpipe",
-                      sizes: Sequence[Sequence[int]] | None = None
+                      sizes: Sequence[Sequence[int]] | None = None,
+                      virtual_stages: int = 1
                       ) -> tuple[Array, Array]:
     """Pipeline-parallel `forward`: → (hidden (B, S_total, d), aux_loss).
 
@@ -191,17 +192,28 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
     `loss_fn_pipelined`) run in the auto-sharded outer world; only the
     decoder layer stack runs under shard_map.
 
-    `schedule` ("gpipe" | "1f1b") picks the backward ordering of each
-    island's microbatched schedule — forward numerics are identical, so
-    either value matches the baseline to the same tolerance; "1f1b"
-    differentiates through an explicit stash/pop step program instead of
-    the scan transpose (see `repro.dist.pipeline`).
+    `schedule` ("gpipe" | "1f1b" | "interleaved") picks the backward
+    ordering of each island's microbatched schedule — forward numerics
+    are identical, so any value matches the baseline to the same
+    tolerance; "1f1b" differentiates through an explicit stash/pop step
+    program instead of the scan transpose (see `repro.dist.pipeline`).
 
     `sizes` is the plan's heterogeneous partition
     (`PipelinePlan.sizes`): one per-stage valid-repeat row per pattern
-    position.  `None` (or all-equal rows) keeps the uniform unpadded
-    split; ragged rows run padded per-stage stacks with the masked
-    stage scan (see `stage_stack` / `_stage_fn`).
+    position (per *group* row of ``virtual_stages * n_stages`` entries
+    for an interleaved plan).  `None` (or all-equal rows) keeps the
+    uniform unpadded split; ragged rows run padded per-stage stacks with
+    the masked stage scan (see `stage_stack` / `_stage_fn`).
+
+    ``schedule="interleaved"`` with `virtual_stages` v > 1 splits every
+    position's repeat chain into v contiguous chunks (group q = c·S + s
+    of the plan lands on device s) and runs one island per chunk in
+    repeat order — the sequential composition is op-for-op the baseline
+    stack, like the flat position-major island loop.  The islands
+    themselves run the "1f1b" micro-schedule: interleaving is a property
+    of the fused loss-in-schedule executor
+    (`pipeline_train_microbatched`), which keeps all v chunks in one
+    scan; the island step realizes the same partition and numerics.
     """
     mesh = active_mesh()
     if mesh is None or axis not in mesh.shape:
@@ -215,6 +227,18 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
         raise ValueError(
             f"sizes has {len(sizes)} rows for {len(cfg.pattern)} pattern "
             "positions")
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
+    if v > 1 and schedule != "interleaved":
+        raise ValueError(
+            f"virtual_stages={v} requires schedule='interleaved', got "
+            f"{schedule!r}")
+    n_groups = v * n_stages
+    if sizes is not None and any(len(row) != n_groups for row in sizes):
+        raise ValueError(
+            f"sizes rows must have virtual_stages*n_stages={n_groups} "
+            f"entries, got {[len(row) for row in sizes]}")
 
     x = jnp.take(params["embed"], tokens, axis=0)
     if patch_embeds is not None:
@@ -227,40 +251,63 @@ def forward_pipelined(params: dict, cfg: ModelConfig, tokens: Array,
     carry = {"x": x, "aux": jnp.zeros((x.shape[0],), jnp.float32)}
     static = None if enc_out is None else {"enc": enc_out}
 
+    # the islands' micro-schedule: interleaving lives in the fused
+    # executor; island chunks each pipeline their S-way split as 1f1b
+    island_schedule = "1f1b" if schedule == "interleaved" else schedule
     for pos, spec in enumerate(cfg.pattern):
-        pos_sizes = None if sizes is None else tuple(sizes[pos])
-        st = stage_stack(params["layers"][pos], n_stages, sizes=pos_sizes)
-        stage = _stage_fn(cfg, spec, remat, sizes=pos_sizes, axis=axis)
-        bspec = lambda t: jax.tree.map(lambda _: P(bentry), t)
-        # island in_specs are param_specs composed with stage_stack_specs:
-        # every leaf keeps its Megatron model-axis entry alongside the
-        # leading stage entry, so tensor-sharded dims stay P("model")
-        # inside the manual region (the block math reduces row-parallel
-        # partials with explicit psum("model") — see repro.models.layers)
-        # while the schedule's own collectives name only the stage axis
-        st_specs = pipeline_stage_specs(st, mesh, axis=axis)
+        row = None if sizes is None else tuple(int(k) for k in sizes[pos])
+        stacked = params["layers"][pos]
+        R = jax.tree.leaves(stacked)[0].shape[0]
+        for c in range(v):
+            if row is None:
+                if R % v:
+                    raise ValueError(
+                        f"n_repeats={R} not divisible by "
+                        f"virtual_stages={v} — pass the plan's "
+                        "heterogeneous per-group `sizes`")
+                n_c = R // v
+                off, cnt = c * n_c, n_c
+                chunk_sizes = None
+            else:
+                off = sum(row[:c * n_stages])
+                cnt = sum(row[c * n_stages:(c + 1) * n_stages])
+                chunk_sizes = row[c * n_stages:(c + 1) * n_stages]
+            chunk = jax.tree.map(
+                lambda p, _o=off, _n=cnt: p[_o:_o + _n], stacked)
+            st = stage_stack(chunk, n_stages, sizes=chunk_sizes)
+            stage = _stage_fn(cfg, spec, remat, sizes=chunk_sizes,
+                              axis=axis)
+            bspec = lambda t: jax.tree.map(lambda _: P(bentry), t)
+            # island in_specs are param_specs composed with
+            # stage_stack_specs: every leaf keeps its Megatron model-axis
+            # entry alongside the leading stage entry, so tensor-sharded
+            # dims stay P("model") inside the manual region (the block
+            # math reduces row-parallel partials with explicit
+            # psum("model") — see repro.models.layers) while the
+            # schedule's own collectives name only the stage axis
+            st_specs = pipeline_stage_specs(st, mesh, axis=axis)
 
-        if static is None:
-            def island(st, carry, _stage=stage):
-                return pipeline_apply_microbatched(
-                    _stage, st, carry, n_micro, axis=axis,
-                    schedule=schedule)
+            if static is None:
+                def island(st, carry, _stage=stage):
+                    return pipeline_apply_microbatched(
+                        _stage, st, carry, n_micro, axis=axis,
+                        schedule=island_schedule)
 
-            in_specs = (st_specs, bspec(carry))
-            args = (st, carry)
-        else:
-            def island(st, carry, static, _stage=stage):
-                return pipeline_apply_microbatched(
-                    _stage, st, carry, n_micro, axis=axis, static=static,
-                    schedule=schedule)
+                in_specs = (st_specs, bspec(carry))
+                args = (st, carry)
+            else:
+                def island(st, carry, static, _stage=stage):
+                    return pipeline_apply_microbatched(
+                        _stage, st, carry, n_micro, axis=axis,
+                        static=static, schedule=island_schedule)
 
-            in_specs = (st_specs, bspec(carry), bspec(static))
-            args = (st, carry, static)
+                in_specs = (st_specs, bspec(carry), bspec(static))
+                args = (st, carry, static)
 
-        carry = shard_map(
-            island, mesh=mesh, in_specs=in_specs,
-            out_specs=bspec(carry), check_vma=False,
-        )(*args)
+            carry = shard_map(
+                island, mesh=mesh, in_specs=in_specs,
+                out_specs=bspec(carry), check_vma=False,
+            )(*args)
 
     h = L.norm(carry["x"], params["final_norm"], cfg.norm)
     # per-example aux contributions sum back to one aux value per
@@ -274,14 +321,14 @@ def loss_fn_pipelined(params: dict, cfg: ModelConfig, batch: dict,
                       n_stages: int, n_micro: int, ce_chunk: int = 512,
                       remat: bool = False, axis: str = "stage",
                       schedule: str = "gpipe",
-                      sizes: Sequence[Sequence[int]] | None = None
-                      ) -> Array:
+                      sizes: Sequence[Sequence[int]] | None = None,
+                      virtual_stages: int = 1) -> Array:
     """`loss_fn` with the layer stack executed as a stage pipeline."""
     h, aux = forward_pipelined(
         params, cfg, batch["tokens"], n_stages, n_micro,
         patch_embeds=batch.get("patch_embeds"),
         frames=batch.get("frames"), remat=remat, axis=axis,
-        schedule=schedule, sizes=sizes)
+        schedule=schedule, sizes=sizes, virtual_stages=virtual_stages)
     return ce_from_hidden(params, cfg, h, batch["labels"],
                           ce_chunk=ce_chunk) + 0.01 * aux
 

@@ -186,8 +186,12 @@ class PipelinePlan:
     #                                   (bottleneck-based when stages are
     #                                   unequal)
     axis: str = "stage"
-    schedule: str = "gpipe"           # backward ordering: "gpipe" | "1f1b"
+    schedule: str = "gpipe"           # "gpipe" | "1f1b" | "interleaved"
     tp: int = 1                       # model-parallel degree inside stages
+    virtual_stages: int = 1           # chunks per device (interleaved only):
+    #                                   the partition splits the repeat chain
+    #                                   into v·n_stages groups, group q on
+    #                                   device q mod n_stages
     # analytic *schedule model* (see pipeline_peak_inflight): what a
     # loss-in-schedule executor stashes.  The island-based train step
     # keeps the loss outside the schedule, so it stashes M microbatches
@@ -273,7 +277,7 @@ def estimate_block_costs(cfg: ModelConfig, batch: int, seq: int,
 def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
                   global_batch: int, seq_len: int, dp: int = 1,
                   tp: int = 1, axis: str = "stage",
-                  schedule: str = "gpipe",
+                  schedule: str = "gpipe", virtual_stages: int = 1,
                   block_costs: list[float] | None = None) -> PipelinePlan:
     """Validate and price an (n_stages, n_micro) pipeline for `cfg`.
 
@@ -296,6 +300,15 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
     all n_micro microbatches per stage under either value (see
     docs/pipeline-schedules.md).
 
+    ``schedule="interleaved"`` with `virtual_stages` v > 1 partitions
+    the repeat chain into v·n_stages *groups* instead of n_stages
+    stages — `choose_partition` balances the same three candidates at
+    group granularity, group q = c·n_stages + s lands on device
+    q mod n_stages, and the plan prices the *device*: its bottleneck
+    time sums its v groups, the bubble uses the interleaved form
+    (S-1)/(vM+S-1) generalized to unequal groups, and the peak
+    activation stash uses the interleaved bound min(vM, vS+S-1+v).
+
     Any `n_stages <= n_repeats` is accepted: non-uniform partitions
     (including `n_repeats % n_stages != 0`) run as padded per-stage
     stacks — `choose_partition` picks among the uniform split, the
@@ -317,12 +330,21 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
         raise ValueError(f"need tp >= 1, got {tp}")
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
-    if cfg.n_repeats < n_stages:
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
+    if v > 1 and schedule != "interleaved":
         raise ValueError(
-            f"{cfg.name}: n_repeats={cfg.n_repeats} < n_stages={n_stages} "
-            "— padded per-stage stacks relax divisibility (any n_stages "
-            "<= n_repeats works), but every stage still needs at least "
-            "one repeat to hold")
+            f"virtual_stages={v} requires schedule='interleaved', got "
+            f"{schedule!r}")
+    n_groups = v * n_stages
+    if cfg.n_repeats < n_groups:
+        raise ValueError(
+            f"{cfg.name}: n_repeats={cfg.n_repeats} < "
+            f"virtual_stages*n_stages={n_groups} — padded per-stage "
+            "stacks relax divisibility (any virtual_stages*n_stages <= "
+            "n_repeats works), but every virtual stage still needs at "
+            "least one repeat to hold")
     if global_batch % dp:
         raise ValueError(
             f"global_batch={global_batch} not divisible by dp={dp}")
@@ -345,13 +367,22 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
     # staggered and block-granularity candidates built from the
     # per-position costs — hybrid patterns get their extra-repeat
     # placement from the measured costs.
-    part = choose_partition(costs, cfg.n_repeats, n_stages)
-    stage_time = part.bottleneck_s
-    padded_time = part.padded_stage_time_s(costs)
+    part = choose_partition(costs, cfg.n_repeats, n_groups)
+    # part.stage_times_s is per *group* q = c·S + s; a device's valid
+    # work per microbatch sums its v resident groups
+    dev_times = tuple(
+        sum(part.stage_times_s[c * n_stages + s] for c in range(v))
+        for s in range(n_stages))
+    stage_time = max(dev_times)
+    # the interleaved executor ticks v times per microbatch per device,
+    # each tick padded to the position's longest *group* chunk
+    padded_time = v * part.padded_stage_time_s(costs)
     bubble = (pipeline_bubble_fraction(n_micro, n_stages,
-                                       stage_times=part.stage_times_s)
+                                       stage_times=part.stage_times_s,
+                                       virtual_stages=v)
               if stage_time > 0.0
-              else pipeline_bubble_fraction(n_micro, n_stages))
+              else pipeline_bubble_fraction(n_micro, n_stages,
+                                            virtual_stages=v))
     mb_bytes = (mb * seq_len * cfg.d_model
                 * jnp.dtype(cfg.dtype).itemsize)
     return PipelinePlan(
@@ -360,10 +391,11 @@ def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,
         sizes=part.sizes, block_costs_s=tuple(costs),
         stage_time_s=stage_time,
         bubble=bubble, axis=axis,
-        schedule=schedule, tp=tp,
-        peak_inflight=pipeline_peak_inflight(n_micro, n_stages, schedule),
+        schedule=schedule, tp=tp, virtual_stages=v,
+        peak_inflight=pipeline_peak_inflight(n_micro, n_stages, schedule,
+                                             virtual_stages=v),
         peak_activation_bytes=pipeline_peak_activation_bytes(
-            n_micro, n_stages, schedule, mb_bytes),
+            n_micro, n_stages, schedule, mb_bytes, virtual_stages=v),
         partition=part.kind, stage_times_s=part.stage_times_s,
         padded_repeats=part.padded_repeats,
         padded_stage_time_s=padded_time,

@@ -105,9 +105,9 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig | None = None,
 
     pipeline: an optional `repro.train.pipeline.PipelinePlan`; with
     n_stages > 1 the loss runs the layer stack through the microbatched
-    schedule named by the plan (GPipe or 1F1B backward ordering) over the
-    ``"stage"`` mesh axis (`--stages 1` keeps the exact non-pipelined
-    step, bit-for-bit).
+    schedule named by the plan (GPipe, 1F1B, or interleaved virtual-stage
+    backward ordering) over the ``"stage"`` mesh axis (`--stages 1`
+    keeps the exact non-pipelined step, bit-for-bit).
     """
     opt = opt or AdamWConfig()
     pipelined = pipeline is not None and pipeline.n_stages > 1
@@ -122,7 +122,8 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig | None = None,
             return loss_fn_pipelined(
                 params, cfg, batch, pipeline.n_stages, pipeline.n_micro,
                 remat=remat, axis=pipeline.axis,
-                schedule=pipeline.schedule, sizes=pipeline.sizes)
+                schedule=pipeline.schedule, sizes=pipeline.sizes,
+                virtual_stages=getattr(pipeline, "virtual_stages", 1))
     else:
         def loss_of(params, batch):
             return loss_fn(params, cfg, batch, remat=remat)

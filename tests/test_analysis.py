@@ -231,6 +231,46 @@ def test_stash_bound_violation_fires_p007():
         check_step_program(prog, 4, 2, schedule="1f1b"))
 
 
+def test_chunkless_entry_in_interleaved_program_fires_p008():
+    prog = [list(r) for r in
+            make_step_program(2, 2, "interleaved", virtual_stages=2)]
+    t, s = next((t, s) for t, row in enumerate(prog)
+                for s, e in enumerate(row) if e[0] == F)
+    prog[t][s] = (F, prog[t][s][1])          # drop the chunk index
+    assert "MK-P008" in errors_of(check_step_program(
+        prog, 2, 2, schedule="interleaved", virtual_stages=2))
+
+
+def test_chunk_index_out_of_range_fires_p008():
+    prog = [list(r) for r in
+            make_step_program(2, 2, "interleaved", virtual_stages=2)]
+    t, s = next((t, s) for t, row in enumerate(prog)
+                for s, e in enumerate(row) if e[0] == F)
+    op, m, _ = prog[t][s]
+    prog[t][s] = (op, m, 5)                  # only chunks 0..1 exist
+    assert "MK-P008" in errors_of(check_step_program(
+        prog, 2, 2, schedule="interleaved", virtual_stages=2))
+
+
+def test_early_chunk_wrap_forward_fires_p009():
+    # S=2, v=2, M=1: chunk 1's first forward (virtual stage q=2, back on
+    # device 0) moved to the tick its producer (q=1, device 1) runs —
+    # the wrap transfer rides the same one-tick ring and can't be early
+    CI = (I, 0, 0)
+    bad = (
+        ((F, 0, 0), CI),
+        ((F, 0, 1), (F, 0, 0)),   # F(q=2) early: producer F(q=1) same tick
+        (CI, (F, 0, 1)),
+        (CI, (B, 0, 1)),
+        ((B, 0, 1), CI),
+        (CI, (B, 0, 0)),
+        ((B, 0, 0), CI),
+    )
+    errs = errors_of(check_step_program(
+        bad, 1, 2, schedule="interleaved", virtual_stages=2))
+    assert "MK-P009" in errs, errs
+
+
 def test_unnamed_schedule_reports_peak_as_info():
     diags = check_step_program(GOOD_2x1, 1, 2, schedule=None)
     peak = [d for d in diags if d.rule == "MK-P007"]
@@ -419,6 +459,22 @@ def test_verify_launch_conflicting_kernel_modes_fires_l006():
     assert not report.ok
 
 
+def test_verify_launch_virtual_stages_misuse_fires_l007():
+    # v>1 outside the interleaved schedule; single-stage keeps the mesh
+    # in-process friendly — the rule fires before any plan is built
+    report = verify_launch("granite-3-8b", smoke=True, global_batch=8,
+                           seq_len=64, schedule="1f1b", virtual_stages=2,
+                           check_kernels=False, trace_collectives=False)
+    assert "MK-L007" in report.rules_fired()
+    assert not report.ok
+    # nonsensical v
+    report = verify_launch("granite-3-8b", smoke=True, global_batch=8,
+                           seq_len=64, schedule="interleaved",
+                           virtual_stages=0,
+                           check_kernels=False, trace_collectives=False)
+    assert "MK-L007" in report.rules_fired()
+
+
 def test_verify_launch_kernels_pallas_flag_is_clean():
     report = verify_launch("granite-3-8b", smoke=True, global_batch=4,
                            seq_len=64, flags=("kernels_pallas",),
@@ -437,8 +493,8 @@ def test_verify_launch_mesh_errors_short_circuit():
 def test_rule_ids_are_stable():
     # the catalog is a public contract: additions fine, renames are not
     expected = {f"MK-{fam}{i:03d}"
-                for fam, n in (("C", 5), ("P", 7), ("S", 6), ("K", 3),
-                               ("M", 6), ("L", 6))
+                for fam, n in (("C", 5), ("P", 9), ("S", 6), ("K", 3),
+                               ("M", 6), ("L", 7))
                 for i in range(1, n + 1)}
     assert expected <= set(RULES)
 
@@ -459,12 +515,24 @@ def test_cli_bench_smoke_preset_is_clean_and_fast():
               "--preset", "bench-smoke"])
     out = r.stdout + r.stderr
     assert r.returncode == 0, out
-    assert "6/6 configs clean" in out
+    assert "7/7 configs clean" in out
     # satellite contract: per-config static verification stays under ~2s
     import re
     walls = [float(w) for w in re.findall(r"clean \((\d+\.\d+)s\)", out)]
-    assert len(walls) == 6, out
+    assert len(walls) == 7, out
     assert all(w < 2.0 for w in walls), walls
+
+
+def test_cli_interleaved_needs_enough_repeats_l001():
+    # granite smoke has n_repeats=2 < virtual_stages*stages=4
+    r = _run([sys.executable, str(REPO / "tools" / "mklint.py"),
+              "--arch", "granite-3-8b", "--smoke", "--stages", "2",
+              "--data-par", "1", "--microbatch", "2",
+              "--schedule", "interleaved", "--virtual-stages", "2",
+              "--global-batch", "8", "--seq-len", "64"])
+    out = r.stdout + r.stderr
+    assert r.returncode == 1, out
+    assert "MK-L001" in out
 
 
 def test_cli_reports_bad_arithmetic_and_exits_nonzero():

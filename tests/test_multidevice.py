@@ -213,3 +213,46 @@ def test_jamba_kernels_pallas_matches_jnp():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
     assert "JAMBA KERNELS OK" in r.stdout
+
+
+# interleaved virtual stages on the full 8-device (stage=2, data=2,
+# model=2) mesh: `--schedule interleaved --virtual-stages 2` splits
+# jamba's 4 repeats into 4 virtual stages (2 chunks per device) and must
+# track the plain-1f1b jnp run on the SAME mesh; the Pallas kernel path
+# composes on top (kernel dispatch is per-island, schedule-agnostic).
+INTERLEAVED_PPTP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.launch.train import build
+
+    def run(schedule, virtual_stages=1, flags=()):
+        cfg, mesh, state, step, data = build(
+            "jamba-v0.1-52b", smoke=True, global_batch=8, seq_len=32,
+            stages=2, microbatch=2, schedule=schedule,
+            virtual_stages=virtual_stages,
+            mesh_shape=(2, 2, 2), axes=("stage", "data", "model"),
+            seed=0, flags=flags)
+        losses = []
+        for i in range(2):
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        return losses
+
+    base = run("1f1b")
+    li = run("interleaved", virtual_stages=2)
+    lk = run("interleaved", virtual_stages=2, flags=("kernels_pallas",))
+    for name, lp in (("interleaved", li), ("interleaved+pallas", lk)):
+        diffs = [abs(a - b) / max(abs(a), 1e-9) for a, b in zip(base, lp)]
+        assert all(d < 2e-2 for d in diffs), (name, base, lp, diffs)
+    print("INTERLEAVED PPTP OK", base, li, lk)
+""")
+
+
+def test_interleaved_pptp_tracks_1f1b_and_composes_with_kernels():
+    """`--schedule interleaved --virtual-stages 2` on the 2x2x2 pp x tp
+    mesh tracks the 1f1b jnp baseline and composes with
+    `--kernels pallas`."""
+    r = subprocess.run([sys.executable, "-c", INTERLEAVED_PPTP_SCRIPT],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "INTERLEAVED PPTP OK" in r.stdout

@@ -1,8 +1,10 @@
 """Pipeline parallelism (GLOBALMEM plan across devices): numerics under
-shard_map + the Alg.1 stage-balancing partition + schedules (GPipe and
-1F1B step programs) + the end-to-end launch-layer wiring
-(`--stages N --microbatch M --schedule {gpipe,1f1b}`)."""
+shard_map + the Alg.1 stage-balancing partition + schedules (GPipe,
+1F1B, and interleaved virtual-stage step programs) + the end-to-end
+launch-layer wiring (`--stages N --microbatch M
+--schedule {gpipe,1f1b,interleaved} [--virtual-stages v]`)."""
 import itertools
+import random
 import subprocess
 import sys
 import textwrap
@@ -11,8 +13,8 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from repro.dist.pipeline import (PIPE_BWD, PIPE_FWD, balance_stages,
-                                 make_step_program,
+from repro.dist.pipeline import (PIPE_BWD, PIPE_FWD, PIPE_IDLE,
+                                 balance_stages, make_step_program,
                                  pipeline_bubble_fraction,
                                  pipeline_peak_activation_bytes,
                                  pipeline_peak_inflight,
@@ -151,8 +153,19 @@ def test_peak_activation_model():
     assert pipeline_peak_activation_bytes(8, 2, "gpipe", 100.0) == 800.0
     assert pipeline_peak_activation_bytes(8, 2, "1f1b", 100.0) == 200.0
     assert pipeline_peak_activation_bytes(2, 4, "1f1b", 100.0) == 200.0
+    # interleaved: v=1 degenerates to 1f1b's min(M, S); v>1 pays the
+    # steady state v·S + S-1 plus the retiring microbatch's v chunks
+    assert pipeline_peak_inflight(8, 2, "interleaved") == 2
+    assert pipeline_peak_inflight(
+        8, 2, "interleaved", virtual_stages=2) == min(16, 4 + 1 + 2)
+    assert pipeline_peak_inflight(
+        2, 4, "interleaved", virtual_stages=2) == 4   # v·M caps it
+    assert pipeline_peak_activation_bytes(
+        8, 2, "interleaved", 100.0, virtual_stages=2) == 700.0
     with pytest.raises(ValueError):
-        pipeline_peak_inflight(8, 2, "interleaved")
+        pipeline_peak_inflight(8, 2, "zigzag")
+    with pytest.raises(ValueError):          # v>1 is interleaved-only
+        pipeline_peak_inflight(8, 2, "1f1b", virtual_stages=2)
 
 
 PIPE_SCRIPT = textwrap.dedent("""
@@ -395,6 +408,208 @@ def test_fused_train_executor_matches_autodiff():
     assert "FUSED OK" in r.stdout
 
 
+# ------------------------------------- interleaved virtual-stage 1F1B
+def test_interleaved_v1_is_plain_1f1b():
+    """virtual_stages=1 must degenerate to the flat 1F1B program,
+    tick for tick, and overlap (which spaces forwards for the extra
+    transfer hop) is rejected there — it would break the identity."""
+    for M, S in [(1, 1), (4, 2), (8, 4), (5, 3), (16, 2)]:
+        assert make_step_program(M, S, "interleaved") == \
+            make_step_program(M, S, "1f1b")
+    with pytest.raises(ValueError, match="virtual_stages >= 2"):
+        make_step_program(4, 2, "interleaved", overlap=True)
+
+
+def test_interleaved_program_invariants():
+    """Generated interleaved programs pass the MK-P dataflow checker and
+    the occupancy simulator stays within the analytic stash bound
+    min(v·M, v·S + S - 1 + v)."""
+    from repro.analysis.dataflow import check_step_program
+
+    for M, S, v, ov in [(4, 2, 2, False), (8, 4, 2, False),
+                        (8, 2, 4, True), (5, 3, 2, True),
+                        (16, 4, 4, False), (2, 2, 2, True), (1, 4, 3, False)]:
+        prog = make_step_program(M, S, "interleaved", virtual_stages=v,
+                                 overlap=ov)
+        errs = [d for d in check_step_program(
+            prog, M, S, schedule="interleaved", virtual_stages=v)
+            if d.is_error]
+        assert not errs, (M, S, v, ov, [str(d) for d in errs])
+        assert program_peak_inflight(prog, S) <= pipeline_peak_inflight(
+            M, S, "interleaved", virtual_stages=v), (M, S, v, ov)
+
+
+def _interleaved_errors(prog, M, S, v):
+    from repro.analysis.dataflow import check_step_program
+    return [d for d in check_step_program(
+        prog, M, S, schedule="interleaved", virtual_stages=v)
+        if d.is_error]
+
+
+@given(M=st.integers(min_value=1, max_value=10),
+       S=st.integers(min_value=1, max_value=5),
+       v=st.integers(min_value=1, max_value=4),
+       overlap=st.booleans(),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_interleaved_program_properties(M, S, v, overlap, seed):
+    """Property: every generated (M, S, v) interleaved program passes
+    the dataflow checker and the peak-inflight bound, and the checker
+    genuinely discriminates — dropping one event or swapping a device's
+    first and last events must produce errors (mutate-to-fail)."""
+    if overlap and v == 1:
+        with pytest.raises(ValueError):
+            make_step_program(M, S, "interleaved", overlap=True)
+        return
+    prog = make_step_program(M, S, "interleaved", virtual_stages=v,
+                             overlap=overlap)
+    assert not _interleaved_errors(prog, M, S, v)
+    assert program_peak_inflight(prog, S) <= pipeline_peak_inflight(
+        M, S, "interleaved", virtual_stages=v)
+
+    rng = random.Random(seed)
+    events = [(t, s) for t, row in enumerate(prog)
+              for s, e in enumerate(row) if e[0] != PIPE_IDLE]
+    # drop one random event: its (chunk, microbatch) never fires
+    t, s = rng.choice(events)
+    mut = [list(row) for row in prog]
+    mut[t][s] = (PIPE_IDLE, 0, 0)
+    assert _interleaved_errors(mut, M, S, v), ("drop", M, S, v, t, s)
+    # swap a device's first event (always a forward) with its last
+    # (always a backward): the backward now precedes its forward
+    dev = [(tt, ss) for tt, ss in events if ss == s]
+    (t0, _), (t1, _) = dev[0], dev[-1]
+    if t0 != t1:
+        mut = [list(row) for row in prog]
+        mut[t0][s], mut[t1][s] = mut[t1][s], mut[t0][s]
+        assert _interleaved_errors(mut, M, S, v), ("swap", M, S, v)
+
+
+# interleaved fused executor vs gpipe / 1f1b / sequential: same summed
+# per-microbatch loss, same layer gradients (reassembled from the
+# (S, v, n_c, ...) chunk-stacked layout), with and without the
+# double-buffered activation ppermute; v=1 is numerically identical to
+# the flat 1f1b executor it delegates to.
+INTERLEAVED_FUSED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compat import shard_map
+    from repro.dist.pipeline import pipeline_train_microbatched
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2,), ("stage",))
+    S, B, D, M, N, V = 2, 32, 16, 4, 8, 2    # N layers, V chunks/device
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray(rng.normal(size=(N, D, D)) * 0.3, jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+
+    def stage_fn(p, c):                      # generic over stack depth
+        x = c["x"]
+        for r in range(p["w"].shape[0]):
+            x = jnp.tanh(x @ p["w"][r])
+        return {"x": x}
+
+    def loss_fn(c):
+        return jnp.sum(c["x"] ** 2)
+
+    def make(sched, v=1, overlap=False):
+        return jax.jit(shard_map(
+            lambda w, xs: pipeline_train_microbatched(
+                stage_fn, {"w": w}, {"x": xs}, loss_fn, M,
+                schedule=sched, virtual_stages=v, overlap=overlap),
+            mesh=mesh, in_specs=(P("stage"), P()),
+            out_specs=(P(), {"w": P("stage")}), check_vma=False))
+
+    # flat stage stacks for gpipe/1f1b; interleaved chunk-stacks layer
+    # q*n_c+j into virtual stage q = c*S + s -> device s, slot (s, c)
+    w_flat = ws.reshape(S, N // S, D, D)
+    n_c = N // (V * S)
+    w_il = ws.reshape(V, S, n_c, D, D).transpose(1, 0, 2, 3, 4)
+
+    def seq(w, xs):                          # summed per-microbatch loss
+        total = jnp.zeros((), jnp.float32)
+        for xm in xs.reshape(M, B // M, D):
+            c = {"x": xm}
+            for r in range(N):
+                c = {"x": jnp.tanh(c["x"] @ w[r])}
+            total = total + loss_fn(c)
+        return total
+
+    l_ref, g_ref = jax.jit(jax.value_and_grad(seq))(ws, xs)
+
+    l_f, g_f = make("1f1b")(w_flat, xs)
+    outs = {"gpipe": make("gpipe")(w_flat, xs), "1f1b": (l_f, g_f)}
+    flat = {k: (l, g["w"].reshape(N, D, D)) for k, (l, g) in outs.items()}
+    for ov in (False, True):
+        l_i, g_i = make("interleaved", v=V, overlap=ov)(w_il, xs)
+        flat[f"interleaved ov={ov}"] = (
+            l_i, g_i["w"].transpose(1, 0, 2, 3, 4).reshape(N, D, D))
+    for name, (l, g) in flat.items():
+        np.testing.assert_allclose(float(l), float(l_ref), rtol=1e-5,
+                                   err_msg=name)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+    # v=1 delegates to the flat 1f1b executor: identical numerics
+    l_v1, g_v1 = make("interleaved", v=1)(w_flat[:, None], xs)
+    assert float(l_v1) == float(l_f), (float(l_v1), float(l_f))
+    np.testing.assert_array_equal(np.asarray(g_v1["w"][:, 0]),
+                                  np.asarray(g_f["w"]))
+    print("INTERLEAVED FUSED OK")
+""")
+
+
+def test_interleaved_executor_schedule_equivalence():
+    """Schedule-equivalence matrix (acceptance criterion): interleaved
+    v=2 loss and grads match gpipe, 1f1b, and the sequential reference,
+    both with and without overlap, and v=1 == plain 1f1b exactly."""
+    r = subprocess.run([sys.executable, "-c", INTERLEAVED_FUSED_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "INTERLEAVED FUSED OK" in r.stdout
+
+
+# launch-level interleaved wiring: `--schedule interleaved
+# --virtual-stages 2` on jamba (the only smoke config with
+# n_repeats >= v*S) tracks both the stages=1 baseline and plain 1f1b;
+# the heterogeneous --stages 3 case (4 repeats over 3 stages, staggered
+# partition) runs the interleaved schedule path at v=1.
+INTERLEAVED_TRAIN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=3"
+    from repro.launch.train import build
+
+    def run(stages, microbatch=0, schedule="gpipe", virtual_stages=1):
+        cfg, mesh, state, step, data = build(
+            "jamba-v0.1-52b", smoke=True, global_batch=4, seq_len=32,
+            stages=stages, microbatch=microbatch, schedule=schedule,
+            virtual_stages=virtual_stages, seed=0)
+        losses = []
+        for i in range(2):
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        return losses
+
+    l1 = run(1)
+    lf = run(2, microbatch=2, schedule="1f1b")
+    li = run(2, microbatch=2, schedule="interleaved", virtual_stages=2)
+    lh = run(3, microbatch=2, schedule="interleaved")   # hetero, v=1
+    for name, lp in (("1f1b", lf), ("interleaved", li), ("het", lh)):
+        diffs = [abs(a - b) / max(abs(a), 1e-9) for a, b in zip(l1, lp)]
+        assert all(d < 2e-2 for d in diffs), (name, l1, lp, diffs)
+    print("INTERLEAVED TRAIN OK", l1, lf, li, lh)
+""")
+
+
+def test_interleaved_train_matches_baseline():
+    r = subprocess.run([sys.executable, "-c", INTERLEAVED_TRAIN_SCRIPT],
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    assert "INTERLEAVED TRAIN OK" in r.stdout
+
+
 # ------------------------------------------------- stage partition plan
 def test_plan_pipeline_partitions_and_prices():
     from repro.configs import get_smoke
@@ -436,7 +651,13 @@ def test_plan_pipeline_rejects_bad_partitions():
         plan_pipeline(cfg, 2, 1, global_batch=9, seq_len=64, dp=2)
     with pytest.raises(ValueError):          # unknown schedule
         plan_pipeline(cfg, 2, 1, global_batch=8, seq_len=64,
-                      schedule="interleaved")
+                      schedule="zigzag")
+    with pytest.raises(ValueError):          # v>1 needs interleaved
+        plan_pipeline(cfg, 2, 2, global_batch=8, seq_len=64,
+                      virtual_stages=2)
+    with pytest.raises(ValueError):          # v*S=4 > n_repeats=2
+        plan_pipeline(cfg, 2, 2, global_batch=8, seq_len=64,
+                      schedule="interleaved", virtual_stages=2)
 
 
 # --------------------------------------- heterogeneous stage partitions

@@ -16,8 +16,9 @@ Examples:
       --microbatch 2 --mesh-shape 2,2,2 --axes stage,data,model \
       --global-batch 8 --seq-len 64
 
-  # everything `make bench-smoke` exercises (both schedules,
-  # heterogeneous --stages 3, the pp x tp cell) in one process
+  # everything `make bench-smoke` exercises (every schedule incl.
+  # interleaved --virtual-stages, heterogeneous --stages 3, the
+  # pp x tp cell) in one process
   python tools/mklint.py --preset bench-smoke
 
 Device handling: argument parsing and the mesh-size arithmetic run
@@ -53,6 +54,12 @@ _BENCH_SMOKE = [
          stages=2, microbatch=2, mesh_shape="2,2,2",
          axes="stage,data,model", schedule="1f1b",
          flags=("kernels_pallas",)),
+    # interleaved virtual stages: jamba smoke (n_repeats=4) is the only
+    # smoke config deep enough for v*stages = 4 groups
+    dict(arch="jamba-v0.1-52b", smoke=True, global_batch=8, seq_len=64,
+         stages=2, microbatch=2, mesh_shape="2,2,2",
+         axes="stage,data,model", schedule="interleaved",
+         virtual_stages=2),
 ]
 
 
@@ -92,6 +99,8 @@ def _parse_args(argv):
     ap.add_argument("--mesh-shape", default=None)
     ap.add_argument("--axes", default=None)
     ap.add_argument("--schedule", default="gpipe")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="chunks per device for --schedule interleaved")
     ap.add_argument("--grad-int8", action="store_true")
     ap.add_argument("--no-kernels", action="store_true",
                     help="skip the (config-independent) Pallas kernel "
@@ -115,7 +124,7 @@ def main(argv=None) -> int:
             stages=args.stages, microbatch=args.microbatch,
             model_par=args.model_par, data_par=args.data_par,
             mesh_shape=args.mesh_shape, axes=args.axes,
-            schedule=args.schedule,
+            schedule=args.schedule, virtual_stages=args.virtual_stages,
             flags=("grad_int8",) if args.grad_int8 else ())]
 
     # fake enough host devices for the largest mesh BEFORE jax locks the
