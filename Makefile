@@ -63,6 +63,7 @@ bench-smoke:
 	    --smoke --stages 2 --data-par 2 --microbatch 2 \
 	    --schedule interleaved --virtual-stages 2 \
 	    --out results/dryrun-smoke
+	$(PY) -m benchmarks.planner_bench
 	$(PY) -m benchmarks.run --tolerate-failures
 
 # mklint: statically verify every bench-smoke launch config (every

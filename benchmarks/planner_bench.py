@@ -1,0 +1,83 @@
+"""mkplan frontier benchmark: the planner prices a whole launch space
+fast enough to run before every launch.
+
+For each smoke arch on the 8-device mesh the CI smoke trains use, this
+enumerates and scores the full discrete launch space (stages ×
+microbatch × schedule × virtual-stages × model-par) with the analytic
+cost models — nothing compiles — and reports:
+
+- wall-clock of enumeration + scoring + frontier marking (the
+  acceptance criterion pins it under 2 s: cheap enough for a default-on
+  ``--verify`` pass);
+- the frontier size vs the space size (how much of the space static
+  domination prunes);
+- a verdict row asserting the jamba frontier contains a ``stages=2
+  interleaved v=2`` candidate on the (2, 2, 2) PP×TP mesh — the
+  schedule PR 8 built and ``make bench-smoke``'s interleaved cell runs.
+  (The planner re-optimizes the microbatch knob, so the row checks the
+  mesh + schedule shape, not one fixed argv.)
+"""
+from __future__ import annotations
+
+import time
+
+from .common import csv_row
+
+DEVICES = 8
+GLOBAL_BATCH = 8
+SEQ_LEN = 64
+WALL_BUDGET_S = 2.0
+
+ARCHS = ("granite-3-8b", "jamba-v0.1-52b")
+
+
+def run() -> list[str]:
+    from repro.analysis.planner import plan_frontier
+    from repro.configs import get_smoke
+
+    rows = []
+    jamba_hit = None
+    for arch in ARCHS:
+        cfg = get_smoke(arch)
+        t0 = time.perf_counter()
+        scored = plan_frontier(cfg, DEVICES, global_batch=GLOBAL_BATCH,
+                               seq_len=SEQ_LEN)
+        wall = time.perf_counter() - t0
+        front = [s for s in scored if s.on_frontier]
+        if not scored or not front:
+            raise RuntimeError(f"{arch}: empty launch space on "
+                               f"{DEVICES} devices")
+        if wall > WALL_BUDGET_S:
+            raise RuntimeError(
+                f"{arch}: enumeration + scoring took {wall:.2f}s "
+                f"(> {WALL_BUDGET_S}s budget) for {len(scored)} "
+                "candidates")
+        best = front[0]
+        rows.append(csv_row(
+            f"planner_frontier_{arch.split('-')[0]}_d{DEVICES}",
+            wall * 1e6,
+            f"candidates={len(scored)};frontier={len(front)};"
+            f"best={best.candidate.label().replace(' ', '/')};"
+            f"best_step_model_us={best.score.step_time_s * 1e6:.3f}"))
+        if arch.startswith("jamba"):
+            jamba_hit = [
+                s for s in front
+                if s.candidate.schedule == "interleaved"
+                and s.candidate.virtual_stages == 2
+                and s.candidate.mesh_shape == (2, 2, 2)]
+    # acceptance criterion: the config family PR 8 built (interleaved
+    # v=2 on the 2,2,2 PP×TP mesh) survives to the jamba frontier
+    if not jamba_hit:
+        raise RuntimeError("jamba frontier lost the interleaved v=2 "
+                           "(2,2,2)-mesh candidate")
+    rows.append(csv_row(
+        "planner_jamba_interleaved_v2_on_frontier", 0.0,
+        f"hits={len(jamba_hit)};"
+        f"first={jamba_hit[0].candidate.label().replace(' ', '/')};"
+        "verdict=ON-FRONTIER"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -21,6 +21,7 @@ SECTIONS = [
     ("kernels", "kernels_bench"),
     ("pipeline bubble (measured vs model)", "pipeline_bubble"),
     ("roofline (dry-run)", "roofline"),
+    ("planner frontier (mkplan)", "planner_bench"),
 ]
 
 

@@ -8,22 +8,43 @@ composition, Pallas kernel geometry — and returns structured
 diagnostics (stable rule ID, severity, location, fix hint) instead of
 asserting, deadlocking, or tracebacking mid-compile.
 
-Surfaces: ``tools/mklint.py`` (CLI), ``--verify`` on the train/dryrun
-launchers, and this importable API.  Rule catalog: `RULES` here,
-prose in ``docs/static-analysis.md``.
+Beyond correctness, `costmodel` is the unified analytic pricing API
+(bubble/peak/roofline/block/collective/kernel-footprint models — the
+single home for every formula the launch stack scores with) and
+`planner` walks the discrete launch space with those models, marks
+statically-dominated configs, and emits the Pareto frontier as MK-T
+diagnostics (mkplan).
 
-Import layering: `diagnostics`/`meshcli`/`dataflow` are jax-free (the
-launchers use them before touching devices); `verify_launch` imports
+Surfaces: ``tools/mklint.py`` (CLI, incl. ``--plan``),
+``repro.launch.choose`` (frontier CLI), ``--verify`` on the
+train/dryrun launchers, and this importable API.  Rule catalog:
+`RULES` here, prose in ``docs/static-analysis.md``; formulas in
+``docs/cost-models.md``.
+
+Import layering: `diagnostics`/`meshcli`/`dataflow`/`costmodel`/
+`planner` are jax-free at import (the launchers use them before
+touching devices); `verify_launch` and the planner's scoring import
 jax lazily on first call.
 """
+from .costmodel import (estimate_block_costs, estimate_collective_bytes,
+                        kernel_footprint, pipeline_bubble_fraction,
+                        pipeline_peak_activation_bytes,
+                        pipeline_peak_inflight, roofline_terms)
 from .dataflow import check_step_program
 from .diagnostics import (RULES, Diagnostic, DiagnosticError, Report,
                           Severity, error, info, warning)
 from .meshcli import check_mesh_cli, resolve_mesh_cli
+from .planner import (LaunchCandidate, check_launch, check_plan,
+                      enumerate_configs, frontier, plan_frontier)
 from .verify import verify_launch
 
 __all__ = [
-    "Diagnostic", "DiagnosticError", "RULES", "Report", "Severity",
-    "check_mesh_cli", "check_step_program", "error", "info",
-    "resolve_mesh_cli", "verify_launch", "warning",
+    "Diagnostic", "DiagnosticError", "LaunchCandidate", "RULES",
+    "Report", "Severity", "check_launch", "check_mesh_cli", "check_plan",
+    "check_step_program", "enumerate_configs", "error",
+    "estimate_block_costs", "estimate_collective_bytes", "frontier",
+    "info", "kernel_footprint", "pipeline_bubble_fraction",
+    "pipeline_peak_activation_bytes", "pipeline_peak_inflight",
+    "plan_frontier", "resolve_mesh_cli", "roofline_terms",
+    "verify_launch", "warning",
 ]

@@ -1,0 +1,585 @@
+"""The unified analytic cost-model API (mkplan's pricing layer).
+
+Every static model the launch stack uses to price a configuration lives
+here, behind one typed surface — the MKPipe move of scoring the whole
+tradeoff space from static estimates before anything compiles:
+
+- **roofline**: the hardware constants (`PEAK_FLOPS`, `HBM_BW`,
+  `ICI_BW`) and `roofline_terms` — FLOPs/bytes/collective-bytes folded
+  into per-term seconds (`RooflineTerms`).  Mirrors
+  `repro.core.resources.ChipSpec`; a parity test pins them equal.
+- **schedule models**: `SCHEDULES`, the `PIPE_*` op codes,
+  `pipeline_bubble_fraction` (gpipe/1f1b/interleaved-v, uniform and
+  heterogeneous), `pipeline_peak_inflight` /
+  `pipeline_peak_activation_bytes`, and the step-program stash
+  simulator `program_peak_inflight`.  (Moved from
+  `repro.dist.pipeline`, which re-exports them — this module is the
+  canonical home so `repro.analysis` stays jax-free at import.)
+- **block pricing**: `analytic_block_cost` (6·N·tokens at roofline
+  peak) and `estimate_block_costs` (XLA cost-analysis probe, tp-aware)
+  — what `plan_pipeline` feeds `balance_stages`.
+- **collectives**: `estimate_collective_bytes` (analytic per-axis
+  bytes: stage ppermute, model psum, data grad all-reduce) and
+  `measured_collective_bytes` (the `launch.hloanalysis` per-axis
+  attribution of compiled HLO, wrapped).
+- **kernel footprints**: `kernel_footprint` — block geometry →
+  bytes-touched / VMEM estimate for one Pallas kernel call, recorded
+  through `analysis.kernels.record_pallas_calls` without lowering;
+  forward and backward priced separately through the tuner's
+  phase-keyed cache.
+
+Import layering: this module imports nothing from the rest of the repo
+at module level (numpy + stdlib only) — jax, the model configs, the
+kernels and the HLO parser are imported lazily inside the functions
+that need them.  Formula derivations: docs/cost-models.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Sequence
+
+import numpy as np
+
+log = logging.getLogger("repro.costmodel")
+
+# TPU v5e-like roofline constants (per chip) — the single source for the
+# launch stack (train/dist/launch import these); they mirror
+# `repro.core.resources.ChipSpec` (the paper-side resource model) and a
+# parity test pins the two equal.
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+VMEM_BYTES = 128 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """The three roofline terms of one step, in seconds."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = self.as_dict()
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict[str, float]:
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+
+
+def roofline_terms(flops: float, hbm_bytes: float,
+                   collective_bytes: float) -> RooflineTerms:
+    """Fold per-device FLOPs / HBM bytes / collective bytes through the
+    roofline constants into per-term seconds."""
+    return RooflineTerms(compute_s=flops / PEAK_FLOPS,
+                         memory_s=hbm_bytes / HBM_BW,
+                         collective_s=collective_bytes / ICI_BW)
+
+
+# ------------------------------------------------------ schedule models
+# One pipeline tick = one stage executing one micro-step; the op codes
+# are the step programs' vocabulary (see repro.dist.pipeline, which
+# builds and executes the programs — this module only prices them).
+SCHEDULES = ("gpipe", "1f1b", "interleaved")
+PIPE_IDLE, PIPE_FWD, PIPE_BWD = 0, 1, 2
+
+
+def _check_virtual_stages(schedule: str, virtual_stages: int) -> int:
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
+    if v != 1 and schedule != "interleaved":
+        raise ValueError(
+            f"virtual_stages={v} requires schedule='interleaved', got "
+            f"{schedule!r}")
+    return v
+
+
+def pipeline_bubble_fraction(n_micro: int, n_stages: int,
+                             stage_times: Sequence[float] | None = None,
+                             virtual_stages: int = 1) -> float:
+    """Analytic fill/drain bubble fraction of device-time idle.
+
+    Uniform stages (``stage_times=None``): (S-1) / (M + S-1) — with M
+    microbatches over S equal stages, either step program spans
+    2·(M + S - 1) ticks of which 2·M per stage are useful.  The formula
+    holds for *both* flat schedules (GPipe and 1F1B): they differ in
+    *peak activation memory* (`pipeline_peak_inflight`), not in bubble.
+
+    ``virtual_stages=v > 1`` models the interleaved-1F1B schedule: each
+    device holds v non-contiguous chunks of the layer stack (virtual
+    stage q = c·S + s lives on device s), so one "microbatch unit" of
+    per-device work shrinks to 1/v of a flat stage pass while the fill
+    ramp still crosses only S devices — the uniform bubble drops to
+    **(S-1) / (v·M + S-1)**.
+
+    Heterogeneous stages (``stage_times=[t_0, .., t_{S-1}]``, or one
+    entry per *virtual* stage — v·S of them — when ``virtual_stages=v``):
+    the pipeline period is set by the bottleneck device, whose
+    per-microbatch time is ``D_s = Σ_c t_{c·S+s}`` summed over its
+    chunks.  The span is ``(vM−1)·max_s D_s/v + Σ_s D_s/v`` (fill
+    through every device once at chunk granularity, then vM−1 bottleneck
+    chunk periods) and the useful device-time is ``M·Σ_s D_s``:
+
+        bubble = 1 − vM·Σ D_s / (S·((vM−1)·max D + Σ D))
+
+    which collapses to the uniform interleaved closed form when all
+    chunks cost the same, and to the flat heterogeneous form
+    ``1 − M·Σ t_s / (S·((M−1)·max t + Σ t))`` at v=1.  Heterogeneous
+    plans must price their bubble at least this way — the uniform
+    formula is optimistic whenever one device is slower than the rest.
+    Note the span models *asynchronous* stage starts (a stage forwards
+    as soon as its input arrives); `pipeline_apply_microbatched`
+    advances stages in lockstep through a per-tick ring ppermute, so its
+    realized span is the still-larger ``(M+S−1)·max_s t_s`` — this
+    overload is the schedule-independent lower-bound model, the lockstep
+    penalty on top of it is the same fill/drain geometry the uniform
+    measured-vs-analytic comparison already carries.
+    """
+    if n_micro < 1 or n_stages < 1:
+        raise ValueError("need n_micro >= 1 and n_stages >= 1")
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
+    if stage_times is None:
+        return (n_stages - 1) / (v * n_micro + n_stages - 1)
+    ts = [float(t) for t in stage_times]
+    if len(ts) != v * n_stages:
+        raise ValueError(
+            f"got {len(ts)} stage_times for n_stages={n_stages} × "
+            f"virtual_stages={v} (want one per virtual stage)")
+    if any(t < 0.0 for t in ts) or max(ts, default=0.0) <= 0.0:
+        raise ValueError(f"stage_times must be >= 0 with a positive "
+                         f"bottleneck, got {ts}")
+    # per-device time across its chunks: virtual stage q = c·S + s
+    dev = [sum(ts[c * n_stages + s] for c in range(v))
+           for s in range(n_stages)]
+    total = sum(dev)
+    span = (v * n_micro - 1) * max(dev) + total
+    return 1.0 - (v * n_micro * total) / (n_stages * span)
+
+
+def pipeline_peak_inflight(n_micro: int, n_stages: int,
+                           schedule: str = "gpipe",
+                           virtual_stages: int = 1) -> int:
+    """Peak in-flight micro-step activations a device must stash.
+
+    A device holds one stashed activation per (chunk, microbatch) whose
+    forward it has run (or received) but whose backward it has not yet
+    retired:
+
+    - ``"gpipe"``: every forward completes before any backward starts, so
+      the stash peaks at **M** on every stage;
+    - ``"1f1b"``: stage s starts draining after min(M, S-s) warmup
+      forwards and then strictly alternates forward/backward, bounding its
+      stash at min(M, S-s) — **min(M, S)** in the worst case (stage 0),
+      independent of the microbatch count;
+    - ``"interleaved"`` with v chunks per device: the steady state holds
+      up to v chunk activations of up to S microbatches plus the S-1
+      transfers in flight across the chunk boundary, and the microbatch
+      next in line to retire may keep up to v more chunks stashed while
+      its backward diagonal waits for a free slot — bounding the stash
+      at **min(v·M, v·S + S - 1 + v)**.  v=1 degenerates to the exact
+      1f1b bound min(M, S).
+
+    Returns the worst-case device's count; multiply by the
+    per-micro-step activation bytes for a peak-memory estimate
+    (`pipeline_peak_activation_bytes`).
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
+    if n_micro < 1 or n_stages < 1:
+        raise ValueError("need n_micro >= 1 and n_stages >= 1")
+    v = _check_virtual_stages(schedule, virtual_stages)
+    if schedule == "gpipe":
+        return n_micro
+    if schedule == "interleaved" and v > 1:
+        return min(v * n_micro, v * n_stages + n_stages - 1 + v)
+    return min(n_micro, n_stages)
+
+
+def pipeline_peak_activation_bytes(n_micro: int, n_stages: int,
+                                   schedule: str,
+                                   microbatch_bytes: float,
+                                   virtual_stages: int = 1) -> float:
+    """Analytic peak activation-stash bytes per stage device:
+    `pipeline_peak_inflight` × the per-microbatch activation size (the
+    bytes of one microbatch's stage-boundary activations, e.g.
+    mb · seq · d_model · itemsize for the residual stream)."""
+    return pipeline_peak_inflight(n_micro, n_stages, schedule,
+                                  virtual_stages=virtual_stages) \
+        * float(microbatch_bytes)
+
+
+def _program_books(prog, n_stages: int):
+    """(f_tick, b_tick) keyed by (virtual stage q, microbatch): q = s for
+    flat (op, m) entries, q = c·n_stages + s for chunked (op, m, c)."""
+    f_tick: dict = {}
+    b_tick: dict = {}
+    for t, row in enumerate(prog):
+        for s, entry in enumerate(row):
+            op, m = entry[0], entry[1]
+            q = (entry[2] * n_stages + s) if len(entry) > 2 else s
+            if op == PIPE_FWD:
+                f_tick[(q, m)] = t
+            elif op == PIPE_BWD:
+                b_tick[(q, m)] = t
+    return f_tick, b_tick
+
+
+def program_peak_inflight(prog, n_stages: int) -> int:
+    """Peak live stash occupancy over all devices of a step program.
+
+    An entry (q, m) becomes live on device q mod S when its stash slot
+    is written — at F(q, m) for the injecting virtual stage 0, at
+    F(q-1, m) + 1 otherwise (ppermute arrival) — and is retired by
+    B(q, m).
+
+    Flat (op, m) programs report the peak slot *span*
+    max(live) - min(live) + 1: their executors key slots by ``m % K``,
+    and collisions are impossible iff K ≥ that span (for the programs
+    built here it equals `pipeline_peak_inflight`).  Chunked (op, m, c)
+    interleaved programs report the peak live *count*: their executor
+    allocates slots from a per-device free list replayed off the
+    program, so the count is exactly the slots it needs.
+    """
+    chunked = any(len(entry) > 2
+                  for row in prog for entry in row
+                  if entry[0] != PIPE_IDLE)
+    f_tick, b_tick = _program_books(prog, n_stages)
+    peak = 0
+    for s in range(n_stages):
+        events = []       # (tick, +1 push (q, m) / -1 pop (q, m))
+        for (q, m), t in f_tick.items():
+            if (q + 1) % n_stages == s and ((q + 1, m) in f_tick
+                                            or (q + 1, m) in b_tick):
+                events.append((t + 1, 1, (q + 1, m)))
+            if q == 0 and s == 0:
+                events.append((t, 1, (q, m)))
+        for (q, m), t in b_tick.items():
+            if q % n_stages == s:
+                events.append((t, -1, (q, m)))
+        live: set = set()
+        # pushes (arrivals) land before the tick's pop (the executors
+        # apply ppermute arrivals first, then run the event)
+        for t, kind, qm in sorted(events, key=lambda e: (e[0], -e[1])):
+            if kind == 1:
+                live.add(qm)
+                if live:
+                    if chunked:
+                        peak = max(peak, len(live))
+                    else:
+                        ms = [m for _, m in live]
+                        peak = max(peak, max(ms) - min(ms) + 1)
+            else:
+                live.discard(qm)
+    return peak
+
+
+# --------------------------------------------------------- block pricing
+def analytic_block_cost(cfg, pos: int, tokens: int) -> float:
+    """Fallback cost: 6·N_block·tokens FLOPs at roofline peak."""
+    from repro.models.common import LayerKind
+
+    spec = cfg.pattern[pos]
+    d = cfg.d_model
+    n = 0.0
+    if spec.kind in (LayerKind.ATTN, LayerKind.SWA):
+        n += d * (cfg.num_heads * cfg.head_dim) * 2
+        n += d * (cfg.num_kv_heads * cfg.head_dim) * 2
+    else:
+        di = cfg.d_inner
+        n += d * (2 * di + 2 * cfg.ssm_heads * cfg.ssm_state
+                  + cfg.ssm_heads) + di * d
+    if spec.ffn:
+        if spec.moe:
+            n += 3 * d * cfg.moe_d_ff * max(cfg.experts_per_tok, 1)
+        else:
+            n += (3 if cfg.act == "silu" else 2) * d * cfg.d_ff
+    return 6.0 * n * tokens / PEAK_FLOPS
+
+
+def estimate_block_costs(cfg, batch: int, seq: int,
+                         tp: int = 1) -> list[float]:
+    """Per-pattern-position cost (seconds) of one block's forward at
+    (batch, seq): XLA cost analysis of the lowered block (the stage
+    profiler's FLOP/byte estimates) folded through the roofline,
+    falling back to the analytic 6·N·D estimate when compilation of the
+    probe is unavailable.
+
+    `tp` prices *per-model-shard* work: the probe lowers the full block
+    and the roofline time divides by `tp`, since every sharded tensor
+    (heads, d_ff, d_inner, experts) splits its FLOPs and bytes evenly
+    over the model axis — so `balance_stages` partitions stages by the
+    work one device actually runs, not the unsharded block.  (The
+    replicated residue — norms, routers — is negligible at roofline
+    granularity; a uniform divisor also leaves the *relative* costs, and
+    hence the partition, of homogeneous stacks unchanged.)"""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.transformer import _apply_block, _init_block
+
+    if tp < 1:
+        raise ValueError(f"need tp >= 1, got {tp}")
+    costs = []
+    x_sds = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    for pos, spec in enumerate(cfg.pattern):
+        try:
+            p_abs = jax.eval_shape(
+                functools.partial(_init_block, cfg=cfg, spec=spec), key_sds)
+            fn = lambda p, x, _s=spec: _apply_block(p, _s, cfg, x)[0]
+            compiled = jax.jit(fn).lower(p_abs, x_sds).compile()
+            ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):  # jax<=0.4 returns [dict]
+                ca = ca[0] if ca else {}
+            flops = float(ca.get("flops", 0.0))
+            bts = float(ca.get("bytes accessed", 0.0))
+            cost = max(flops / PEAK_FLOPS, bts / HBM_BW)
+            if cost <= 0.0:
+                raise ValueError("empty cost analysis")
+        except Exception as exc:               # pragma: no cover - fallback
+            log.debug("block cost probe failed at pos %d (%s); "
+                      "using analytic estimate", pos, exc)
+            cost = analytic_block_cost(cfg, pos, batch * seq)
+        costs.append(cost / tp)
+    return costs
+
+
+def microbatch_bytes(cfg, n_micro: int, *, global_batch: int,
+                     seq_len: int, dp: int = 1) -> float:
+    """One microbatch's stage-boundary activation bytes (the residual
+    stream): (global_batch/dp/n_micro) · seq · d_model · itemsize."""
+    mb = max(global_batch // max(dp, 1) // max(n_micro, 1), 1)
+    return float(mb * seq_len * cfg.d_model
+                 * np.dtype(cfg.dtype).itemsize)
+
+
+def model_state_bytes(cfg, n_stages: int = 1, tp: int = 1) -> float:
+    """Per-device model-state bytes: params + grads + two Adam moments
+    (4× the parameter bytes), split over the stage and model axes.  A
+    coarse residency model — embeddings are counted as split although
+    some executors replicate them — used for relative peak-memory
+    pricing, not allocator-exact accounting."""
+    itemsize = np.dtype(cfg.dtype).itemsize
+    return 4.0 * cfg.n_params() * itemsize / (max(n_stages, 1)
+                                              * max(tp, 1))
+
+
+# ------------------------------------------------------------ collectives
+def estimate_collective_bytes(cfg, *, n_stages: int, n_micro: int,
+                              virtual_stages: int = 1, tp: int = 1,
+                              dp: int = 1, global_batch: int,
+                              seq_len: int) -> dict[str, float]:
+    """Analytic per-device collective bytes by mesh axis, per step.
+
+    A ranking model, deliberately coarse (docs/cost-models.md):
+
+    - ``"stage"``: the schedule's ring ppermute — each device sends one
+      microbatch activation per pipeline tick, forward and backward,
+      across each of its v chunks: ``2 · v · M · mb_bytes``;
+    - ``"model"``: the row-parallel psums inside the blocks — per
+      microbatch, each local block psums its mixer output and (when
+      present) its FFN output over the model axis, forward + backward
+      (cotangents transpose to the same psums), at the ring all-reduce
+      cost 2·(tp−1)/tp per psum'd activation;
+    - ``"data"``: the gradient all-reduce, once per step:
+      2·(dp−1)/dp × the per-device parameter bytes.
+    """
+    mb = microbatch_bytes(cfg, n_micro, global_batch=global_batch,
+                          seq_len=seq_len, dp=dp)
+    v = max(int(virtual_stages), 1)
+    out = {"stage": 0.0, "model": 0.0, "data": 0.0}
+    if n_stages > 1:
+        out["stage"] = 2.0 * v * n_micro * mb
+    if tp > 1:
+        psums_per_block = [1 + (1 if spec.ffn else 0)
+                           for spec in cfg.pattern]
+        local_psums = (cfg.n_repeats * sum(psums_per_block)
+                       / max(n_stages, 1))
+        out["model"] = (2.0 * (tp - 1) / tp * mb
+                        * 2.0 * n_micro * local_psums)
+    if dp > 1:
+        param_bytes = (cfg.n_params()
+                       * np.dtype(cfg.dtype).itemsize
+                       / (max(n_stages, 1) * max(tp, 1)))
+        out["data"] = 2.0 * (dp - 1) / dp * param_bytes
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBytes:
+    """Measured per-device collective traffic of one compiled program."""
+    total: float
+    by_axis: dict[str, dict[str, float]]
+    by_op: dict[str, float]
+
+
+def measured_collective_bytes(hlo_text: str, mesh=None,
+                              axis_groups=None) -> CollectiveBytes:
+    """Per-axis collective-bytes attribution of compiled (SPMD) HLO —
+    the `launch.hloanalysis` loop-aware parse, behind the typed API.
+    Pass either a concrete `mesh` (axis groups are derived) or
+    precomputed ``axis_groups``."""
+    from repro.launch.hloanalysis import analyze_hlo, mesh_axis_groups
+
+    if axis_groups is None and mesh is not None:
+        axis_groups = mesh_axis_groups(mesh)
+    hlo = analyze_hlo(hlo_text, axis_groups=axis_groups)
+    return CollectiveBytes(total=hlo.collective_bytes,
+                           by_axis=hlo.coll_bytes_by_axis,
+                           by_op=hlo.coll_bytes_by_op)
+
+
+# -------------------------------------------------------- kernel footprint
+@dataclasses.dataclass(frozen=True)
+class KernelFootprint:
+    """Static block-geometry footprint of one Pallas kernel call.
+
+    ``bytes_touched`` counts the HBM bytes moved across all grid steps
+    (every grid point reads its input blocks and writes its output
+    blocks — re-reads of the same block on different grid points count
+    each time, which is exactly the streamed traffic a non-revisiting
+    kernel pays); ``vmem_bytes`` is the per-grid-step resident block
+    bytes (one block per operand and output), the VMEM working set the
+    block config commits to.  ``approximate`` marks phases priced
+    without a recorded pallas_call (the chunked flash backward, the
+    unfused ref VJPs).
+    """
+    kernel: str
+    phase: str
+    config: tuple[tuple[str, int], ...]
+    grid: tuple[int, ...]
+    bytes_touched: float
+    vmem_bytes: float
+    n_calls: int
+    approximate: bool = False
+
+
+def resolve_block_config(kernel: str, shape: Sequence[int],
+                         dtype: str = "float32", *, phase: str = "fwd",
+                         tp: int = 1,
+                         cache_path: str | None = None) -> dict[str, int]:
+    """The block config `kernels.dispatch` would run this call with:
+    tuned-cache entry (phase-keyed) → kernel defaults (backward falls
+    back to the forward blocks when no backward entry was tuned), then
+    clamped to the largest divisor of each blocked dim."""
+    from repro.kernels.dispatch import _DEFAULTS
+    from repro.kernels.tune import PARAM_DIMS, _divisor, cached_config
+
+    shape = tuple(int(s) for s in shape)
+    cfg = dict(_DEFAULTS.get(kernel, {}))
+    cfg.update(cached_config(kernel, shape, dtype, tp=tp,
+                             path=cache_path))
+    if phase == "bwd":
+        cfg.update(cached_config(kernel, shape, dtype, tp=tp,
+                                 phase="bwd", path=cache_path))
+    for param, axis in PARAM_DIMS.get(kernel, {}).items():
+        if param in cfg:
+            cfg[param] = _divisor(shape[axis], cfg[param])
+    return cfg
+
+
+def _spec_block_bytes(spec, shape: Sequence[int], itemsize: int) -> float:
+    block = getattr(spec, "block_shape", None) if spec is not None else None
+    if block is None:       # unblocked operand: the whole array per step
+        n = 1
+        for d in shape:
+            n *= int(d)
+        return float(n * itemsize)
+    n = 1
+    for bs in block:
+        n *= int(bs) if bs else 1
+    return float(n * itemsize)
+
+
+def kernel_footprint(kernel: str, shape: Sequence[int],
+                     dtype: str = "float32", *, phase: str = "fwd",
+                     config: dict[str, int] | None = None, tp: int = 1,
+                     cache_path: str | None = None) -> KernelFootprint:
+    """Record one kernel builder under `record_pallas_calls` and derive
+    its static footprint — nothing lowers, nothing allocates on device.
+
+    ``phase="bwd"`` prices the backward with the backward-phase block
+    config (the tuner caches it separately; see `repro.kernels.tune`):
+    flash attention's backward is the memory-linear chunked recompute —
+    modeled as 2× the forward's streamed traffic (recompute reads plus
+    dq/dk/dv writes) at the backward chunk geometry — and the other
+    kernels' backwards are the unfused ref VJPs, priced as whole-operand
+    reads and gradient writes with no VMEM blocking.
+    """
+    from repro.analysis.kernels import PallasCallRecord, record_pallas_calls
+    from repro.kernels.tune import PARAM_DIMS, _builder
+
+    shape = tuple(int(s) for s in shape)
+    if kernel not in PARAM_DIMS:
+        raise ValueError(f"unknown tunable kernel {kernel!r}; "
+                         f"tunable: {tuple(PARAM_DIMS)}")
+    if config is None:
+        config = resolve_block_config(kernel, shape, dtype, phase=phase,
+                                      tp=tp, cache_path=cache_path)
+    itemsize = int(np.dtype(dtype).itemsize)
+
+    records: list[PallasCallRecord] = []
+    with record_pallas_calls(records, name=kernel):
+        _builder(kernel, shape, config)()
+    grid: tuple[int, ...] = ()
+    touched = 0.0
+    vmem = 0.0
+    for rec in records:
+        pts = 1
+        for g in rec.grid:
+            pts *= int(g)
+        grid = rec.grid
+        for spec, shp in list(zip(rec.in_specs, rec.operand_shapes)) \
+                + list(zip(rec.out_specs, rec.out_shapes)):
+            bb = _spec_block_bytes(spec, shp, itemsize)
+            touched += pts * bb
+            vmem += bb
+
+    if phase == "fwd":
+        return KernelFootprint(
+            kernel=kernel, phase=phase,
+            config=tuple(sorted(config.items())), grid=grid,
+            bytes_touched=touched, vmem_bytes=vmem, n_calls=len(records))
+    if kernel == "flash_attention":
+        # chunked recompute backward: same streamed geometry as the
+        # forward (at the backward chunk sizes already in `config`),
+        # twice — recompute reads + dq/dk/dv writes
+        return KernelFootprint(
+            kernel=kernel, phase=phase,
+            config=tuple(sorted(config.items())), grid=grid,
+            bytes_touched=2.0 * touched, vmem_bytes=vmem,
+            n_calls=len(records), approximate=True)
+    # ref-VJP backward: unfused whole-array traffic, no blocking
+    whole = 0.0
+    for rec in records:
+        for shp in list(rec.operand_shapes) + list(rec.out_shapes):
+            n = 1
+            for d in shp:
+                n *= int(d)
+            whole += n * itemsize
+    return KernelFootprint(
+        kernel=kernel, phase=phase,
+        config=tuple(sorted(config.items())), grid=(),
+        bytes_touched=2.0 * whole, vmem_bytes=0.0,
+        n_calls=len(records), approximate=True)
+
+
+__all__ = [
+    "CollectiveBytes", "HBM_BW", "ICI_BW", "KernelFootprint",
+    "PEAK_FLOPS", "PIPE_BWD", "PIPE_FWD", "PIPE_IDLE", "RooflineTerms",
+    "SCHEDULES", "VMEM_BYTES", "analytic_block_cost",
+    "estimate_block_costs", "estimate_collective_bytes",
+    "kernel_footprint", "measured_collective_bytes", "microbatch_bytes",
+    "model_state_bytes", "pipeline_bubble_fraction",
+    "pipeline_peak_activation_bytes", "pipeline_peak_inflight",
+    "program_peak_inflight", "resolve_block_config", "roofline_terms",
+]

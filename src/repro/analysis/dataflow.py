@@ -35,10 +35,8 @@ from __future__ import annotations
 
 from typing import Sequence
 
-from repro.dist.pipeline import (PIPE_BWD, PIPE_FWD, PIPE_IDLE, SCHEDULES,
-                                 pipeline_peak_inflight,
-                                 program_peak_inflight)
-
+from .costmodel import (PIPE_BWD, PIPE_FWD, PIPE_IDLE, SCHEDULES,
+                        pipeline_peak_inflight, program_peak_inflight)
 from .diagnostics import Diagnostic, error, info
 
 _OPS = (PIPE_IDLE, PIPE_FWD, PIPE_BWD)

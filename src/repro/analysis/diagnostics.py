@@ -20,6 +20,7 @@ Rule families (catalog in `RULES`, prose in docs/static-analysis.md):
 - ``MK-K...`` Pallas kernel geometry
 - ``MK-M...`` mesh CLI / axis validation
 - ``MK-L...`` launch-configuration arithmetic
+- ``MK-T...`` tradeoff-space planning (cost-model frontier)
 """
 from __future__ import annotations
 
@@ -75,6 +76,7 @@ RULES: dict[str, str] = {
     "MK-K001": "block shape does not divide the operand dim",
     "MK-K002": "index map leaves the operand's block grid",
     "MK-K003": "grid × block does not cover every output block",
+    "MK-K008": "divisor clamp shrinks a block below half its target",
     # mesh CLI
     "MK-M001": "malformed --mesh-shape literal",
     "MK-M002": "--axes and --mesh-shape disagree (or --axes alone)",
@@ -90,6 +92,14 @@ RULES: dict[str, str] = {
     "MK-L005": "mutually exclusive launch flags",
     "MK-L006": "conflicting kernel modes",
     "MK-L007": "virtual-stage count inconsistent with the schedule",
+    # tradeoff-space planning (repro.analysis.planner)
+    "MK-T001": "chosen config statically dominated by a same-mesh "
+               "alternative",
+    "MK-T002": "peak-memory model exceeds the device memory budget",
+    "MK-T003": "interleaved virtual stages would strictly lower the "
+               "bubble at this (M, S)",
+    "MK-T004": "tensor-parallel degree prices worse than more pipeline "
+               "stages on the block-cost model",
 }
 
 
@@ -113,6 +123,12 @@ class Diagnostic:
     def format(self) -> str:
         head = f"{self.rule} {self.severity}: [{self.loc}] {self.msg}"
         return head + (f"\n    hint: {self.hint}" if self.hint else "")
+
+    def as_dict(self) -> dict:
+        """Stable JSON schema (mklint --format json, CI annotations):
+        rule / severity / loc / msg / hint, all strings."""
+        return {"rule": self.rule, "severity": str(self.severity),
+                "loc": self.loc, "msg": self.msg, "hint": self.hint}
 
 
 def error(rule: str, loc: str, msg: str, hint: str = "") -> Diagnostic:
@@ -162,6 +178,12 @@ class Report:
 
     def rules_fired(self) -> set[str]:
         return {d.rule for d in self.diagnostics}
+
+    def as_dict(self) -> dict:
+        """Stable JSON schema for one report (see `Diagnostic.as_dict`)."""
+        return {"target": self.target, "ok": self.ok,
+                "wall_s": round(self.wall_s, 4),
+                "diagnostics": [d.as_dict() for d in self.diagnostics]}
 
     def format(self, verbose: bool = False) -> str:
         shown = [d for d in self.diagnostics

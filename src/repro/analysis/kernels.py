@@ -27,9 +27,41 @@ from typing import Any, Callable, Iterator, Sequence
 
 import numpy as np
 
-from .diagnostics import Diagnostic, error
+from .diagnostics import Diagnostic, error, warning
 
 _MAX_GRID_POINTS = 200_000   # guard: lint evaluates index maps per point
+
+# mirrors `repro.kernels.tune._TARGETS` (parity-tested): the pow2 ladder
+# the tuner enumerates around and the dispatch clamps block args toward
+_POW2_TARGETS = (16, 32, 64, 128, 256, 512)
+
+
+def _largest_divisor(n: int, target: int) -> int:
+    d = max(min(target, n), 1)
+    while n % d:
+        d -= 1
+    return d
+
+
+def check_block_clamp(name: str, what: str, dim: int,
+                      target: int) -> list[Diagnostic]:
+    """MK-K008: the `_divisor` clamp (largest divisor of ``dim`` not
+    above ``target``) degrades a ragged dim to a block under half the
+    intended target — e.g. a 131-row operand collapses to 1-row blocks,
+    the ROADMAP's one-block 130-row shape class.  The kernel stays
+    *correct* (hence warning, not error) but the grid loses its
+    vector-width economics; padding the dim keeps the intended block."""
+    dim, target = int(dim), int(target)
+    got = _largest_divisor(dim, target)
+    if 2 * got >= min(target, dim):
+        return []
+    return [warning(
+        "MK-K008", f"kernel {name}: {what}",
+        f"divisor clamp shrinks the block to {got} for dim {dim} "
+        f"(target {target}) — under half the intended block",
+        f"pad the dim to a multiple of a pow2 block (e.g. "
+        f"{-(-dim // target) * target}) instead of clamping; ragged "
+        "dims cost a masked tail block, not a degenerate grid")]
 
 
 @dataclasses.dataclass
@@ -130,6 +162,17 @@ def _check_one_spec(rec: PallasCallRecord, spec, shape: Sequence[int],
                 "the block (the repo kernels min() their block args)"))
     if diags or index_map is None:
         return diags   # non-dividing blocks poison the bounds math below
+    # MK-K008 on the realized geometry: a dividing block that sits
+    # exactly where the ladder clamp lands a ragged dim, under half the
+    # pow2 target — the recorded call ran the degraded grid (warning
+    # only; the bounds/coverage checks below still run)
+    for d, (dim, bs) in enumerate(zip(shape, block)):
+        if bs is None or bs >= dim:
+            continue
+        t = max((t for t in _POW2_TARGETS if t <= dim), default=0)
+        if t and bs == _largest_divisor(dim, t):
+            diags.extend(check_block_clamp(rec.name, f"{what} dim {d}",
+                                           dim, t))
 
     counts = _block_counts(shape, block)
     n_points = 1
@@ -282,5 +325,6 @@ def check_repo_kernels() -> list[Diagnostic]:
     return diags
 
 
-__all__ = ["PallasCallRecord", "check_kernel_builder", "check_pallas_call",
-           "check_repo_kernels", "record_pallas_calls"]
+__all__ = ["PallasCallRecord", "check_block_clamp", "check_kernel_builder",
+           "check_pallas_call", "check_repo_kernels",
+           "record_pallas_calls"]

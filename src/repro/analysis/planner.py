@@ -1,0 +1,403 @@
+"""mkplan: static launch-configuration planning (rule family ``MK-T``).
+
+MKPipe's compiler does not pick one optimization — it walks the whole
+throughput/resource tradeoff space from static estimates before
+anything is built (paper Sec. 5–6).  This module is that move for the
+launch space: `enumerate_configs` walks the discrete knobs a human
+currently hand-picks (``--stages/--microbatch/--schedule/
+--virtual-stages/--model-par/--kernels``), `score` prices every
+candidate with the unified cost models in `repro.analysis.costmodel`
+*without compiling anything*, and `frontier` marks the
+statically-dominated points, leaving the Pareto frontier over
+
+- ``step_time_s``   — the schedule model: M pipeline periods of the
+  padded bottleneck stage, inflated by the fill/drain bubble,
+- ``peak_bytes``    — model state (params + grads + Adam moments, split
+  over stage × model) plus the schedule's peak activation stash,
+- ``collective_bytes`` — the analytic per-axis traffic model (stage
+  ppermute + model psum + data grad all-reduce).
+
+`check_launch` turns the comparison into structured diagnostics so
+`launch.train --verify`, `tools/mklint.py --plan` and `launch.choose`
+can *warn* (never refuse) when the chosen config is dominated:
+
+- MK-T001 — chosen config dominated by a same-mesh alternative;
+- MK-T002 — the peak-memory model exceeds ``--mem-budget``;
+- MK-T003 — interleaved v>1 strictly lowers the bubble at this (M, S);
+- MK-T004 — the tensor-parallel degree prices worse than spending the
+  same devices on pipeline stages.
+
+Like everything under `repro.analysis`, this module imports no jax at
+module level; scoring lazily imports `repro.train.pipeline` (which
+does) only when a candidate is actually priced.  Formulas and symbols:
+docs/cost-models.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+from .costmodel import (SCHEDULES, analytic_block_cost,
+                        estimate_collective_bytes, model_state_bytes,
+                        pipeline_bubble_fraction)
+from .diagnostics import Diagnostic, Report, warning
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchCandidate:
+    """One point of the discrete launch space (one train.py argv)."""
+    stages: int
+    microbatch: int
+    schedule: str
+    virtual_stages: int = 1
+    tp: int = 1
+    dp: int = 1
+    kernels: str = "off"
+
+    @property
+    def n_devices(self) -> int:
+        return self.stages * self.tp * self.dp
+
+    @property
+    def mesh_shape(self) -> tuple[int, int, int]:
+        """(stage, data, model) — the train.py 3D mesh."""
+        return (self.stages, self.dp, self.tp)
+
+    def label(self) -> str:
+        parts = [f"stages={self.stages}", f"micro={self.microbatch}",
+                 f"schedule={self.schedule}"]
+        if self.virtual_stages > 1:
+            parts.append(f"v={self.virtual_stages}")
+        parts += [f"tp={self.tp}", f"dp={self.dp}"]
+        if self.kernels != "off":
+            parts.append(f"kernels={self.kernels}")
+        return " ".join(parts)
+
+    def argv(self, arch: str, *, global_batch: int, seq_len: int,
+             smoke: bool = False) -> list[str]:
+        """The `repro.launch.train` argv realizing this candidate."""
+        out = ["python", "-m", "repro.launch.train", "--arch", arch]
+        if smoke:
+            out.append("--smoke")
+        out += ["--global-batch", str(global_batch),
+                "--seq-len", str(seq_len)]
+        if self.stages > 1 or self.tp > 1:
+            out += ["--stages", str(self.stages),
+                    "--microbatch", str(self.microbatch),
+                    "--mesh-shape", ",".join(map(str, self.mesh_shape)),
+                    "--axes", "stage,data,model",
+                    "--schedule", self.schedule]
+            if self.virtual_stages > 1:
+                out += ["--virtual-stages", str(self.virtual_stages)]
+        if self.kernels != "off":
+            out += ["--kernels", self.kernels]
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Score:
+    """The three frontier coordinates of one candidate (lower is
+    better on every axis)."""
+    step_time_s: float
+    peak_bytes: float
+    collective_bytes: float
+
+    def as_tuple(self) -> tuple[float, float, float]:
+        return (self.step_time_s, self.peak_bytes, self.collective_bytes)
+
+    def dominates(self, other: "Score") -> bool:
+        """Weakly better on every coordinate, strictly on at least one
+        (equal score vectors do not dominate each other)."""
+        a, b = self.as_tuple(), other.as_tuple()
+        return all(x <= y for x, y in zip(a, b)) and a != b
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoredCandidate:
+    candidate: LaunchCandidate
+    score: Score
+    bubble: float
+    peak_activation_bytes: float
+    collective_by_axis: dict[str, float]
+    dominated_by: LaunchCandidate | None = None
+
+    @property
+    def on_frontier(self) -> bool:
+        return self.dominated_by is None
+
+
+def enumerate_configs(cfg, n_devices: int, *, global_batch: int,
+                      schedules: Sequence[str] = SCHEDULES,
+                      max_microbatch: int | None = None,
+                      max_virtual_stages: int | None = None,
+                      kernels_modes: Sequence[str] = ("off",),
+                      ) -> list[LaunchCandidate]:
+    """Walk the discrete launch space for `cfg` on an `n_devices` mesh.
+
+    Factorizations ``stages × tp × dp = n_devices`` with every knob
+    feasible by the launch arithmetic the MK-L rules enforce: stages (and
+    stages × virtual_stages) within ``cfg.n_repeats``, tp dividing the
+    attention heads and FFN width (the Megatron shard constraint), dp
+    dividing the global batch, the microbatch count dividing the
+    per-shard batch.  Flat schedules enumerate at v=1; ``"interleaved"``
+    enumerates v ≥ 2 (v=1 interleaved is 1f1b).  Single-stage
+    factorizations collapse to one (gpipe, M=1) candidate — there is no
+    pipeline to schedule.
+    """
+    heads = getattr(cfg, "num_kv_heads", 1) or 1
+    d_ff = getattr(cfg, "d_ff", 1) or 1
+    out: list[LaunchCandidate] = []
+    for stages in _divisors(n_devices):
+        if stages > cfg.n_repeats:
+            continue
+        for tp in _divisors(n_devices // stages):
+            if heads % tp or d_ff % tp:
+                continue
+            dp = n_devices // (stages * tp)
+            if global_batch % dp:
+                continue
+            local_batch = global_batch // dp
+            micros = [m for m in _divisors(local_batch)
+                      if max_microbatch is None or m <= max_microbatch]
+            for kernels in kernels_modes:
+                if stages == 1:
+                    out.append(LaunchCandidate(
+                        stages=1, microbatch=1, schedule="gpipe",
+                        tp=tp, dp=dp, kernels=kernels))
+                    continue
+                for micro in micros:
+                    for schedule in schedules:
+                        if schedule != "interleaved":
+                            out.append(LaunchCandidate(
+                                stages=stages, microbatch=micro,
+                                schedule=schedule, tp=tp, dp=dp,
+                                kernels=kernels))
+                            continue
+                        v_hi = cfg.n_repeats // stages
+                        if max_virtual_stages is not None:
+                            v_hi = min(v_hi, max_virtual_stages)
+                        for v in range(2, v_hi + 1):
+                            out.append(LaunchCandidate(
+                                stages=stages, microbatch=micro,
+                                schedule="interleaved", virtual_stages=v,
+                                tp=tp, dp=dp, kernels=kernels))
+    return out
+
+
+def score(cfg, cand: LaunchCandidate, *, global_batch: int, seq_len: int,
+          block_costs: Sequence[float] | None = None) -> ScoredCandidate:
+    """Price one candidate with the unified cost models — no compiling.
+
+    ``block_costs`` (per pattern position, one repeat, *unsharded*)
+    defaults to the analytic roofline estimate so scoring stays
+    jax-free; pass `costmodel.estimate_block_costs(cfg, mb, seq, tp=1)`
+    measured costs for XLA-cost-analysis pricing.  Costs are divided by
+    the candidate's tp (the Megatron shards split FLOPs and bytes
+    evenly), then `plan_pipeline` partitions stages on them:
+
+    - ``step_time_s = M · v·padded_stage_time / (1 − bubble)`` — M
+      pipeline periods of the (padded, per-device) bottleneck stage,
+      inflated by the schedule's fill/drain bubble; for S=1 this is just
+      the whole stack's time;
+    - ``peak_bytes = model_state + peak_activation_stash``;
+    - ``collective_bytes = Σ_axis estimate_collective_bytes``.
+    """
+    from repro.train.pipeline import plan_pipeline
+
+    mb = max(global_batch // cand.dp // cand.microbatch, 1)
+    if block_costs is None:
+        block_costs = [analytic_block_cost(cfg, pos, mb * seq_len)
+                       for pos in range(len(cfg.pattern))]
+    costs = [c / cand.tp for c in block_costs]
+    plan = plan_pipeline(
+        cfg, cand.stages, cand.microbatch, global_batch=global_batch,
+        seq_len=seq_len, dp=cand.dp, tp=cand.tp, schedule=cand.schedule,
+        virtual_stages=cand.virtual_stages, block_costs=costs)
+    denom = max(1.0 - plan.bubble, 1e-9)
+    step_time = cand.microbatch * plan.padded_stage_time_s / denom
+    coll = estimate_collective_bytes(
+        cfg, n_stages=cand.stages, n_micro=cand.microbatch,
+        virtual_stages=cand.virtual_stages, tp=cand.tp, dp=cand.dp,
+        global_batch=global_batch, seq_len=seq_len)
+    peak = (plan.peak_activation_bytes
+            + model_state_bytes(cfg, cand.stages, cand.tp))
+    return ScoredCandidate(
+        candidate=cand,
+        score=Score(step_time_s=step_time, peak_bytes=peak,
+                    collective_bytes=sum(coll.values())),
+        bubble=plan.bubble,
+        peak_activation_bytes=plan.peak_activation_bytes,
+        collective_by_axis=coll)
+
+
+def frontier(scored: Iterable[ScoredCandidate]) -> list[ScoredCandidate]:
+    """Mark statically-dominated points: each dominated candidate gets
+    ``dominated_by`` set to one dominating candidate (a frontier point
+    when possible); the Pareto frontier is the rest.  Returns the full
+    list sorted by the time model, frontier first."""
+    pts = list(scored)
+    out: list[ScoredCandidate] = []
+    for sc in pts:
+        doms = [o for o in pts if o.score.dominates(sc.score)]
+        if doms:
+            # prefer a dominator that is itself undominated, so the
+            # pointer always names a frontier point when one exists
+            top = [o for o in doms
+                   if not any(p.score.dominates(o.score) for p in pts)]
+            best = min(top or doms,
+                       key=lambda o: o.score.as_tuple())
+            sc = dataclasses.replace(sc, dominated_by=best.candidate)
+        out.append(sc)
+    return sorted(out, key=lambda s: (not s.on_frontier,
+                                      s.score.as_tuple()))
+
+
+def plan_frontier(cfg, n_devices: int, *, global_batch: int,
+                  seq_len: int,
+                  block_costs: Sequence[float] | None = None,
+                  **enum_kwargs) -> list[ScoredCandidate]:
+    """enumerate → score → frontier, one call (the CLI entry path)."""
+    cands = enumerate_configs(cfg, n_devices, global_batch=global_batch,
+                              **enum_kwargs)
+    return frontier([score(cfg, c, global_batch=global_batch,
+                           seq_len=seq_len, block_costs=block_costs)
+                     for c in cands])
+
+
+def _find(scored: Sequence[ScoredCandidate],
+          pred: Callable[[LaunchCandidate], bool]
+          ) -> list[ScoredCandidate]:
+    return [s for s in scored if pred(s.candidate)]
+
+
+def check_launch(cfg, chosen: LaunchCandidate, *, global_batch: int,
+                 seq_len: int, mem_budget_bytes: float | None = None,
+                 block_costs: Sequence[float] | None = None,
+                 scored: Sequence[ScoredCandidate] | None = None,
+                 ) -> list[Diagnostic]:
+    """Compare a chosen launch config against the scored space (MK-T).
+
+    Every MK-T diagnostic is a *warning* — the models are rankings, not
+    measurements, so planners advise and launches proceed.  Pass
+    ``scored`` to reuse an already-scored space (must include `chosen`);
+    otherwise the chosen config's device count is enumerated here.
+    """
+    if scored is None:
+        scored = plan_frontier(cfg, chosen.n_devices,
+                               global_batch=global_batch,
+                               seq_len=seq_len, block_costs=block_costs,
+                               kernels_modes=(chosen.kernels,))
+    mine = _find(scored, lambda c: c == chosen)
+    if not mine:
+        mine = [score(cfg, chosen, global_batch=global_batch,
+                      seq_len=seq_len, block_costs=block_costs)]
+        scored = frontier([*scored, mine[0]])
+        mine = _find(scored, lambda c: c == chosen)
+    sc = mine[0]
+    cand = sc.candidate
+    loc = cand.label()
+    diags: list[Diagnostic] = []
+
+    # MK-T001: a same-mesh alternative (identical stages × data × model
+    # factorization — only the schedule knobs differ) dominates the
+    # chosen point on all three models
+    same_mesh = _find(scored,
+                      lambda c: c.mesh_shape == cand.mesh_shape
+                      and c.kernels == cand.kernels and c != cand)
+    doms = [o for o in same_mesh if o.score.dominates(sc.score)]
+    if doms:
+        best = min(doms, key=lambda o: o.score.as_tuple())
+        diags.append(warning(
+            "MK-T001", loc,
+            f"statically dominated by {best.candidate.label()} on the "
+            f"same mesh: step-time model "
+            f"{best.score.step_time_s:.3g}s <= {sc.score.step_time_s:.3g}s, "
+            f"peak-bytes {best.score.peak_bytes:.3g} <= "
+            f"{sc.score.peak_bytes:.3g}, collective-bytes "
+            f"{best.score.collective_bytes:.3g} <= "
+            f"{sc.score.collective_bytes:.3g}",
+            hint="same devices, same mesh — switch the schedule knobs: "
+                 + " ".join(best.candidate.argv(
+                     cfg.name, global_batch=global_batch,
+                     seq_len=seq_len))))
+
+    # MK-T002: the peak-memory model exceeds the budget
+    if mem_budget_bytes is not None and sc.score.peak_bytes \
+            > mem_budget_bytes:
+        diags.append(warning(
+            "MK-T002", loc,
+            f"peak-memory model {sc.score.peak_bytes / 2**30:.2f} GiB "
+            f"(model state + activation stash) exceeds the budget "
+            f"{mem_budget_bytes / 2**30:.2f} GiB",
+            hint="raise --microbatch (shrinks each stashed microbatch), "
+                 "switch gpipe → 1f1b/interleaved (caps the stash), or "
+                 "spread state over more stages/model shards"))
+
+    # MK-T003: a flat schedule was chosen but interleaving the same
+    # (M, S) strictly lowers the analytic bubble and the depth allows it
+    if cand.stages > 1 and cand.virtual_stages == 1 \
+            and 2 * cand.stages <= cfg.n_repeats:
+        flat = pipeline_bubble_fraction(cand.microbatch, cand.stages)
+        best_v, best_bubble = 0, flat
+        for v in range(2, cfg.n_repeats // cand.stages + 1):
+            b = pipeline_bubble_fraction(cand.microbatch, cand.stages,
+                                         virtual_stages=v)
+            if b < best_bubble:
+                best_v, best_bubble = v, b
+        if best_v:
+            diags.append(warning(
+                "MK-T003", loc,
+                f"interleaved virtual_stages={best_v} lowers the bubble "
+                f"model to {best_bubble:.3f} (from {flat:.3f}) at "
+                f"M={cand.microbatch}, S={cand.stages}",
+                hint=f"--schedule interleaved --virtual-stages {best_v} "
+                     f"(peak stash rises to the interleaved bound — "
+                     f"check MK-T002 against your budget)"))
+
+    # MK-T004: the chosen tp degree prices worse than spending those
+    # devices on pipeline stages (same device count, same kernels)
+    if cand.tp > 1:
+        alts = _find(scored,
+                     lambda c: c.tp < cand.tp and c.stages > cand.stages
+                     and c.n_devices == cand.n_devices
+                     and c.kernels == cand.kernels)
+        better = [o for o in alts
+                  if o.score.step_time_s < sc.score.step_time_s]
+        if better:
+            best = min(better, key=lambda o: o.score.step_time_s)
+            diags.append(warning(
+                "MK-T004", loc,
+                f"tp={cand.tp} prices {sc.score.step_time_s:.3g}s on the "
+                f"block-cost model; {best.candidate.label()} prices "
+                f"{best.score.step_time_s:.3g}s with the same "
+                f"{cand.n_devices} devices",
+                hint="the model axis pays psums every block while the "
+                     "stage axis pays one ppermute per tick — prefer "
+                     "deeper pipeline: " + " ".join(best.candidate.argv(
+                         cfg.name, global_batch=global_batch,
+                         seq_len=seq_len))))
+    return diags
+
+
+def check_plan(cfg, chosen: LaunchCandidate, *, global_batch: int,
+               seq_len: int, mem_budget_bytes: float | None = None,
+               block_costs: Sequence[float] | None = None) -> Report:
+    """`check_launch` wrapped in a `Report` (mklint-style target line)."""
+    import time
+    t0 = time.perf_counter()
+    report = Report(target=f"plan {cfg.name} {chosen.label()}")
+    report.extend(check_launch(cfg, chosen, global_batch=global_batch,
+                               seq_len=seq_len,
+                               mem_budget_bytes=mem_budget_bytes,
+                               block_costs=block_costs))
+    report.wall_s = time.perf_counter() - t0
+    return report
+
+
+__all__ = ["LaunchCandidate", "Score", "ScoredCandidate", "check_launch",
+           "check_plan", "enumerate_configs", "frontier",
+           "plan_frontier", "score"]

@@ -93,9 +93,10 @@ def verify_launch(arch: str, *, smoke: bool = True, global_batch: int = 8,
     from repro.launch.mesh import make_mesh, make_train_mesh
     from repro.models.common import tp_align
     from repro.models.transformer import init_params
-    from repro.train.pipeline import _analytic_block_cost, plan_pipeline
+    from repro.train.pipeline import plan_pipeline
 
     from .collectives import check_shard_map_islands
+    from .costmodel import analytic_block_cost as _analytic_block_cost
     from .dataflow import check_step_program
     from .shardspec import check_spec_tree
 

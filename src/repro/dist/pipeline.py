@@ -95,135 +95,23 @@ def balance_stages(times: Sequence[float], n_stages: int) -> list[int]:
     return sizes[::-1]
 
 
-SCHEDULES = ("gpipe", "1f1b", "interleaved")
-
-
-def _check_virtual_stages(schedule: str, virtual_stages: int) -> int:
-    v = int(virtual_stages)
-    if v < 1:
-        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
-    if v != 1 and schedule != "interleaved":
-        raise ValueError(
-            f"virtual_stages={v} requires schedule='interleaved', got "
-            f"{schedule!r}")
-    return v
-
-
-def pipeline_bubble_fraction(n_micro: int, n_stages: int,
-                             stage_times: Sequence[float] | None = None,
-                             virtual_stages: int = 1) -> float:
-    """Analytic fill/drain bubble fraction of device-time idle.
-
-    Uniform stages (``stage_times=None``): (S-1) / (M + S-1) — with M
-    microbatches over S equal stages, either step program spans
-    2·(M + S - 1) ticks of which 2·M per stage are useful.  The formula
-    holds for *both* flat schedules (GPipe and 1F1B): they differ in
-    *peak activation memory* (`pipeline_peak_inflight`), not in bubble.
-
-    ``virtual_stages=v > 1`` models the interleaved-1F1B schedule: each
-    device holds v non-contiguous chunks of the layer stack (virtual
-    stage q = c·S + s lives on device s), so one "microbatch unit" of
-    per-device work shrinks to 1/v of a flat stage pass while the fill
-    ramp still crosses only S devices — the uniform bubble drops to
-    **(S-1) / (v·M + S-1)**.
-
-    Heterogeneous stages (``stage_times=[t_0, .., t_{S-1}]``, or one
-    entry per *virtual* stage — v·S of them — when ``virtual_stages=v``):
-    the pipeline period is set by the bottleneck device, whose
-    per-microbatch time is ``D_s = Σ_c t_{c·S+s}`` summed over its
-    chunks.  The span is ``(vM−1)·max_s D_s/v + Σ_s D_s/v`` (fill
-    through every device once at chunk granularity, then vM−1 bottleneck
-    chunk periods) and the useful device-time is ``M·Σ_s D_s``:
-
-        bubble = 1 − vM·Σ D_s / (S·((vM−1)·max D + Σ D))
-
-    which collapses to the uniform interleaved closed form when all
-    chunks cost the same, and to the flat heterogeneous form
-    ``1 − M·Σ t_s / (S·((M−1)·max t + Σ t))`` at v=1.  Heterogeneous
-    plans must price their bubble at least this way — the uniform
-    formula is optimistic whenever one device is slower than the rest.
-    Note the span models *asynchronous* stage starts (a stage forwards
-    as soon as its input arrives); `pipeline_apply_microbatched`
-    advances stages in lockstep through a per-tick ring ppermute, so its
-    realized span is the still-larger ``(M+S−1)·max_s t_s`` — this
-    overload is the schedule-independent lower-bound model, the lockstep
-    penalty on top of it is the same fill/drain geometry the uniform
-    measured-vs-analytic comparison already carries.
-    """
-    if n_micro < 1 or n_stages < 1:
-        raise ValueError("need n_micro >= 1 and n_stages >= 1")
-    v = int(virtual_stages)
-    if v < 1:
-        raise ValueError(f"need virtual_stages >= 1, got {virtual_stages}")
-    if stage_times is None:
-        return (n_stages - 1) / (v * n_micro + n_stages - 1)
-    ts = [float(t) for t in stage_times]
-    if len(ts) != v * n_stages:
-        raise ValueError(
-            f"got {len(ts)} stage_times for n_stages={n_stages} × "
-            f"virtual_stages={v} (want one per virtual stage)")
-    if any(t < 0.0 for t in ts) or max(ts, default=0.0) <= 0.0:
-        raise ValueError(f"stage_times must be >= 0 with a positive "
-                         f"bottleneck, got {ts}")
-    # per-device time across its chunks: virtual stage q = c·S + s
-    dev = [sum(ts[c * n_stages + s] for c in range(v))
-           for s in range(n_stages)]
-    total = sum(dev)
-    span = (v * n_micro - 1) * max(dev) + total
-    return 1.0 - (v * n_micro * total) / (n_stages * span)
-
-
-def pipeline_peak_inflight(n_micro: int, n_stages: int,
-                           schedule: str = "gpipe",
-                           virtual_stages: int = 1) -> int:
-    """Peak in-flight micro-step activations a device must stash.
-
-    A device holds one stashed activation per (chunk, microbatch) whose
-    forward it has run (or received) but whose backward it has not yet
-    retired:
-
-    - ``"gpipe"``: every forward completes before any backward starts, so
-      the stash peaks at **M** on every stage;
-    - ``"1f1b"``: stage s starts draining after min(M, S-s) warmup
-      forwards and then strictly alternates forward/backward, bounding its
-      stash at min(M, S-s) — **min(M, S)** in the worst case (stage 0),
-      independent of the microbatch count;
-    - ``"interleaved"`` with v chunks per device: the steady state holds
-      up to v chunk activations of up to S microbatches plus the S-1
-      transfers in flight across the chunk boundary, and the microbatch
-      next in line to retire may keep up to v more chunks stashed while
-      its backward diagonal waits for a free slot — bounding the stash
-      at **min(v·M, v·S + S - 1 + v)**.  v=1 degenerates to the exact
-      1f1b bound min(M, S).
-
-    Returns the worst-case device's count; multiply by the
-    per-micro-step activation bytes for a peak-memory estimate
-    (`pipeline_peak_activation_bytes`).
-    """
-    if schedule not in SCHEDULES:
-        raise ValueError(f"unknown schedule {schedule!r}; want {SCHEDULES}")
-    if n_micro < 1 or n_stages < 1:
-        raise ValueError("need n_micro >= 1 and n_stages >= 1")
-    v = _check_virtual_stages(schedule, virtual_stages)
-    if schedule == "gpipe":
-        return n_micro
-    if schedule == "interleaved" and v > 1:
-        return min(v * n_micro, v * n_stages + n_stages - 1 + v)
-    return min(n_micro, n_stages)
-
-
-def pipeline_peak_activation_bytes(n_micro: int, n_stages: int,
-                                   schedule: str,
-                                   microbatch_bytes: float,
-                                   virtual_stages: int = 1) -> float:
-    """Analytic peak activation-stash bytes per stage device:
-    `pipeline_peak_inflight` × the per-microbatch activation size (the
-    bytes of one microbatch's stage-boundary activations, e.g.
-    mb · seq · d_model · itemsize for the residual stream)."""
-    return pipeline_peak_inflight(n_micro, n_stages, schedule,
-                                  virtual_stages=virtual_stages) \
-        * float(microbatch_bytes)
-
+# The analytic schedule models (bubble fraction, peak inflight/activation
+# bytes, the step-program stash simulator) and the PIPE_* op codes live in
+# `repro.analysis.costmodel` — the unified cost-model API — and are
+# re-exported here so existing import sites keep working.  This module
+# keeps the *executors*; the pricing moved behind the typed surface.
+from repro.analysis.costmodel import (  # noqa: F401  (re-exports)
+    PIPE_BWD,
+    PIPE_FWD,
+    PIPE_IDLE,
+    SCHEDULES,
+    _check_virtual_stages,
+    _program_books,
+    pipeline_bubble_fraction,
+    pipeline_peak_activation_bytes,
+    pipeline_peak_inflight,
+    program_peak_inflight,
+)
 
 # ------------------------------------------------------- step programs
 # One pipeline tick = one stage executing one micro-step (a forward or a
@@ -232,8 +120,8 @@ def pipeline_peak_activation_bytes(n_micro: int, n_stages: int,
 # per stage, which micro-step runs — the statically unrolled schedule the
 # executors scan over.  Flat schedules use (op, m) entries; interleaved
 # programs use (op, m, c) with c the chunk index (virtual stage
-# q = c·S + s lives on device s).
-PIPE_IDLE, PIPE_FWD, PIPE_BWD = 0, 1, 2
+# q = c·S + s lives on device s).  Op codes PIPE_IDLE/PIPE_FWD/PIPE_BWD
+# are defined in `repro.analysis.costmodel` (imported above).
 
 
 def make_step_program(n_micro: int, n_stages: int,
@@ -437,71 +325,6 @@ def _check_program(prog, n_micro: int, n_stages: int,
         raise DiagnosticError(
             diags, prefix=f"invalid step program "
                           f"(n_micro={n_micro}, n_stages={n_stages}):")
-
-
-def _program_books(prog, n_stages: int):
-    """(f_tick, b_tick) keyed by (virtual stage q, microbatch): q = s for
-    flat (op, m) entries, q = c·n_stages + s for chunked (op, m, c)."""
-    f_tick: dict = {}
-    b_tick: dict = {}
-    for t, row in enumerate(prog):
-        for s, entry in enumerate(row):
-            op, m = entry[0], entry[1]
-            q = (entry[2] * n_stages + s) if len(entry) > 2 else s
-            if op == PIPE_FWD:
-                f_tick[(q, m)] = t
-            elif op == PIPE_BWD:
-                b_tick[(q, m)] = t
-    return f_tick, b_tick
-
-
-def program_peak_inflight(prog, n_stages: int) -> int:
-    """Peak live stash occupancy over all devices of a step program.
-
-    An entry (q, m) becomes live on device q mod S when its stash slot
-    is written — at F(q, m) for the injecting virtual stage 0, at
-    F(q-1, m) + 1 otherwise (ppermute arrival) — and is retired by
-    B(q, m).
-
-    Flat (op, m) programs report the peak slot *span*
-    max(live) - min(live) + 1: their executors key slots by ``m % K``,
-    and collisions are impossible iff K ≥ that span (for the programs
-    built here it equals `pipeline_peak_inflight`).  Chunked (op, m, c)
-    interleaved programs report the peak live *count*: their executor
-    allocates slots from a per-device free list replayed off the
-    program, so the count is exactly the slots it needs.
-    """
-    chunked = any(len(entry) > 2
-                  for row in prog for entry in row
-                  if entry[0] != PIPE_IDLE)
-    f_tick, b_tick = _program_books(prog, n_stages)
-    peak = 0
-    for s in range(n_stages):
-        events = []       # (tick, +1 push (q, m) / -1 pop (q, m))
-        for (q, m), t in f_tick.items():
-            if (q + 1) % n_stages == s and ((q + 1, m) in f_tick
-                                            or (q + 1, m) in b_tick):
-                events.append((t + 1, 1, (q + 1, m)))
-            if q == 0 and s == 0:
-                events.append((t, 1, (q, m)))
-        for (q, m), t in b_tick.items():
-            if q % n_stages == s:
-                events.append((t, -1, (q, m)))
-        live: set = set()
-        # pushes (arrivals) land before the tick's pop (the executors
-        # apply ppermute arrivals first, then run the event)
-        for t, kind, qm in sorted(events, key=lambda e: (e[0], -e[1])):
-            if kind == 1:
-                live.add(qm)
-                if live:
-                    if chunked:
-                        peak = max(peak, len(live))
-                    else:
-                        ms = [m for _, m in live]
-                        peak = max(peak, max(ms) - min(ms) + 1)
-            else:
-                live.discard(qm)
-    return peak
 
 
 def pipeline_apply(stage_fn: Callable[[Tree, Any], Any], stage_params: Tree,

@@ -61,41 +61,59 @@ def _divisor(n: int, target: int) -> int:
     return d
 
 
-def block_config(kernel: str, shape: tuple[int, ...], dtype) -> dict:
+def block_config(kernel: str, shape: tuple[int, ...], dtype,
+                 phase: str = "fwd") -> dict:
     """Block sizes for one kernel call: tuned-cache entry if present,
     else the kernel defaults.  `shape` is the kernel-local operand shape
     (tp-local inside islands); lookup is keyed on it plus the manual tp
     degree, so a tuned pp×tp island shape never collides with the GSPMD
-    one."""
+    one.
+
+    ``phase="bwd"`` resolves the *backward* blocks (flash attention's
+    chunked VJP): a tuned bwd entry wins, otherwise the fallback to the
+    forward blocks is explicit here — not an implicit reuse inside the
+    VJP — so the tuner and the planner's kernel-footprint model price
+    the two phases separately."""
     from repro.dist.context import manual_tp_size
 
     from .tune import cached_config
     cfg = dict(_DEFAULTS.get(kernel, {}))
-    cfg.update(cached_config(kernel, shape, jnp.dtype(dtype).name,
-                             tp=manual_tp_size()))
+    tp = manual_tp_size()
+    name = jnp.dtype(dtype).name
+    cfg.update(cached_config(kernel, shape, name, tp=tp))
+    if phase == "bwd":
+        cfg.update(cached_config(kernel, shape, name, tp=tp, phase="bwd"))
     return cfg
 
 
 # ------------------------------------------------------- flash attention
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk,
+                  bwd_q_blk, bwd_kv_blk):
     return flash_attention(q, k, v, causal=causal, window=window,
                            kv_offset=kv_offset, q_blk=q_blk, kv_blk=kv_blk)
 
 
-def _flash_pallas_fwd(q, k, v, causal, window, kv_offset, q_blk, kv_blk):
-    out = _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk)
+def _flash_pallas_fwd(q, k, v, causal, window, kv_offset, q_blk, kv_blk,
+                      bwd_q_blk, bwd_kv_blk):
+    out = _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk,
+                        bwd_q_blk, bwd_kv_blk)
     # residuals: just q, k, v — the backward recomputes the online-softmax
     # statistics chunk-by-chunk (same memory-linear recompute strategy as
     # the XLA flash path; nothing O(S²) is saved)
     return out, (q, k, v)
 
 
-def _flash_pallas_bwd(causal, window, kv_offset, q_blk, kv_blk, res, dout):
+def _flash_pallas_bwd(causal, window, kv_offset, q_blk, kv_blk,
+                      bwd_q_blk, bwd_kv_blk, res, dout):
+    # the chunked recompute runs at its *own* tuned block sizes
+    # (block_config(phase="bwd") — equal to the forward's unless a bwd
+    # entry was tuned)
     q, k, v = res
-    out, lse = L._flash_fwd_scan(q, k, v, causal, window, q_blk, kv_blk,
-                                 kv_offset)
-    return L._flash_vjp_bwd(causal, window, q_blk, kv_blk, kv_offset,
+    out, lse = L._flash_fwd_scan(q, k, v, causal, window, bwd_q_blk,
+                                 bwd_kv_blk, kv_offset)
+    return L._flash_vjp_bwd(causal, window, bwd_q_blk, bwd_kv_blk,
+                            kv_offset,
                             (q, k, v, out.astype(q.dtype), lse), dout)
 
 
@@ -112,9 +130,13 @@ def flash_mha(q, k, v, *, causal: bool, window: int = 0,
     B, Sq, Hq, D = q.shape
     Skv = k.shape[1]
     cfg = block_config("flash_attention", q.shape, q.dtype)
+    bcfg = block_config("flash_attention", q.shape, q.dtype, phase="bwd")
     q_blk = _divisor(Sq, cfg["q_blk"])
     kv_blk = _divisor(Skv, cfg["kv_blk"])
-    return _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk)
+    bwd_q_blk = _divisor(Sq, bcfg["q_blk"])
+    bwd_kv_blk = _divisor(Skv, bcfg["kv_blk"])
+    return _flash_pallas(q, k, v, causal, window, kv_offset, q_blk, kv_blk,
+                         bwd_q_blk, bwd_kv_blk)
 
 
 # ------------------------------------------------------------- fused MLP

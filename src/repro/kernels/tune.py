@@ -15,7 +15,9 @@ shape, dtype, tp degree) the tuner:
    `time_fn` (interpret mode on CPU — a relative ordering; on real TPUs
    the same tuner runs with ``interpret=False``),
 4. persists the winner in a versioned JSON cache keyed by
-   ``kernel|shape|dtype|tp``.
+   ``kernel|shape|dtype|tp|phase`` — backward block sizes
+   (``phase="bwd"``, flash attention's chunked VJP) are tuned and
+   stored explicitly rather than silently reusing the forward chunks.
 
 `repro.kernels.dispatch.block_config` consults `cached_config` at trace
 time: cache hit → tuned blocks; miss, stale, or corrupt → kernel
@@ -44,7 +46,10 @@ from typing import Any, Callable
 
 import numpy as np
 
-CACHE_VERSION = 1
+# v2: cache keys carry the phase (``|fwd`` / ``|bwd``) so backward block
+# sizes are tuned and stored explicitly instead of silently reusing the
+# forward chunks; v1 caches degrade to empty (retune) by design
+CACHE_VERSION = 2
 DEFAULT_CACHE = os.path.join("results", "kernel_tune.json")
 
 # candidate block sizes are divisors of the blocked dim nearest these
@@ -66,6 +71,12 @@ PARAM_DIMS: dict[str, dict[str, int]] = {
 
 KERNELS = tuple(PARAM_DIMS)
 
+# kernels whose *backward* consumes block sizes: flash attention's VJP
+# re-runs the chunked fwd scan + a chunked bwd scan with its own
+# (q_blk, kv_blk); the other kernels' backwards are blockless ref VJPs
+BWD_KERNELS = ("flash_attention",)
+PHASES = ("fwd", "bwd")
+
 
 def _divisor(n: int, target: int) -> int:
     d = max(min(target, n), 1)
@@ -75,8 +86,11 @@ def _divisor(n: int, target: int) -> int:
 
 
 def cache_key(kernel: str, shape: tuple[int, ...], dtype: str,
-              tp: int = 1) -> str:
-    return f"{kernel}|{'x'.join(str(int(s)) for s in shape)}|{dtype}|tp{tp}"
+              tp: int = 1, phase: str = "fwd") -> str:
+    if phase not in PHASES:
+        raise ValueError(f"unknown phase {phase!r}; want {PHASES}")
+    return (f"{kernel}|{'x'.join(str(int(s)) for s in shape)}|{dtype}"
+            f"|tp{tp}|{phase}")
 
 
 def enumerate_candidates(kernel: str, shape: tuple[int, ...],
@@ -146,16 +160,58 @@ def _builder(kernel: str, shape: tuple[int, ...],
 
 
 def validate_candidate(kernel: str, shape: tuple[int, ...],
-                       config: dict[str, int]) -> list:
-    """MK-K screen one candidate.  Empty list ⇒ the geometry is sound
-    (blocks divide, index maps in bounds, outputs covered)."""
+                       config: dict[str, int],
+                       phase: str = "fwd") -> list:
+    """MK-K screen one candidate.  No *errors* ⇒ the geometry is sound
+    (blocks divide, index maps in bounds, outputs covered); degraded
+    geometries (MK-K008 clamp collapse) come back as warning-severity
+    diagnostics that flag but do not disqualify — filter with
+    `screen_errors` to decide legality.
+
+    ``phase="bwd"`` screens backward block configs: the chunked-VJP
+    kernels (`BWD_KERNELS`) reshape operands by the chunk sizes, so the
+    screen is divisibility (plus the clamp warning) — there is no
+    pallas_call to record."""
     if kernel not in PARAM_DIMS:
         return [f"unknown kernel {kernel!r}"]
     if set(config) != set(PARAM_DIMS[kernel]):
         return [f"config keys {sorted(config)} != expected "
                 f"{sorted(PARAM_DIMS[kernel])}"]
+    if phase == "bwd":
+        if kernel not in BWD_KERNELS:
+            return [f"kernel {kernel!r} has a blockless ref-VJP "
+                    f"backward; nothing to tune for phase='bwd'"]
+        diags: list = []
+        for param, axis in PARAM_DIMS[kernel].items():
+            n, b = int(shape[axis]), int(config[param])
+            if b < 1 or n % b:
+                diags.append(f"{param}={b} does not divide dim {n} "
+                             f"(shape {tuple(shape)})")
+        return diags + _clamp_warnings(kernel, shape, config)
     from repro.analysis.kernels import check_kernel_builder
     return check_kernel_builder(kernel, _builder(kernel, shape, config))
+
+
+def _clamp_warnings(kernel: str, shape: tuple[int, ...],
+                    config: dict[str, int]) -> list:
+    """MK-K008 for configs screened without a recorded pallas_call
+    (the bwd phase): flag block args sitting exactly where the ladder
+    clamp lands a ragged dim, under half the pow2 target."""
+    from repro.analysis.kernels import check_block_clamp
+    out: list = []
+    for param, axis in PARAM_DIMS[kernel].items():
+        n, b = int(shape[axis]), int(config.get(param, 0))
+        t = max((t for t in _TARGETS if t <= n), default=0)
+        if t and b == _divisor(n, t):
+            out.extend(check_block_clamp(kernel, f"{param} (bwd)", n, t))
+    return out
+
+
+def screen_errors(diags: list) -> list:
+    """Error-severity findings only: legacy strings count as errors,
+    warning Diagnostics (MK-K008) do not disqualify a candidate."""
+    return [d for d in diags
+            if not hasattr(d, "severity") or d.is_error]
 
 
 # -------------------------------------------------------------- timing
@@ -217,6 +273,42 @@ def _timed_call(kernel: str, shape: tuple[int, ...], dtype: str,
     raise ValueError(f"unknown tunable kernel {kernel!r}")
 
 
+def _timed_call_bwd(kernel: str, shape: tuple[int, ...], dtype: str,
+                    config: dict[str, int]):
+    """(fn, args) running the kernel's *backward* with `config`'s chunk
+    sizes.  flash attention's VJP is the chunked recompute in
+    `repro.models.layers` (`_flash_fwd_scan` + `_flash_vjp_bwd`) — a
+    raw pallas_call has no autodiff rule, so the backward is timed
+    directly at candidate chunk geometry rather than through jax.grad
+    of the kernel."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import layers as L
+
+    if kernel not in BWD_KERNELS:
+        raise ValueError(f"kernel {kernel!r} has a blockless ref-VJP "
+                         "backward; nothing to time for phase='bwd'")
+
+    def arr(*s):
+        n = int(np.prod(s))
+        return (jnp.arange(n, dtype=jnp.float32).reshape(*s) / n
+                ).astype(dtype)
+
+    B, S, Hq, D = shape
+    q, k = arr(B, S, Hq, D), arr(B, S, max(Hq // 2, 1), D)
+    dout = arr(B, S, Hq, D)
+    q_blk, kv_blk = config["q_blk"], config["kv_blk"]
+
+    @jax.jit
+    def bwd(q, k, v, dout):
+        out, lse = L._flash_fwd_scan(q, k, v, True, 0, q_blk, kv_blk, 0)
+        return L._flash_vjp_bwd(True, 0, q_blk, kv_blk, 0,
+                                (q, k, v, out.astype(q.dtype), lse), dout)
+
+    return bwd, (q, k, k, dout)
+
+
 # --------------------------------------------------------------- cache
 def load_cache(path: str | None = None) -> dict:
     """Read the tuned-config cache; any corruption (unreadable JSON,
@@ -250,15 +342,19 @@ _MEMO: dict[tuple[str, str | None], dict[str, int]] = {}
 
 
 def cached_config(kernel: str, shape: tuple[int, ...], dtype: str,
-                  tp: int = 1, path: str | None = None) -> dict[str, int]:
+                  tp: int = 1, phase: str = "fwd",
+                  path: str | None = None) -> dict[str, int]:
     """Read-only tuned-config lookup for `dispatch.block_config`.
 
-    Returns {} on miss, on a corrupt cache, and on a *stale* entry (one
-    that no longer passes the MK-K screen for its own key) — the caller
-    falls back to kernel defaults, and the next `tune` run overwrites
-    the bad entry.  Memoized per (key, path): the screen runs once per
-    process, not per trace."""
-    key = cache_key(kernel, shape, dtype, tp)
+    Keys carry the phase: ``phase="bwd"`` returns only explicitly tuned
+    backward blocks ({} when the backward was never tuned — the caller
+    decides the fallback, which `dispatch.block_config` makes the
+    forward blocks).  Returns {} on miss, on a corrupt cache, and on a
+    *stale* entry (one that no longer passes the MK-K error screen for
+    its own key) — the caller falls back, and the next `tune` run
+    overwrites the bad entry.  Memoized per (key, path): the screen
+    runs once per process, not per trace."""
+    key = cache_key(kernel, shape, dtype, tp, phase)
     memo_key = (key, path)
     if memo_key in _MEMO:
         return dict(_MEMO[memo_key])
@@ -267,7 +363,8 @@ def cached_config(kernel: str, shape: tuple[int, ...], dtype: str,
     if isinstance(entry, dict) and isinstance(entry.get("config"), dict):
         cand = {k: v for k, v in entry["config"].items()
                 if isinstance(v, int) and v > 0}
-        if not validate_candidate(kernel, tuple(shape), cand):
+        if not screen_errors(validate_candidate(kernel, tuple(shape),
+                                                cand, phase=phase)):
             config = cand
     _MEMO[memo_key] = config
     return dict(config)
@@ -275,35 +372,49 @@ def cached_config(kernel: str, shape: tuple[int, ...], dtype: str,
 
 # ---------------------------------------------------------------- tune
 def tune(kernel: str, shape: tuple[int, ...], dtype: str = "float32",
-         tp: int = 1, path: str | None = None, repeats: int = 3,
-         max_candidates: int = 16, verbose: bool = False) -> dict:
-    """Tune one (kernel, shape, dtype, tp) cell and persist the winner.
+         tp: int = 1, phase: str = "fwd", path: str | None = None,
+         repeats: int = 3, max_candidates: int = 16,
+         verbose: bool = False) -> dict:
+    """Tune one (kernel, shape, dtype, tp, phase) cell and persist the
+    winner.  ``phase="bwd"`` tunes the backward's own block sizes
+    (`BWD_KERNELS` only) and stores them under the phase-keyed cache
+    key — `dispatch.block_config(phase="bwd")` picks them up, and falls
+    back to the forward blocks explicitly when the backward was never
+    tuned.
 
-    Returns the cache entry: ``{"config", "us", "n_candidates"}``."""
+    Candidates are disqualified only by MK-K *errors*; warning-severity
+    findings (MK-K008 degraded clamp geometry) stay legal and are
+    reported for the winner.  Returns the cache entry:
+    ``{"config", "us", "n_candidates"}``."""
     shape = tuple(int(s) for s in shape)
     candidates = enumerate_candidates(kernel, shape,
                                       max_candidates=max_candidates)
-    legal = [c for c in candidates if not validate_candidate(
-        kernel, shape, c)]
+    legal = [c for c in candidates if not screen_errors(
+        validate_candidate(kernel, shape, c, phase=phase))]
     if not legal:
         raise ValueError(
-            f"no candidate block config for {kernel} {shape} passed the "
-            "MK-K geometry screen — the shape itself is likely invalid")
+            f"no candidate block config for {kernel} {shape} "
+            f"(phase={phase}) passed the MK-K geometry screen — the "
+            "shape itself is likely invalid")
     time_fn = _get_time_fn()
+    timed_call = _timed_call_bwd if phase == "bwd" else _timed_call
     best, best_t = None, float("inf")
     for config in legal:
-        fn, args = _timed_call(kernel, shape, dtype, config)
+        fn, args = timed_call(kernel, shape, dtype, config)
         t = time_fn(fn, *args, repeats=repeats, warmup=1)
         if verbose:
-            print(f"  {kernel} {config}: {t * 1e6:.0f}us")
+            print(f"  {kernel} [{phase}] {config}: {t * 1e6:.0f}us")
         if t < best_t:
             best, best_t = config, t
+    for diag in validate_candidate(kernel, shape, best, phase=phase):
+        print(f"  {cache_key(kernel, shape, dtype, tp, phase)}: "
+              f"{diag.format() if hasattr(diag, 'format') else diag}")
     entry = {"config": best, "us": round(best_t * 1e6, 1),
              "n_candidates": len(legal)}
     cache = load_cache(path)
-    cache["entries"][cache_key(kernel, shape, dtype, tp)] = entry
+    cache["entries"][cache_key(kernel, shape, dtype, tp, phase)] = entry
     save_cache(cache, path)
-    _MEMO.pop((cache_key(kernel, shape, dtype, tp), path), None)
+    _MEMO.pop((cache_key(kernel, shape, dtype, tp, phase), path), None)
     return entry
 
 
@@ -329,6 +440,9 @@ def main(argv=None) -> int:
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--tp", type=int, default=1,
                     help="manual tp degree the shape is local to")
+    ap.add_argument("--phase", choices=list(PHASES), default="fwd",
+                    help="tune forward kernel blocks or the chunked-VJP "
+                         "backward blocks (flash attention)")
     ap.add_argument("--cache", default=None,
                     help=f"cache path (default {DEFAULT_CACHE})")
     ap.add_argument("--preset", choices=["smoke"],
@@ -340,18 +454,23 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.preset == "smoke":
-        cells = [(k, s, tp, args.dtype) for k, s, tp in _SMOKE_CELLS]
+        cells = [(k, s, tp, args.dtype, "fwd") for k, s, tp in
+                 _SMOKE_CELLS]
+        # the phase-keyed cells: backward chunk sizes for the kernels
+        # whose VJP consumes them
+        cells += [(k, s, tp, args.dtype, "bwd") for k, s, tp in
+                  _SMOKE_CELLS if k in BWD_KERNELS]
     elif args.kernel and args.shape:
         shape = tuple(int(s) for s in args.shape.split(","))
-        cells = [(args.kernel, shape, args.tp, args.dtype)]
+        cells = [(args.kernel, shape, args.tp, args.dtype, args.phase)]
     else:
         ap.error("pass --kernel and --shape, or --preset smoke")
-    for kernel, shape, tp, dtype in cells:
-        entry = tune(kernel, shape, dtype, tp=tp, path=args.cache,
-                     repeats=args.repeats,
+    for kernel, shape, tp, dtype, phase in cells:
+        entry = tune(kernel, shape, dtype, tp=tp, phase=phase,
+                     path=args.cache, repeats=args.repeats,
                      max_candidates=args.max_candidates,
                      verbose=args.verbose)
-        print(f"{cache_key(kernel, shape, dtype, tp)}: "
+        print(f"{cache_key(kernel, shape, dtype, tp, phase)}: "
               f"{entry['config']}  ({entry['us']}us over "
               f"{entry['n_candidates']} candidates)")
     print(f"cache: {args.cache or DEFAULT_CACHE}")

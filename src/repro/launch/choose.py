@@ -1,0 +1,172 @@
+#!/usr/bin/env python
+"""choose: static launch-config selection from the cost-model frontier.
+
+The mkplan CLI: enumerate every feasible ``stages × microbatch ×
+schedule × virtual-stages × model-par`` launch for an arch on an
+N-device mesh, score each candidate with the unified analytic models
+(`repro.analysis.costmodel` — nothing compiles), print the Pareto
+frontier over (step-time model, peak-bytes model, collective-bytes),
+and recommend the fastest frontier point's `repro.launch.train` argv.
+
+Examples::
+
+  python -m repro.launch.choose --arch jamba-v0.1-52b --smoke \
+      --devices 8 --global-batch 8 --seq-len 64
+  python -m repro.launch.choose --arch granite-3-8b --smoke --devices 8 \
+      --global-batch 8 --seq-len 64 --mem-budget-gb 16 --json
+
+``--measured`` swaps the analytic block costs for the XLA cost-analysis
+probe (`costmodel.estimate_block_costs` — compiles one block per
+pattern position, still no full-program lowering); the default analytic
+path needs no jax at all.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        description="pick a launch config from the static cost-model "
+                    "frontier (mkplan)")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, required=True,
+                    help="mesh size to factor into stage x data x model")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--mem-budget-gb", type=float, default=None,
+                    help="flag frontier points whose peak-bytes model "
+                         "exceeds this per-device budget (MK-T002)")
+    ap.add_argument("--schedules", default=None,
+                    help="comma list to restrict (default: all)")
+    ap.add_argument("--max-microbatch", type=int, default=None)
+    ap.add_argument("--kernels", default="off",
+                    help="kernels mode the candidates launch with")
+    ap.add_argument("--measured", action="store_true",
+                    help="price blocks with the XLA cost-analysis probe "
+                         "instead of the analytic roofline estimate")
+    ap.add_argument("--top", type=int, default=0,
+                    help="print only the first N rows (0 = all)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output (stable schema)")
+    return ap.parse_args(argv)
+
+
+def _row(sc) -> dict:
+    return {
+        "config": dataclass_dict(sc.candidate),
+        "label": sc.candidate.label(),
+        "on_frontier": sc.on_frontier,
+        "dominated_by": (sc.dominated_by.label()
+                         if sc.dominated_by else None),
+        "step_time_s": sc.score.step_time_s,
+        "peak_bytes": sc.score.peak_bytes,
+        "collective_bytes": sc.score.collective_bytes,
+        "bubble": sc.bubble,
+        "collective_by_axis": sc.collective_by_axis,
+    }
+
+
+def dataclass_dict(cand) -> dict:
+    import dataclasses
+    return dataclasses.asdict(cand)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+
+    from repro.analysis.planner import plan_frontier
+    from repro.configs import get_config, get_smoke
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+
+    block_costs = None
+    if args.measured:
+        from repro.analysis.costmodel import estimate_block_costs
+        mb = max(args.global_batch, 1)
+        block_costs = estimate_block_costs(cfg, mb, args.seq_len, tp=1)
+
+    enum_kwargs: dict = {"kernels_modes": (args.kernels,)}
+    if args.schedules:
+        enum_kwargs["schedules"] = tuple(
+            s.strip() for s in args.schedules.split(",") if s.strip())
+    if args.max_microbatch:
+        enum_kwargs["max_microbatch"] = args.max_microbatch
+
+    t0 = time.perf_counter()
+    scored = plan_frontier(cfg, args.devices,
+                           global_batch=args.global_batch,
+                           seq_len=args.seq_len, block_costs=block_costs,
+                           **enum_kwargs)
+    wall = time.perf_counter() - t0
+
+    budget = (args.mem_budget_gb * 2**30
+              if args.mem_budget_gb is not None else None)
+    front = [s for s in scored if s.on_frontier]
+    best = front[0] if front else None    # sorted: frontier first, by time
+    over = [s for s in front
+            if budget is not None and s.score.peak_bytes > budget]
+
+    if args.json:
+        out = {
+            "version": 1,
+            "arch": args.arch,
+            "smoke": args.smoke,
+            "devices": args.devices,
+            "global_batch": args.global_batch,
+            "seq_len": args.seq_len,
+            "measured": args.measured,
+            "wall_s": round(wall, 4),
+            "n_candidates": len(scored),
+            "n_frontier": len(front),
+            "rows": [_row(s) for s in scored],
+            "recommended": None if best is None else {
+                "label": best.candidate.label(),
+                "argv": best.candidate.argv(
+                    args.arch, global_batch=args.global_batch,
+                    seq_len=args.seq_len, smoke=args.smoke),
+            },
+        }
+        print(json.dumps(out, indent=1, sort_keys=True))
+        return 0 if best is not None else 1
+
+    rows = scored[:args.top] if args.top else scored
+    print(f"mkplan: {args.arch} on {args.devices} devices, "
+          f"global_batch={args.global_batch} seq_len={args.seq_len} "
+          f"({'measured' if args.measured else 'analytic'} block costs, "
+          f"{len(scored)} candidates, {wall * 1e3:.0f}ms)")
+    print(f"{'':2} {'config':<52} {'time model':>11} {'peak':>9} "
+          f"{'coll':>9} {'bubble':>7}")
+    for s in rows:
+        mark = "*" if s.on_frontier else " "
+        print(f"{mark:2} {s.candidate.label():<52} "
+              f"{s.score.step_time_s * 1e3:>9.3f}ms "
+              f"{s.score.peak_bytes / 2**20:>6.1f}MiB "
+              f"{s.score.collective_bytes / 2**20:>6.1f}MiB "
+              f"{s.bubble:>7.3f}")
+    if args.top and len(scored) > args.top:
+        print(f"   ... {len(scored) - args.top} more "
+              f"(* = Pareto frontier, {len(front)} points)")
+    else:
+        print(f"   (* = Pareto frontier, {len(front)} points)")
+    for s in over:
+        print(f"   MK-T002 warning: {s.candidate.label()} peak "
+              f"{s.score.peak_bytes / 2**30:.2f} GiB exceeds the "
+              f"{args.mem_budget_gb:.2f} GiB budget")
+    if best is not None:
+        print("recommended:")
+        print("  " + " ".join(best.candidate.argv(
+            args.arch, global_batch=args.global_batch,
+            seq_len=args.seq_len, smoke=args.smoke)))
+        return 0
+    print("no feasible candidate (check devices/global-batch "
+          "divisibility)")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

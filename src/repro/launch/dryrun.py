@@ -38,10 +38,10 @@ from repro.train.pipeline import plan_pipeline
 from repro.train.step import (make_prefill_step, make_serve_step,
                               make_train_step, zero1_specs)
 
-# TPU v5e-like constants (per chip) — the assignment's hardware model.
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# TPU v5e-like constants (per chip) — the assignment's hardware model,
+# shared with the rest of the launch stack via the unified cost-model API.
+from repro.analysis.costmodel import (HBM_BW, ICI_BW,  # noqa: E402,F401
+                                      PEAK_FLOPS, roofline_terms)
 
 RESULTS = pathlib.Path("results/dryrun")
 
@@ -255,11 +255,8 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str = "pod",
             "temp_bytes": ma.temp_size_in_bytes,
             "alias_bytes": ma.alias_size_in_bytes,
         },
-        "terms_s": {
-            "compute": flops_dev / PEAK_FLOPS,
-            "memory": bytes_dev / HBM_BW,
-            "collective": coll_dev / ICI_BW,
-        },
+        "terms_s": roofline_terms(flops_dev, bytes_dev,
+                                  coll_dev).as_dict(),
         "model_flops_total": model_flops,
         "hlo_flops_total": flops_dev * n_dev,
         "useful_flops_ratio": (model_flops / (flops_dev * n_dev)

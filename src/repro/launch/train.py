@@ -234,7 +234,12 @@ def main() -> None:
     ap.add_argument("--verify", action="store_true",
                     help="run the mklint static verifier (collectives, "
                          "step program, sharding specs, kernels) before "
-                         "building anything; refuse to launch on errors")
+                         "building anything; refuse to launch on errors. "
+                         "Also runs the MK-T planner comparison — "
+                         "warn-only, a dominated config still launches")
+    ap.add_argument("--mem-budget-gb", type=float, default=None,
+                    help="per-device memory budget for the --verify "
+                         "planner's MK-T002 peak-bytes warning")
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
@@ -258,6 +263,30 @@ def main() -> None:
             raise SystemExit(
                 f"mklint: refusing to launch: {len(report.errors)} "
                 "error(s) — fix the diagnostics above or drop --verify")
+        # MK-T planner pass: price this config against its own launch
+        # space (analytic cost models, nothing compiles).  Warn-only by
+        # design — the models are rankings, not measurements, so a
+        # dominated config still launches.
+        from repro.analysis.planner import LaunchCandidate, check_plan
+        pcfg = (get_smoke(args.arch) if args.smoke
+                else get_config(args.arch))
+        sizes = dict(zip(axes or (), mesh_shape or ()))
+        stages = sizes.get("stage", args.stages)
+        tp = sizes.get("model", args.model_par)
+        dp = sizes.get("data",
+                       max(jax.device_count() // (stages * tp), 1))
+        chosen = LaunchCandidate(
+            stages=stages, microbatch=max(args.microbatch, 1),
+            schedule=args.schedule,
+            virtual_stages=max(args.virtual_stages, 1), tp=tp, dp=dp,
+            kernels=args.kernels if args.kernels == "pallas" else "off")
+        budget = (args.mem_budget_gb * 2**30
+                  if args.mem_budget_gb is not None else None)
+        plan_report = check_plan(
+            pcfg, chosen, global_batch=args.global_batch,
+            seq_len=args.seq_len, mem_budget_bytes=budget)
+        if plan_report.diagnostics:
+            print(plan_report.format())
     kw = {} if mesh_shape is None else {"mesh_shape": mesh_shape,
                                         "axes": axes}
     cfg, mesh, state, step_fn, data = build(

@@ -62,17 +62,20 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.costmodel import (analytic_block_cost,
+                                      estimate_block_costs)
 from repro.dist.pipeline import (SCHEDULES, balance_stages,
                                  pipeline_bubble_fraction,
                                  pipeline_peak_activation_bytes,
                                  pipeline_peak_inflight)
-from repro.models.common import LayerKind, ModelConfig
+from repro.models.common import ModelConfig
 
 log = logging.getLogger("repro.pipeline")
 
-# TPU v5e-like roofline constants (per chip), matching launch/dryrun.
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+# Block pricing moved behind the unified cost-model API
+# (`repro.analysis.costmodel`); the old private name stays importable
+# for existing call sites (analysis.verify, tests).
+_analytic_block_cost = analytic_block_cost
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,72 +209,6 @@ class PipelinePlan:
     padded_repeats: tuple[int, ...] = ()    # per-position padded scan len
     padded_stage_time_s: float = 0.0  # lockstep scan time incl. padding
     padding_overhead: float = 0.0     # padded_stage_time_s/stage_time_s - 1
-
-
-def _analytic_block_cost(cfg: ModelConfig, pos: int, tokens: int) -> float:
-    """Fallback cost: 6·N_block·tokens FLOPs at roofline peak."""
-    spec = cfg.pattern[pos]
-    d = cfg.d_model
-    n = 0.0
-    if spec.kind in (LayerKind.ATTN, LayerKind.SWA):
-        n += d * (cfg.num_heads * cfg.head_dim) * 2
-        n += d * (cfg.num_kv_heads * cfg.head_dim) * 2
-    else:
-        di = cfg.d_inner
-        n += d * (2 * di + 2 * cfg.ssm_heads * cfg.ssm_state
-                  + cfg.ssm_heads) + di * d
-    if spec.ffn:
-        if spec.moe:
-            n += 3 * d * cfg.moe_d_ff * max(cfg.experts_per_tok, 1)
-        else:
-            n += (3 if cfg.act == "silu" else 2) * d * cfg.d_ff
-    return 6.0 * n * tokens / PEAK_FLOPS
-
-
-def estimate_block_costs(cfg: ModelConfig, batch: int, seq: int,
-                         tp: int = 1) -> list[float]:
-    """Per-pattern-position cost (seconds) of one block's forward at
-    (batch, seq): XLA cost analysis of the lowered block (the stage
-    profiler's FLOP/byte estimates) folded through the roofline,
-    falling back to the analytic 6·N·D estimate when compilation of the
-    probe is unavailable.
-
-    `tp` prices *per-model-shard* work: the probe lowers the full block
-    and the roofline time divides by `tp`, since every sharded tensor
-    (heads, d_ff, d_inner, experts) splits its FLOPs and bytes evenly
-    over the model axis — so `balance_stages` partitions stages by the
-    work one device actually runs, not the unsharded block.  (The
-    replicated residue — norms, routers — is negligible at roofline
-    granularity; a uniform divisor also leaves the *relative* costs, and
-    hence the partition, of homogeneous stacks unchanged.)"""
-    from repro.models.transformer import _apply_block, _init_block
-
-    if tp < 1:
-        raise ValueError(f"need tp >= 1, got {tp}")
-    costs = []
-    x_sds = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
-                                 jnp.dtype(cfg.dtype))
-    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    for pos, spec in enumerate(cfg.pattern):
-        try:
-            p_abs = jax.eval_shape(
-                functools.partial(_init_block, cfg=cfg, spec=spec), key_sds)
-            fn = lambda p, x, _s=spec: _apply_block(p, _s, cfg, x)[0]
-            compiled = jax.jit(fn).lower(p_abs, x_sds).compile()
-            ca = compiled.cost_analysis() or {}
-            if isinstance(ca, (list, tuple)):  # jax<=0.4 returns [dict]
-                ca = ca[0] if ca else {}
-            flops = float(ca.get("flops", 0.0))
-            bts = float(ca.get("bytes accessed", 0.0))
-            cost = max(flops / PEAK_FLOPS, bts / HBM_BW)
-            if cost <= 0.0:
-                raise ValueError("empty cost analysis")
-        except Exception as exc:               # pragma: no cover - fallback
-            log.debug("block cost probe failed at pos %d (%s); "
-                      "using analytic estimate", pos, exc)
-            cost = _analytic_block_cost(cfg, pos, batch * seq)
-        costs.append(cost / tp)
-    return costs
 
 
 def plan_pipeline(cfg: ModelConfig, n_stages: int, n_micro: int, *,

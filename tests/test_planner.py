@@ -1,0 +1,524 @@
+"""mkplan tests: the unified cost-model API, the launch-space planner,
+and every surface that consumes them.
+
+- **parity**: `repro.analysis.costmodel` is the single home of every
+  analytic formula — the old call sites (`dist/pipeline`,
+  `train/pipeline`, `launch/dryrun`) re-export the *same objects*, and
+  known values pin each model;
+- **MK-T fixtures**: one known-bad config per rule, asserted by exact
+  ID (the stable-contract convention of `tests/test_analysis.py`);
+- **frontier invariant**: no returned frontier point is dominated by
+  any other scored point (deterministic + hypothesis property form);
+- **ranking**: the planner's static best-config ranking matches the
+  exhaustive dryrun-measured ranking on the 8-device granite and jamba
+  smoke meshes (compiled-HLO roofline terms vs the analytic models);
+- **kernel footprints**: forward and backward phases priced separately
+  from recorded block geometry;
+- **MK-K008 + phase-keyed tuner cache**: the divisor-clamp warning and
+  the explicit backward block entries the footprint model rests on.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.analysis import costmodel as cm
+from repro.analysis.planner import (LaunchCandidate, Score,
+                                    ScoredCandidate, check_launch,
+                                    check_plan, enumerate_configs,
+                                    frontier, plan_frontier, score)
+from repro.configs import get_smoke
+
+JAMBA = "jamba-v0.1-52b"
+GRANITE = "granite-3-8b"
+
+
+# ------------------------------------------------------------- parity
+def test_costmodel_is_canonical_for_dist_pipeline():
+    """dist/pipeline re-exports the costmodel objects — not copies."""
+    from repro.dist import pipeline as dp
+
+    assert dp.pipeline_bubble_fraction is cm.pipeline_bubble_fraction
+    assert dp.pipeline_peak_inflight is cm.pipeline_peak_inflight
+    assert (dp.pipeline_peak_activation_bytes
+            is cm.pipeline_peak_activation_bytes)
+    assert dp.program_peak_inflight is cm.program_peak_inflight
+    assert dp.SCHEDULES is cm.SCHEDULES
+    assert (dp.PIPE_IDLE, dp.PIPE_FWD, dp.PIPE_BWD) == \
+        (cm.PIPE_IDLE, cm.PIPE_FWD, cm.PIPE_BWD)
+
+
+def test_costmodel_is_canonical_for_train_pipeline():
+    from repro.train import pipeline as tp
+
+    assert tp.estimate_block_costs is cm.estimate_block_costs
+    assert tp._analytic_block_cost is cm.analytic_block_cost
+
+
+def test_costmodel_is_canonical_for_dryrun_constants():
+    """launch/dryrun imports the hardware model instead of owning it."""
+    import ast
+    import inspect
+
+    from repro.launch import dryrun
+
+    assert dryrun.PEAK_FLOPS is cm.PEAK_FLOPS
+    assert dryrun.HBM_BW is cm.HBM_BW
+    assert dryrun.roofline_terms is cm.roofline_terms
+    # no shadow copy left behind: dryrun's module body assigns none of
+    # the migrated constant names itself
+    tree = ast.parse(inspect.getsource(dryrun))
+    assigned = {t.id for node in tree.body
+                if isinstance(node, ast.Assign)
+                for t in node.targets if isinstance(t, ast.Name)}
+    assert not assigned & {"PEAK_FLOPS", "HBM_BW", "ICI_BW"}
+
+
+def test_constants_match_core_resources():
+    """costmodel mirrors the repo hardware model (import layering keeps
+    them textually separate; this is the drift guard)."""
+    from repro.core import resources
+
+    assert cm.PEAK_FLOPS == resources.PEAK_FLOPS_BF16
+    assert cm.HBM_BW == resources.HBM_BW
+    assert cm.ICI_BW == resources.ICI_BW_PER_LINK
+    assert cm.VMEM_BYTES == resources.VMEM_BYTES
+
+
+def test_bubble_and_inflight_pins():
+    # uniform: (S-1)/(vM+S-1)
+    assert cm.pipeline_bubble_fraction(8, 4) == pytest.approx(3 / 11)
+    assert cm.pipeline_bubble_fraction(
+        8, 4, virtual_stages=2) == pytest.approx(3 / 19)
+    assert cm.pipeline_bubble_fraction(1, 1) == 0.0
+    # peak inflight: M / min(M, S) / min(vM, vS+S-1+v)
+    assert cm.pipeline_peak_inflight(8, 4, "gpipe") == 8
+    assert cm.pipeline_peak_inflight(8, 4, "1f1b") == 4
+    assert cm.pipeline_peak_inflight(
+        8, 4, "interleaved", virtual_stages=2) == min(16, 8 + 3 + 2)
+    # activation stash = inflight × microbatch bytes
+    assert cm.pipeline_peak_activation_bytes(8, 4, "1f1b", 100.0) == \
+        pytest.approx(400.0)
+
+
+def test_roofline_terms_bottleneck():
+    t = cm.roofline_terms(cm.PEAK_FLOPS, cm.HBM_BW * 2.0, cm.ICI_BW)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(2.0)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.bottleneck == "memory"
+    assert set(t.as_dict()) == {"compute", "memory", "collective"}
+
+
+def test_analytic_block_cost_scales_with_tokens():
+    cfg = get_smoke(GRANITE)
+    c1 = cm.analytic_block_cost(cfg, 0, 64)
+    c2 = cm.analytic_block_cost(cfg, 0, 128)
+    assert c1 > 0 and c2 == pytest.approx(2 * c1)
+
+
+# ------------------------------------------------- enumerate + score
+def test_enumerate_respects_launch_arithmetic():
+    cfg = get_smoke(JAMBA)
+    cands = enumerate_configs(cfg, 8, global_batch=8)
+    assert cands
+    seen = set()
+    for c in cands:
+        assert c not in seen, f"duplicate candidate {c}"
+        seen.add(c)
+        assert c.n_devices == 8
+        assert c.stages * c.virtual_stages <= cfg.n_repeats
+        assert cfg.num_kv_heads % c.tp == 0 and cfg.d_ff % c.tp == 0
+        assert 8 % c.dp == 0
+        local = 8 // c.dp
+        assert local % c.microbatch == 0
+        if c.schedule == "interleaved":
+            assert c.virtual_stages >= 2
+        else:
+            assert c.virtual_stages == 1
+    # the interleaved v=2 family PR 8 built is in the space
+    assert any(c.schedule == "interleaved" and c.virtual_stages == 2
+               for c in cands)
+
+
+def test_score_prices_all_three_axes():
+    cfg = get_smoke(JAMBA)
+    sc = score(cfg, LaunchCandidate(stages=2, microbatch=2,
+                                    schedule="1f1b", tp=2, dp=2),
+               global_batch=8, seq_len=64)
+    assert sc.score.step_time_s > 0
+    assert sc.score.peak_bytes > 0
+    assert sc.score.collective_bytes > 0
+    assert 0 <= sc.bubble < 1
+    assert set(sc.collective_by_axis) == {"stage", "model", "data"}
+    # more microbatches strictly shrink the uniform bubble
+    sc4 = score(cfg, LaunchCandidate(stages=2, microbatch=4,
+                                     schedule="1f1b", tp=2, dp=2),
+                global_batch=8, seq_len=64)
+    assert sc4.bubble < sc.bubble
+
+
+# ------------------------------------------------------------ frontier
+def _dominated_by_any(sc, scored):
+    return any(o.score.dominates(sc.score) for o in scored)
+
+
+def test_frontier_never_returns_dominated_point():
+    cfg = get_smoke(JAMBA)
+    scored = plan_frontier(cfg, 8, global_batch=8, seq_len=64)
+    front = [s for s in scored if s.on_frontier]
+    assert front, "empty frontier"
+    for s in front:
+        assert not _dominated_by_any(s, scored), s.candidate.label()
+    # and every dominated point names a frontier dominator
+    for s in scored:
+        if not s.on_frontier:
+            dom = [o for o in scored if o.candidate == s.dominated_by]
+            assert dom and dom[0].on_frontier
+            assert dom[0].score.dominates(s.score)
+
+
+def test_domination_is_strict_on_equal_vectors():
+    a = Score(1.0, 2.0, 3.0)
+    assert not a.dominates(Score(1.0, 2.0, 3.0))
+    assert a.dominates(Score(1.0, 2.0, 4.0))
+    assert not a.dominates(Score(0.5, 2.0, 4.0))
+
+
+def _toy_scored(vectors):
+    out = []
+    for i, (t, p, c) in enumerate(vectors):
+        cand = LaunchCandidate(stages=1, microbatch=i + 1,
+                               schedule="gpipe")
+        out.append(ScoredCandidate(
+            candidate=cand, score=Score(t, p, c), bubble=0.0,
+            peak_activation_bytes=p, collective_by_axis={}))
+    return out
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 8), st.integers(0, 8),
+                          st.integers(0, 8)),
+                min_size=1, max_size=12))
+def test_frontier_invariant_property(vectors):
+    """Property form: for arbitrary score vectors the frontier never
+    contains a dominated point, domination pointers are sound, and the
+    frontier is never empty."""
+    scored = frontier(_toy_scored([tuple(map(float, v))
+                                   for v in vectors]))
+    front = [s for s in scored if s.on_frontier]
+    assert front
+    for s in front:
+        assert not _dominated_by_any(s, scored)
+    for s in scored:
+        if not s.on_frontier:
+            assert any(o.candidate == s.dominated_by
+                       and o.score.dominates(s.score) for o in scored)
+
+
+# ------------------------------------------------------- MK-T fixtures
+def _rules(diags):
+    return {d.rule for d in diags}
+
+
+def test_mkt001_dominated_same_mesh_fires():
+    cfg = get_smoke(JAMBA)
+    # gpipe M=2 on the (2,2,2) mesh: 1f1b M=4 on the same mesh is ≤ on
+    # every model and < on time — the canonical "wrong schedule knobs"
+    diags = check_launch(
+        cfg, LaunchCandidate(stages=2, microbatch=2, schedule="gpipe",
+                             tp=2, dp=2),
+        global_batch=8, seq_len=64)
+    assert "MK-T001" in _rules(diags)
+    d = next(d for d in diags if d.rule == "MK-T001")
+    assert d.severity is not None and not d.is_error     # warning
+    assert "repro.launch.train" in d.hint                # dominating argv
+
+
+def test_mkt002_memory_budget_fires():
+    cfg = get_smoke(JAMBA)
+    diags = check_launch(
+        cfg, LaunchCandidate(stages=2, microbatch=2, schedule="gpipe",
+                             tp=2, dp=2),
+        global_batch=8, seq_len=64, mem_budget_bytes=1.0)
+    assert "MK-T002" in _rules(diags)
+
+
+def test_mkt003_interleaving_would_lower_bubble_fires():
+    cfg = get_smoke(JAMBA)      # n_repeats=4: v=2 fits at stages=2
+    diags = check_launch(
+        cfg, LaunchCandidate(stages=2, microbatch=2, schedule="gpipe",
+                             tp=2, dp=2),
+        global_batch=8, seq_len=64)
+    assert "MK-T003" in _rules(diags)
+    d = next(d for d in diags if d.rule == "MK-T003")
+    assert "virtual_stages=2" in d.msg
+
+
+def test_mkt004_tp_prices_worse_than_stages_fires():
+    cfg = get_smoke(JAMBA)
+    # M=1 at S=2: the tp=2 point eats a (S-1)/(M+S-1) = 1/2 bubble; the
+    # same 8 devices as stages=4 micro=4 tp=1 dp=2 price strictly faster
+    diags = check_launch(
+        cfg, LaunchCandidate(stages=2, microbatch=1, schedule="gpipe",
+                             tp=2, dp=2),
+        global_batch=8, seq_len=64)
+    assert "MK-T004" in _rules(diags)
+
+
+def test_mkt_clean_on_frontier_config():
+    cfg = get_smoke(JAMBA)
+    # the jamba frontier's interleaved point: nothing to warn about
+    diags = check_launch(
+        cfg, LaunchCandidate(stages=2, microbatch=4,
+                             schedule="interleaved", virtual_stages=2,
+                             tp=2, dp=2),
+        global_batch=8, seq_len=64)
+    assert diags == []
+
+
+def test_check_plan_wraps_report():
+    cfg = get_smoke(JAMBA)
+    report = check_plan(
+        cfg, LaunchCandidate(stages=2, microbatch=2, schedule="gpipe",
+                             tp=2, dp=2),
+        global_batch=8, seq_len=64)
+    assert report.ok                      # warnings only, never errors
+    assert {"MK-T001", "MK-T003"} <= report.rules_fired()
+    assert report.target.startswith("plan ")
+    # the JSON schema the CLI emits
+    d = report.as_dict()
+    assert set(d) == {"target", "ok", "wall_s", "diagnostics"}
+    assert all(set(x) == {"rule", "severity", "loc", "msg", "hint"}
+               for x in d["diagnostics"])
+
+
+# ------------------------------------------- static vs dryrun ranking
+RANK_SCRIPT = textwrap.dedent("""
+    import json, sys
+    from repro.launch.dryrun import lower_cell   # sets 512 host devices
+    from repro.models.common import ShapeSpec
+    from repro.configs import get_smoke
+    from repro.analysis.planner import LaunchCandidate, score
+
+    small = ShapeSpec("train_smoke", 64, 8, "train")
+    CANDS = {
+        "gpipe-m2": dict(stages=2, n_micro=2, schedule="gpipe"),
+        "1f1b-m4": dict(stages=2, n_micro=4, schedule="1f1b"),
+        "inter-v2-m4": dict(stages=2, n_micro=4,
+                            schedule="interleaved", virtual_stages=2),
+    }
+    out = {}
+    for arch in ("jamba-v0.1-52b", "granite-3-8b"):
+        cfg = get_smoke(arch)
+        rank = {}
+        for name, kw in CANDS.items():
+            if cfg.n_repeats < 2 * kw.get("virtual_stages", 1):
+                continue              # granite smoke: v=2 doesn't fit
+            rec = lower_cell(arch, "train_4k", smoke=True,
+                             shape_override=small, data_par=2,
+                             model_par=2, **kw)
+            assert "skipped" not in rec, rec
+            # measured side: compiled-HLO roofline terms (loop-aware
+            # per-device flops/bytes/collectives), inflated by the
+            # schedule's idle fraction
+            terms = rec["terms_s"]
+            bubble = rec["pipeline"]["predicted_bubble"]
+            measured = max(terms.values()) / (1.0 - bubble)
+            st = score(cfg, LaunchCandidate(
+                stages=kw["stages"], microbatch=kw["n_micro"],
+                schedule=kw["schedule"],
+                virtual_stages=kw.get("virtual_stages", 1),
+                tp=2, dp=2), global_batch=8, seq_len=64)
+            rank[name] = (measured, st.score.step_time_s)
+        out[arch] = {
+            "measured": sorted(rank, key=lambda k: rank[k][0]),
+            "static": sorted(rank, key=lambda k: rank[k][1]),
+        }
+    print("RANKS=" + json.dumps(out))
+""")
+
+
+def test_static_ranking_matches_dryrun_measured_ranking():
+    """Acceptance criterion: on the 8-device granite and jamba smoke
+    meshes, scoring the launch space statically ranks the configs the
+    same way exhaustively dry-running them (compile + HLO analysis)
+    does."""
+    r = subprocess.run([sys.executable, "-c", RANK_SCRIPT],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2500:]}"
+    line = next(ln for ln in r.stdout.splitlines()
+                if ln.startswith("RANKS="))
+    ranks = json.loads(line[len("RANKS="):])
+    for arch, got in ranks.items():
+        assert len(got["static"]) >= 2, (arch, got)
+        assert got["static"] == got["measured"], (arch, got)
+
+
+# --------------------------------------------------- kernel footprints
+def test_flash_footprint_fwd_and_bwd_priced_separately():
+    shape = (2, 128, 4, 16)                 # (B, S, Hq, D)
+    fwd = cm.kernel_footprint("flash_attention", shape)
+    bwd = cm.kernel_footprint("flash_attention", shape, phase="bwd")
+    assert fwd.phase == "fwd" and not fwd.approximate
+    assert fwd.n_calls >= 1 and fwd.grid
+    assert fwd.bytes_touched > 0 and fwd.vmem_bytes > 0
+    assert fwd.vmem_bytes <= cm.VMEM_BYTES
+    # chunked recompute backward: 2× the streamed traffic at the
+    # backward chunk geometry (same here — no bwd cache entry)
+    assert bwd.phase == "bwd" and bwd.approximate
+    assert bwd.bytes_touched == pytest.approx(2 * fwd.bytes_touched)
+
+
+def test_ref_vjp_footprint_is_unblocked():
+    shape = (128, 64, 192)                  # fused_mlp (T, d, ff)
+    fwd = cm.kernel_footprint("fused_mlp", shape)
+    bwd = cm.kernel_footprint("fused_mlp", shape, phase="bwd")
+    assert fwd.vmem_bytes > 0
+    assert bwd.approximate and bwd.vmem_bytes == 0.0
+    assert bwd.bytes_touched > 0 and bwd.grid == ()
+
+
+def test_footprint_scales_with_block_config():
+    shape = (2, 128, 4, 16)
+    small = cm.kernel_footprint("flash_attention", shape,
+                                config={"q_blk": 32, "kv_blk": 32})
+    big = cm.kernel_footprint("flash_attention", shape,
+                              config={"q_blk": 128, "kv_blk": 128})
+    # smaller q blocks → more grid points; VMEM working set shrinks
+    assert small.vmem_bytes < big.vmem_bytes
+
+
+def test_resolve_block_config_overlays_bwd_cache(tmp_path):
+    from repro.kernels import tune
+
+    shape = (2, 128, 4, 16)
+    path = str(tmp_path / "tune.json")
+    cache = {"version": tune.CACHE_VERSION, "entries": {
+        tune.cache_key("flash_attention", shape, "float32"):
+            {"config": {"q_blk": 64, "kv_blk": 64}},
+        tune.cache_key("flash_attention", shape, "float32", phase="bwd"):
+            {"config": {"q_blk": 32, "kv_blk": 128}},
+    }}
+    tune.save_cache(cache, path)
+    tune._MEMO.clear()
+    fwd = cm.resolve_block_config("flash_attention", shape,
+                                  cache_path=path)
+    bwd = cm.resolve_block_config("flash_attention", shape, phase="bwd",
+                                  cache_path=path)
+    tune._MEMO.clear()
+    assert (fwd["q_blk"], fwd["kv_blk"]) == (64, 64)
+    assert (bwd["q_blk"], bwd["kv_blk"]) == (32, 128)
+
+
+# --------------------------------------- MK-K008 + phase-keyed tuning
+def test_mkk008_clamp_warning_fires_and_names_padding():
+    from repro.analysis.kernels import check_block_clamp
+
+    # 131 is prime: the divisor clamp collapses any target to block 1
+    diags = check_block_clamp("flash_attention", "q_blk", 131, 128)
+    assert len(diags) == 1
+    d = diags[0]
+    assert d.rule == "MK-K008" and not d.is_error
+    assert "pad" in d.hint
+    # 33 → divisor 11 < 32/2: still a shrink worth naming
+    assert check_block_clamp("fused_mlp", "bm", 33, 32)
+    # exact/pow2-friendly dims stay silent
+    assert check_block_clamp("fused_mlp", "bm", 128, 128) == []
+    assert check_block_clamp("fused_mlp", "bm", 130, 128) == []
+
+
+def test_mkk008_from_tuner_candidate_screen():
+    from repro.kernels import tune
+
+    # shape with a prime q-length: the clamped candidate carries the
+    # warning, but stays *legal* (warnings never gate the tuner)
+    shape = (1, 131, 2, 16)
+    diags = tune.validate_candidate("flash_attention", shape,
+                                    {"q_blk": 1, "kv_blk": 1})
+    assert "MK-K008" in {getattr(d, "rule", None) for d in diags}
+    assert not tune.screen_errors(diags)
+
+
+def test_mkk008_not_fired_for_explicit_small_blocks():
+    from repro.kernels import tune
+
+    # a deliberately small block on a friendly dim is the user's choice,
+    # not a clamp artifact — no warning
+    diags = tune.validate_candidate("fused_mlp", (128, 64, 192),
+                                    {"bm": 16, "bff": 64})
+    assert not diags
+
+
+def test_cache_keys_carry_phase(tmp_path):
+    from repro.kernels import tune
+
+    shape = (2, 128, 4, 16)
+    kf = tune.cache_key("flash_attention", shape, "float32")
+    kb = tune.cache_key("flash_attention", shape, "float32", phase="bwd")
+    assert kf != kb and kf.endswith("|fwd") and kb.endswith("|bwd")
+    with pytest.raises(ValueError):
+        tune.cache_key("flash_attention", shape, "float32", phase="nope")
+    # cached_config is phase-keyed: a fwd-only cache misses for bwd
+    path = str(tmp_path / "tune.json")
+    tune.save_cache({"version": tune.CACHE_VERSION, "entries": {
+        kf: {"config": {"q_blk": 64, "kv_blk": 64}}}}, path)
+    tune._MEMO.clear()
+    assert tune.cached_config("flash_attention", shape, "float32",
+                              path=path) == {"q_blk": 64, "kv_blk": 64}
+    assert tune.cached_config("flash_attention", shape, "float32",
+                              phase="bwd", path=path) == {}
+    tune._MEMO.clear()
+
+
+def test_bwd_validate_rejects_non_bwd_kernels():
+    from repro.kernels import tune
+
+    diags = tune.validate_candidate("fused_mlp", (128, 64, 192),
+                                    {"bm": 64, "bff": 64}, phase="bwd")
+    assert tune.screen_errors(diags)
+
+
+# -------------------------------------------------------- CLI surfaces
+def test_choose_cli_json_recommends_frontier_best():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.choose", "--arch", JAMBA,
+         "--smoke", "--devices", "8", "--global-batch", "8",
+         "--seq-len", "64", "--json"],
+        capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout)
+    assert out["version"] == 1 and out["n_frontier"] >= 1
+    rec = out["recommended"]
+    assert rec and rec["argv"][:4] == ["python", "-m",
+                                       "repro.launch.train", "--arch"]
+    rows = out["rows"]
+    assert len(rows) == out["n_candidates"]
+    front_labels = {row["label"] for row in rows if row["on_frontier"]}
+    assert rec["label"] in front_labels
+    # dominated rows point at a frontier label
+    for row in rows:
+        if not row["on_frontier"]:
+            assert row["dominated_by"] in front_labels
+
+
+def test_mklint_json_and_plan(tmp_path):
+    r = subprocess.run(
+        [sys.executable, "tools/mklint.py", "--arch", JAMBA, "--smoke",
+         "--stages", "2", "--microbatch", "2", "--mesh-shape", "2,2,2",
+         "--axes", "stage,data,model", "--global-batch", "8",
+         "--seq-len", "64", "--plan", "--no-kernels", "--format", "json"],
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout)
+    assert out["version"] == 1 and len(out["reports"]) == 2
+    verify_rep, plan_rep = out["reports"]
+    assert verify_rep["ok"] and plan_rep["ok"]
+    rules = {d["rule"] for d in plan_rep["diagnostics"]}
+    assert {"MK-T001", "MK-T003"} <= rules
+    assert all(d["severity"] == "warning"
+               for d in plan_rep["diagnostics"])

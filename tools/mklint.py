@@ -21,6 +21,16 @@ Examples:
   # pp x tp cell) in one process
   python tools/mklint.py --preset bench-smoke
 
+  # machine-readable reports (stable schema; CI problem matcher reads
+  # the default text format)
+  python tools/mklint.py --preset bench-smoke --format json
+
+  # also run the MK-T planner checks: is this config statically
+  # dominated on its own mesh?
+  python tools/mklint.py --arch jamba-v0.1-52b --smoke --stages 2 \
+      --microbatch 2 --mesh-shape 2,2,2 --axes stage,data,model \
+      --global-batch 8 --seq-len 64 --plan --mem-budget-gb 16
+
 Device handling: argument parsing and the mesh-size arithmetic run
 before any jax import; the needed fake host device count is injected
 via XLA_FLAGS, so linting a 16-device mesh works on a laptop CPU.
@@ -105,12 +115,60 @@ def _parse_args(argv):
     ap.add_argument("--no-kernels", action="store_true",
                     help="skip the (config-independent) Pallas kernel "
                          "geometry checks")
+    ap.add_argument("--plan", action="store_true",
+                    help="also run the MK-T planner checks: score the "
+                         "config's whole launch space (analytic cost "
+                         "models, nothing compiles) and warn if it is "
+                         "statically dominated")
+    ap.add_argument("--mem-budget-gb", type=float, default=None,
+                    help="per-device memory budget for the MK-T002 "
+                         "peak-bytes check (with --plan)")
+    ap.add_argument("--format", choices=["text", "json"], default="text",
+                    help="json emits a stable schema (version, reports "
+                         "with rule/severity/loc/msg/hint) for tooling")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="also print info-severity diagnostics")
     args = ap.parse_args(argv)
     if not args.preset and not args.arch:
         ap.error("pass --arch (one config) or --preset bench-smoke")
+    if args.plan and args.preset:
+        ap.error("--plan checks one --arch config, not a preset")
     return args
+
+
+def _plan_report(args, cfg: dict):
+    """Run the MK-T planner checks on the flag-specified config.
+
+    Pure arithmetic over the analytic cost models — rebuilds the
+    `LaunchCandidate` the flags describe, enumerates its device count's
+    launch space, and reports dominated/over-budget/leaving-bubble
+    findings as warnings.
+    """
+    from repro.analysis.planner import LaunchCandidate, check_plan
+    from repro.configs import get_config, get_smoke
+
+    model = (get_smoke(cfg["arch"]) if cfg.get("smoke")
+             else get_config(cfg["arch"]))
+    stages, dp, tp = cfg.get("stages", 1), cfg.get("data_par"), \
+        cfg.get("model_par", 1)
+    shape, axes = cfg.get("mesh_shape"), cfg.get("axes")
+    if shape and axes:                    # explicit mesh wins, per train.py
+        sizes = dict(zip([a.strip() for a in str(axes).split(",")],
+                         [int(s) for s in str(shape).split(",")]))
+        stages = sizes.get("stage", stages)
+        dp = sizes.get("data", dp)
+        tp = sizes.get("model", tp)
+    chosen = LaunchCandidate(
+        stages=stages, microbatch=max(cfg.get("microbatch", 1), 1),
+        schedule=cfg.get("schedule", "gpipe"),
+        virtual_stages=max(cfg.get("virtual_stages", 1), 1),
+        tp=max(tp or 1, 1), dp=max(dp or 1, 1),
+        kernels="pallas" if "kernels_pallas" in cfg.get("flags", ())
+        else "off")
+    budget = (args.mem_budget_gb * 2**30
+              if args.mem_budget_gb is not None else None)
+    return check_plan(model, chosen, global_batch=cfg["global_batch"],
+                      seq_len=cfg["seq_len"], mem_budget_bytes=budget)
 
 
 def main(argv=None) -> int:
@@ -138,20 +196,34 @@ def main(argv=None) -> int:
     from repro.configs import SHAPES
 
     failed = 0
+    reports = []
     for i, cfg in enumerate(configs):
         shape = cfg.pop("shape", None)
         if shape:
             cfg.setdefault("global_batch", SHAPES[shape].global_batch)
             cfg.setdefault("seq_len", SHAPES[shape].seq_len)
         # kernel geometry is config-independent: check it once per run
-        cfg.setdefault("check_kernels", not args.no_kernels and i == 0)
-        report = verify_launch(**cfg)
-        print(report.format(verbose=args.verbose))
+        kw = dict(cfg)
+        kw.setdefault("check_kernels", not args.no_kernels and i == 0)
+        report = verify_launch(**kw)
+        reports.append(report)
+        if args.plan:
+            # MK-T diagnostics are warnings by design: planners advise,
+            # launches proceed — --plan never flips the exit code
+            reports.append(_plan_report(args, cfg))
         if not report.ok:
             failed += 1
-    if len(configs) > 1:
-        print(f"mklint: {len(configs) - failed}/{len(configs)} configs "
-              "clean")
+    if args.format == "json":
+        import json
+        print(json.dumps({"version": 1,
+                          "reports": [r.as_dict() for r in reports]},
+                         indent=1, sort_keys=True))
+    else:
+        for report in reports:
+            print(report.format(verbose=args.verbose))
+        if len(configs) > 1:
+            print(f"mklint: {len(configs) - failed}/{len(configs)} "
+                  "configs clean")
     return 1 if failed else 0
 
 
