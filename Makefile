@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-dist test-kernels bench bench-smoke lint-programs \
-	quickstart docs-check
+.PHONY: test test-dist test-kernels test-ft bench bench-smoke \
+	lint-programs quickstart docs-check
 
 # tier-1: the fast single-device suite (multi-device cases run in
 # subprocesses that set their own XLA_FLAGS, so this works on 1 CPU)
@@ -45,6 +45,21 @@ test-kernels:
 	    --global-batch 2 --seq-len 64 --kernels pallas \
 	    --ckpt-dir checkpoints/kernels-smoke
 
+# fault-tolerance gate (docs/fault-tolerance.md): the sharded-checkpoint
+# contract + the elastic suite (incl. the kill-one-stage e2e, which
+# spawns its own 8-fake-device subprocesses), then an elastic CLI smoke
+# through the real train entrypoint: --stages 3, stage 1 killed at step
+# 4, run finishes on the surviving 2-stage mesh
+test-ft:
+	$(PY) -m pytest -q tests/test_ckpt.py tests/test_elastic.py
+	rm -rf checkpoints/elastic-smoke
+	XLA_FLAGS=--xla_force_host_platform_device_count=3 \
+	$(PY) -m repro.launch.train --arch jamba-v0.1-52b --smoke --steps 6 \
+	    --global-batch 4 --seq-len 16 --stages 3 --microbatch 2 \
+	    --mesh-shape 3,1,1 --axes stage,data,model --schedule 1f1b \
+	    --elastic --inject-fail-step 4 --inject-fail-stage 1 \
+	    --ckpt-dir checkpoints/elastic-smoke --ckpt-every 2
+
 bench:
 	$(PY) -m benchmarks.run
 
@@ -64,6 +79,7 @@ bench-smoke:
 	    --schedule interleaved --virtual-stages 2 \
 	    --out results/dryrun-smoke
 	$(PY) -m benchmarks.planner_bench
+	$(PY) -m benchmarks.ckpt_bench
 	$(PY) -m benchmarks.run --tolerate-failures
 
 # mklint: statically verify every bench-smoke launch config (every

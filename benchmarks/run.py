@@ -22,6 +22,7 @@ SECTIONS = [
     ("pipeline bubble (measured vs model)", "pipeline_bubble"),
     ("roofline (dry-run)", "roofline"),
     ("planner frontier (mkplan)", "planner_bench"),
+    ("checkpoint v1 vs v2", "ckpt_bench"),
 ]
 
 

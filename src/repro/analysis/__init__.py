@@ -33,6 +33,7 @@ from .costmodel import (estimate_block_costs, estimate_collective_bytes,
 from .dataflow import check_step_program
 from .diagnostics import (RULES, Diagnostic, DiagnosticError, Report,
                           Severity, error, info, warning)
+from .elastic import check_restore_manifest, check_shrink
 from .meshcli import check_mesh_cli, resolve_mesh_cli
 from .planner import (LaunchCandidate, check_launch, check_plan,
                       enumerate_configs, frontier, plan_frontier)
@@ -41,6 +42,7 @@ from .verify import verify_launch
 __all__ = [
     "Diagnostic", "DiagnosticError", "LaunchCandidate", "RULES",
     "Report", "Severity", "check_launch", "check_mesh_cli", "check_plan",
+    "check_restore_manifest", "check_shrink",
     "check_step_program", "enumerate_configs", "error",
     "estimate_block_costs", "estimate_collective_bytes", "frontier",
     "info", "kernel_footprint", "pipeline_bubble_fraction",

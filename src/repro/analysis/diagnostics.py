@@ -20,6 +20,7 @@ Rule families (catalog in `RULES`, prose in docs/static-analysis.md):
 - ``MK-K...`` Pallas kernel geometry
 - ``MK-M...`` mesh CLI / axis validation
 - ``MK-L...`` launch-configuration arithmetic
+- ``MK-R...`` checkpoint restore / elastic shrink
 - ``MK-T...`` tradeoff-space planning (cost-model frontier)
 """
 from __future__ import annotations
@@ -92,6 +93,10 @@ RULES: dict[str, str] = {
     "MK-L005": "mutually exclusive launch flags",
     "MK-L006": "conflicting kernel modes",
     "MK-L007": "virtual-stage count inconsistent with the schedule",
+    # restore / elastic fault tolerance (repro.analysis.elastic)
+    "MK-R001": "checkpoint manifest does not match the restore target "
+               "(tree/shape/spec/mesh)",
+    "MK-R002": "elastic shrink would violate n_stages <= n_repeats",
     # tradeoff-space planning (repro.analysis.planner)
     "MK-T001": "chosen config statically dominated by a same-mesh "
                "alternative",

@@ -1,0 +1,185 @@
+"""Restore/elastic lint (rule family ``MK-R``).
+
+The fault-tolerance layer gained two places where a wrong launch used
+to fail deep inside jax with an unreadable traceback (or, worse,
+silently replicate state):
+
+- **restore**: a v2 checkpoint manifest records each leaf's global
+  shape, dtype, `PartitionSpec`, and save-time mesh.  When the restored
+  job's tree or mesh disagrees, `check_restore_manifest` says exactly
+  which leaf and why (``MK-R001``) *before* any shard file is read —
+  tree/shape mismatches are errors (the restore cannot produce the
+  requested state), spec entries the new mesh cannot realize are
+  warnings (the restore proceeds; those leaves land replicated unless
+  explicit shardings resharded them);
+- **elastic shrink**: on device loss the driver re-runs `plan_pipeline`
+  on the surviving mesh.  `check_shrink` (``MK-R002``) guards the one
+  arithmetic fact no re-plan can repair — every (virtual) stage still
+  needs at least one repeat of the layer stack to hold — so a doomed
+  shrink aborts with the surviving options named instead of a
+  ValueError from the middle of the planner.
+
+Like the rest of `repro.analysis`, this module is jax-free at import:
+manifests are plain dicts, meshes arrive as ``{"axes": [...],
+"shape": [...]}`` records, tree info as ``{key: shape}`` mappings.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from .diagnostics import Diagnostic, error, warning
+
+
+def manifest_error(loc: str, msg: str, hint: str = "") -> Diagnostic:
+    """An MK-R001 error record (corrupt manifest / shard, tree
+    mismatch) — the ckpt layer raises these as `DiagnosticError`."""
+    return error("MK-R001", loc, msg, hint)
+
+
+def _mesh_sizes(mesh: Mapping | None) -> dict[str, int]:
+    if not mesh:
+        return {}
+    if "axes" in mesh:
+        return {a: int(s) for a, s in zip(mesh["axes"], mesh["shape"])}
+    return {a: int(s) for a, s in mesh.items()}
+
+
+def check_restore_manifest(manifest: Mapping[str, Any],
+                           like: Mapping[str, tuple] | None = None,
+                           mesh: Mapping | None = None,
+                           loc: str = "restore") -> list[Diagnostic]:
+    """Lint a v2 checkpoint manifest against a restore target (MK-R001).
+
+    `like` maps leaf key → expected global shape (the restored tree's
+    structure); `mesh` is the restore mesh as ``{"axes", "shape"}`` (or
+    ``{axis: size}``).  Errors: malformed/truncated manifest, missing or
+    extra leaves, global-shape mismatches.  Warnings: recorded
+    PartitionSpec entries the restore mesh cannot realize (axis absent
+    or dim not divisible) — legal, but the leaf arrives replicated
+    unless the caller passes shardings for the new mesh.
+    """
+    diags: list[Diagnostic] = []
+    leaves = manifest.get("leaves")
+    if not isinstance(leaves, list):
+        diags.append(error(
+            "MK-R001", loc,
+            "manifest has no 'leaves' list — truncated or not a v2 "
+            "checkpoint manifest",
+            hint="v1 checkpoints carry a 'keys' list instead; pass the "
+                 "directory through load_checkpoint, which dispatches "
+                 "on the manifest version"))
+        return diags
+    by_key: dict[str, dict] = {}
+    for rec in leaves:
+        if not isinstance(rec, dict) or "key" not in rec \
+                or "shape" not in rec or "shards" not in rec:
+            diags.append(error(
+                "MK-R001", loc,
+                f"malformed leaf record {rec!r:.80}",
+                hint="the manifest was corrupted — restore an older "
+                     "checkpoint"))
+            continue
+        by_key[rec["key"]] = rec
+
+    if like is not None:
+        missing = sorted(set(like) - set(by_key))
+        extra = sorted(set(by_key) - set(like))
+        if missing:
+            diags.append(error(
+                "MK-R001", loc,
+                f"checkpoint is missing {len(missing)} leaves the "
+                f"restored tree expects (first: {missing[0]!r})",
+                hint="the training state's pytree structure changed "
+                     "since the save — restore with the saved "
+                     "structure, or migrate the checkpoint"))
+        if extra:
+            diags.append(error(
+                "MK-R001", loc,
+                f"checkpoint carries {len(extra)} leaves the restored "
+                f"tree does not expect (first: {extra[0]!r})",
+                hint="restoring a larger state into a smaller tree "
+                     "drops data — restore with the saved structure"))
+        for key, shape in like.items():
+            rec = by_key.get(key)
+            if rec is None:
+                continue
+            if tuple(rec["shape"]) != tuple(shape):
+                diags.append(error(
+                    "MK-R001", f"{loc}:{key}",
+                    f"global shape {tuple(rec['shape'])} in the "
+                    f"manifest vs {tuple(shape)} in the restore tree",
+                    hint="global shapes are mesh-independent — a "
+                         "mismatch means a different model config, not "
+                         "a different mesh; check arch/--smoke flags"))
+
+    sizes = _mesh_sizes(mesh)
+    if sizes:
+        for key, rec in by_key.items():
+            spec = rec.get("spec")
+            if not spec:
+                continue
+            shape = tuple(rec.get("shape", ()))
+            for d, entry in enumerate(spec):
+                axes = ([entry] if isinstance(entry, str)
+                        else list(entry or []))
+                if not axes:
+                    continue
+                absent = [a for a in axes if a not in sizes]
+                if absent:
+                    diags.append(warning(
+                        "MK-R001", f"{loc}:{key}",
+                        f"saved spec names axis {absent[0]!r} which the "
+                        f"restore mesh {sizes} does not have",
+                        hint="legal — the leaf reassembles from its "
+                             "shards and lands replicated; pass "
+                             "shardings built for the new mesh "
+                             "(sanitize_specs) to reshard it"))
+                    continue
+                n = 1
+                for a in axes:
+                    n *= sizes[a]
+                if d < len(shape) and shape[d] % n:
+                    diags.append(warning(
+                        "MK-R001", f"{loc}:{key}",
+                        f"saved spec shards dim {d} (size {shape[d]}) "
+                        f"over {axes} = {n} shards, which does not "
+                        f"divide on the restore mesh",
+                        hint="the leaf restores replicated on this "
+                             "mesh; shrink the axis or accept "
+                             "replication"))
+    return diags
+
+
+def check_shrink(n_repeats: int, n_stages: int, virtual_stages: int = 1,
+                 loc: str = "elastic-shrink") -> list[Diagnostic]:
+    """MK-R002: can a shrunk stage axis still be re-planned?
+
+    `plan_pipeline` accepts any ``virtual_stages * n_stages <=
+    n_repeats`` (heterogeneous padded stacks relax divisibility), so the
+    only unrecoverable shrink is one where a (virtual) stage would hold
+    no repeats at all — or nothing survives.
+    """
+    diags: list[Diagnostic] = []
+    S, v, R = int(n_stages), int(virtual_stages), int(n_repeats)
+    if S < 1:
+        diags.append(error(
+            "MK-R002", loc,
+            f"no stages survive the shrink (n_stages={S})",
+            hint="nothing to re-plan onto — the job must abort and "
+                 "restart from the latest checkpoint on new hardware"))
+        return diags
+    if v * S > R:
+        hint = (f"lower --virtual-stages (v={v} needs v*stages <= "
+                f"{R})" if v > 1 else
+                "every stage needs at least one repeat; shrink cannot "
+                "re-plan — restart on a mesh with a stage axis <= "
+                f"{R}")
+        diags.append(error(
+            "MK-R002", loc,
+            f"surviving stage axis needs virtual_stages*n_stages = "
+            f"{v}*{S} = {v * S} <= n_repeats = {R}",
+            hint=hint))
+    return diags
+
+
+__all__ = ["check_restore_manifest", "check_shrink", "manifest_error"]

@@ -1,5 +1,9 @@
-from .checkpoint import (CheckpointManager, latest_step, load_checkpoint,
-                         save_checkpoint)
+from .checkpoint import (CheckpointManager, checkpoint_path, latest_step,
+                         load_checkpoint, read_manifest, save_checkpoint,
+                         save_checkpoint_v1, snapshot_nbytes,
+                         snapshot_tree, spec_from_json, write_snapshot)
 
-__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
-           "save_checkpoint"]
+__all__ = ["CheckpointManager", "checkpoint_path", "latest_step",
+           "load_checkpoint", "read_manifest", "save_checkpoint",
+           "save_checkpoint_v1", "snapshot_nbytes", "snapshot_tree",
+           "spec_from_json", "write_snapshot"]

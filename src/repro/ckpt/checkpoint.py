@@ -1,35 +1,246 @@
-"""Sharded, atomic, async checkpointing.
+"""Sharded, mesh-agnostic, atomic, async checkpointing (format v2).
 
-Layout: <dir>/step_<N>/{arrays.npz, manifest.json} written to a temp dir
-and atomically renamed, so a crash mid-save never corrupts the latest
-checkpoint.  `CheckpointManager` keeps a bounded history, saves on a
-background thread (training continues), and `restore()` resharding arrays
-onto whatever mesh the restarted job has (elastic restarts).
+Layout::
+
+    <dir>/step_<N>[_emergency]/
+        manifest.json            # format version, per-leaf metadata
+        shards/L<i>_S<j>.npy     # one file per unique array shard
+
+Save never host-gathers a full array: each leaf is snapshotted through
+`jax.Array.addressable_shards`, so only per-device shard views are
+copied to host (deduplicated by shard index — a leaf replicated over 8
+devices writes one file, a stage-sharded leaf writes one file per stage
+slice).  The manifest records, per leaf, the *global* shape, dtype,
+`PartitionSpec`, and mesh axes/shape it was saved under, which is what
+makes restore mesh-agnostic: `load_checkpoint` reassembles the global
+array on host from the shard files and `device_put`s it with whatever
+shardings the restored job's mesh wants — a different stage count, a
+different data degree, or a single device.
+
+Crash safety and history are unchanged from v1: checkpoints are written
+to a temp dir and atomically renamed (a crash mid-save never corrupts
+the newest checkpoint), `CheckpointManager` saves on a background
+thread with a bounded history, and the v1 single-``arrays.npz`` format
+is still readable (`load_checkpoint` dispatches on the manifest's
+``version``; `save_checkpoint_v1` keeps the host-gathering writer for
+migration tests and the save-path A/B in ``benchmarks/ckpt_bench.py``).
+
+Emergency saves (``tag="emergency"``) publish to a distinct
+``step_<N>_emergency`` directory so they never clobber a periodic
+checkpoint at the same step, and `_gc` never collects the newest
+emergency checkpoint.
+
+Restore is linted before any array is touched: `check_restore_manifest`
+(`repro.analysis.elastic`, rule ``MK-R001``) compares the manifest
+against the target tree and mesh — tree/shape mismatches and corrupt
+shard files raise a `DiagnosticError` with a fix hint, spec entries the
+new mesh cannot realize are logged as warnings (the restore still
+proceeds; those leaves land replicated unless explicit shardings say
+otherwise).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import logging
 import pathlib
 import shutil
 import threading
 import time
-from typing import Any
+import zlib
+from typing import Any, Sequence
 
 import jax
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+log = logging.getLogger("repro.ckpt")
+
+FORMAT_VERSION = 2
+
+#: checkpoint kinds: periodic saves publish to ``step_<N>``, emergency
+#: saves (the driver's last-good-state dump on a failure) to
+#: ``step_<N>_emergency`` — distinct names, so an emergency save at a
+#: step that also has a periodic checkpoint clobbers nothing
+TAGS = ("periodic", "emergency")
+
+
+def _key(path: tuple) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    """v1 helper: host-gathered flat {key: array} (kept for the legacy
+    writer and the v1 read path)."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        flat[key] = np.asarray(leaf)
+        flat[_key(path)] = np.asarray(leaf)
     return flat
 
 
+# ------------------------------------------------------------- snapshot
+def _spec_to_json(spec: PartitionSpec | None) -> list | None:
+    """PartitionSpec → JSON: each entry None | "axis" | ["a", "b"]."""
+    if spec is None:
+        return None
+    out: list = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, (tuple, list)):
+            out.append([str(a) for a in entry])
+        else:
+            out.append(str(entry))
+    return out
+
+
+def spec_from_json(entries: list | None) -> PartitionSpec | None:
+    """Inverse of `_spec_to_json` (tuple entries come back as tuples)."""
+    if entries is None:
+        return None
+    return PartitionSpec(*[tuple(e) if isinstance(e, list) else e
+                           for e in entries])
+
+
+def _norm_index(index: tuple, shape: tuple[int, ...]
+                ) -> tuple[tuple[int, int], ...]:
+    """A shard's `.index` (tuple of slices) → ((start, stop), ...)."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class LeafSnapshot:
+    """One leaf's host-side shard snapshot + restore metadata."""
+    key: str
+    shape: tuple[int, ...]
+    dtype: str
+    spec: list | None                  # serialized PartitionSpec
+    mesh: dict | None                  # {"axes": [...], "shape": [...]}
+    shards: list[tuple[tuple[tuple[int, int], ...], np.ndarray]]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for _, a in self.shards)
+
+
+def snapshot_tree(tree: Any) -> list[LeafSnapshot]:
+    """Copy each leaf's *addressable shards* to host, deduplicated by
+    shard index — the full array is never materialized in one buffer.
+
+    Called synchronously by `CheckpointManager.save` so the background
+    writer works from a stable copy; the per-shard copies are the only
+    device→host traffic the save path performs.
+    """
+    snaps: list[LeafSnapshot] = []
+    for i, (path, leaf) in enumerate(
+            jax.tree_util.tree_flatten_with_path(tree)[0]):
+        key = _key(path)
+        spec = mesh = None
+        if isinstance(leaf, jax.Array):
+            sharding = leaf.sharding
+            if isinstance(sharding, NamedSharding):
+                spec = _spec_to_json(sharding.spec)
+                mesh = {"axes": list(sharding.mesh.axis_names),
+                        "shape": [int(s) for s in
+                                  sharding.mesh.devices.shape]}
+            seen: dict[tuple, np.ndarray] = {}
+            for sh in leaf.addressable_shards:
+                idx = _norm_index(sh.index, leaf.shape)
+                if idx not in seen:
+                    seen[idx] = np.asarray(sh.data)
+            shards = sorted(seen.items())
+            shape, dtype = tuple(leaf.shape), str(leaf.dtype)
+        else:
+            arr = np.asarray(leaf)
+            shards = [(tuple((0, d) for d in arr.shape), arr)]
+            shape, dtype = tuple(arr.shape), str(arr.dtype)
+        snaps.append(LeafSnapshot(key=key, shape=shape, dtype=dtype,
+                                  spec=spec, mesh=mesh, shards=shards))
+    return snaps
+
+
+def snapshot_nbytes(snaps: Sequence[LeafSnapshot]) -> int:
+    """Total unique-shard bytes a save of `snaps` writes (the v2 side of
+    the ``benchmarks/ckpt_bench.py`` bytes-moved row)."""
+    return sum(s.nbytes for s in snaps)
+
+
+# ------------------------------------------------------------ save path
+def _step_dir_name(step: int, tag: str = "periodic") -> str:
+    if tag not in TAGS:
+        raise ValueError(f"unknown checkpoint tag {tag!r}; want {TAGS}")
+    suffix = "" if tag == "periodic" else f"_{tag}"
+    return f"step_{step:08d}{suffix}"
+
+
+def write_snapshot(directory: str | pathlib.Path, step: int,
+                   snaps: Sequence[LeafSnapshot],
+                   extra: dict | None = None,
+                   tag: str = "periodic") -> pathlib.Path:
+    """Publish an already-snapshotted tree: shard files + manifest into a
+    temp dir, then one atomic rename."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / _step_dir_name(step, tag)
+    tmp = directory / f".tmp_{final.name}_{time.time_ns()}"
+    (tmp / "shards").mkdir(parents=True)
+
+    leaves = []
+    for i, snap in enumerate(snaps):
+        recs = []
+        for j, (idx, arr) in enumerate(snap.shards):
+            fname = f"shards/L{i:04d}_S{j:03d}.npy"
+            # custom dtypes (bfloat16 & friends register as kind 'V')
+            # don't survive the .npy descr — store the raw bytes; the
+            # reader views them back through the manifest's leaf dtype
+            out_arr = arr.view(np.uint8) if arr.dtype.kind == "V" else arr
+            np.save(tmp / fname, out_arr, allow_pickle=False)
+            recs.append({"file": fname,
+                         "index": [list(p) for p in idx],
+                         "nbytes": int(arr.nbytes),
+                         "crc32": zlib.crc32(arr.tobytes())})
+        leaves.append({"key": snap.key, "shape": list(snap.shape),
+                       "dtype": snap.dtype, "spec": snap.spec,
+                       "mesh": snap.mesh, "shards": recs})
+    manifest = {
+        "version": FORMAT_VERSION,
+        "step": step,
+        "tag": tag,
+        "time": time.time(),
+        "extra": extra or {},
+        "leaves": leaves,
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                  # atomic publish
+    return final
+
+
 def save_checkpoint(directory: str | pathlib.Path, step: int, tree: Any,
-                    extra: dict | None = None) -> pathlib.Path:
+                    extra: dict | None = None,
+                    tag: str = "periodic") -> pathlib.Path:
+    """Snapshot + publish in one call (format v2, per-shard files)."""
+    return write_snapshot(directory, step, snapshot_tree(tree),
+                          extra=extra, tag=tag)
+
+
+def save_checkpoint_v1(directory: str | pathlib.Path, step: int,
+                       tree: Any, extra: dict | None = None
+                       ) -> pathlib.Path:
+    """The legacy host-gathering writer (single ``arrays.npz``).
+
+    Kept for the v1→v2 migration tests and the save-path A/B in
+    ``benchmarks/ckpt_bench.py`` — every np.asarray here materializes
+    the *full* global array on host, which is exactly what the v2 path
+    avoids.  New code should call `save_checkpoint`.
+    """
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
@@ -46,44 +257,208 @@ def save_checkpoint(directory: str | pathlib.Path, step: int, tree: Any,
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
     if final.exists():
         shutil.rmtree(final)
-    tmp.rename(final)                      # atomic publish
+    tmp.rename(final)
     return final
+
+
+# ------------------------------------------------------- step discovery
+def _step_of(path: pathlib.Path) -> int:
+    return int(path.name.split("_")[1])
+
+
+def _is_emergency(path: pathlib.Path) -> bool:
+    return path.name.endswith("_emergency")
+
+
+def _step_dirs(directory: pathlib.Path) -> list[pathlib.Path]:
+    return [p for p in directory.glob("step_*")
+            if (p / "manifest.json").exists()]
+
+
+def checkpoint_path(directory: str | pathlib.Path,
+                    step: int) -> pathlib.Path:
+    """Resolve a step to its checkpoint dir — the periodic checkpoint
+    when both it and an emergency one exist (they hold the same state;
+    the periodic dir is the canonical publish)."""
+    directory = pathlib.Path(directory)
+    periodic = directory / _step_dir_name(step)
+    if (periodic / "manifest.json").exists():
+        return periodic
+    emergency = directory / _step_dir_name(step, "emergency")
+    if (emergency / "manifest.json").exists():
+        return emergency
+    raise FileNotFoundError(f"no checkpoint for step {step} in "
+                            f"{directory}")
 
 
 def latest_step(directory: str | pathlib.Path) -> int | None:
     directory = pathlib.Path(directory)
     if not directory.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")
-             if (p / "manifest.json").exists()]
+    steps = [_step_of(p) for p in _step_dirs(directory)]
     return max(steps) if steps else None
+
+
+def read_manifest(directory: str | pathlib.Path, step: int) -> dict:
+    path = checkpoint_path(directory, step) / "manifest.json"
+    try:
+        return json.loads(path.read_text())
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        from repro.analysis.diagnostics import DiagnosticError
+        from repro.analysis.elastic import manifest_error
+        raise DiagnosticError(
+            [manifest_error(str(path), f"manifest is not valid JSON "
+                            f"({e})",
+                            hint="the checkpoint directory is corrupt "
+                                 "or was truncated mid-copy; restore "
+                                 "an older step or re-save")]) from e
+
+
+# ------------------------------------------------------------ load path
+def _mesh_info(shardings: Any) -> dict | None:
+    """Target-mesh axes/shape from the first NamedSharding leaf (for the
+    MK-R001 restore lint); None when no mesh is discernible."""
+    for leaf in jax.tree_util.tree_leaves(shardings):
+        if isinstance(leaf, NamedSharding):
+            return {"axes": list(leaf.mesh.axis_names),
+                    "shape": [int(s) for s in leaf.mesh.devices.shape]}
+    return None
+
+
+def _assemble_leaf(path: pathlib.Path, rec: dict) -> np.ndarray:
+    """Reassemble one global array from its shard files, verifying every
+    shard's crc32/extent and the leaf's total coverage."""
+    from repro.analysis.diagnostics import DiagnosticError
+    from repro.analysis.elastic import manifest_error
+
+    shape = tuple(rec["shape"])
+    dtype = jax.numpy.dtype(rec["dtype"])
+    out = np.empty(shape, dtype)
+    covered = 0
+    for sh in rec["shards"]:
+        fpath = path / sh["file"]
+        try:
+            arr = np.load(fpath, allow_pickle=False)
+        except Exception as e:
+            raise DiagnosticError(
+                [manifest_error(
+                    f"{rec['key']} ({fpath.name})",
+                    f"shard file unreadable ({type(e).__name__}: {e})",
+                    hint="the shard was corrupted or truncated after "
+                         "publish; restore an older checkpoint")]) from e
+        want_crc = sh.get("crc32")
+        if want_crc is not None and zlib.crc32(arr.tobytes()) != want_crc:
+            raise DiagnosticError(
+                [manifest_error(
+                    f"{rec['key']} ({fpath.name})",
+                    "shard crc32 does not match the manifest",
+                    hint="bit corruption on disk; restore an older "
+                         "checkpoint or re-replicate the shard")])
+        if dtype.kind == "V" and arr.dtype != dtype:
+            arr = np.ascontiguousarray(arr).view(dtype)
+        idx = tuple(slice(a, b) for a, b in sh["index"])
+        want = tuple(b - a for a, b in sh["index"])
+        if tuple(arr.shape) != want:
+            raise DiagnosticError(
+                [manifest_error(
+                    f"{rec['key']} ({fpath.name})",
+                    f"shard shape {tuple(arr.shape)} does not match its "
+                    f"manifest index extent {want}",
+                    hint="manifest and shard files disagree — the "
+                         "checkpoint is corrupt")])
+        out[idx] = arr
+        covered += arr.size
+    if covered < out.size:
+        raise DiagnosticError(
+            [manifest_error(
+                rec["key"],
+                f"shards cover {covered} of {out.size} elements",
+                hint="missing shard files — the checkpoint is "
+                     "truncated; restore an older step")])
+    return out
 
 
 def load_checkpoint(directory: str | pathlib.Path, step: int,
                     like: Any, shardings: Any = None) -> Any:
-    """Restore into the structure of `like`; reshard when given shardings."""
-    path = pathlib.Path(directory) / f"step_{step:08d}"
-    data = np.load(path / "arrays.npz")
+    """Restore into the structure of `like`; reshard when given shardings.
+
+    Reads both formats: v2 (per-shard files) reassembles each global
+    array from its shards; v1 (single ``arrays.npz``) reads the legacy
+    blob.  Either way each leaf is placed with its entry from
+    `shardings` (a `NamedSharding` tree — *any* mesh, not just the one
+    the checkpoint was saved under) or becomes a replicated
+    ``jnp.asarray`` when `shardings` is None.
+
+    The manifest is linted first (MK-R001, `repro.analysis.elastic`):
+    tree/shape mismatches and corrupt or missing shards raise
+    `DiagnosticError` (a ValueError) naming the leaf and the fix; spec
+    entries the target mesh cannot realize only log warnings — the
+    reassembled host array restores fine, it just lands replicated
+    unless `shardings` says otherwise.
+    """
+    path = checkpoint_path(directory, step)
+    manifest = read_manifest(directory, step)
+    version = manifest.get("version", 1)
+
     leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
                     if shardings is not None else [None] * len(leaves_paths))
+
+    if version == 1:
+        data = np.load(path / "arrays.npz")
+        get = lambda key: data[key]
+        missing = [
+            _key(p) for p, _ in leaves_paths if _key(p) not in data.files]
+        if missing:
+            raise ValueError(f"checkpoint missing keys: {missing}")
+    else:
+        from repro.analysis.diagnostics import DiagnosticError
+        from repro.analysis.elastic import check_restore_manifest
+        like_info = {_key(p): tuple(np.shape(leaf))
+                     for p, leaf in leaves_paths}
+        diags = check_restore_manifest(manifest, like=like_info,
+                                       mesh=_mesh_info(shardings),
+                                       loc=str(path))
+        errors = [d for d in diags if d.is_error]
+        if errors:
+            raise DiagnosticError(errors, prefix="cannot restore:")
+        # every stage-sharded leaf warns identically on a shrunk mesh —
+        # show a few, summarize the rest
+        for d in diags[:3]:
+            log.warning("%s", d.format())
+        if len(diags) > 3:
+            log.warning("MK-R001: ... and %d more leaves whose saved "
+                        "spec the restore mesh cannot realize "
+                        "(reassembled fine; resharded per `shardings`, "
+                        "else replicated)", len(diags) - 3)
+        records = {r["key"]: r for r in manifest["leaves"]}
+        get = lambda key: _assemble_leaf(path, records[key])
+
     out = []
     for (path_k, leaf), sh in zip(leaves_paths, shard_leaves):
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path_k)
-        arr = data[key]
-        if arr.shape != tuple(leaf.shape):
+        key = _key(path_k)
+        arr = get(key)
+        if arr.shape != tuple(np.shape(leaf)):
             raise ValueError(f"{key}: checkpoint {arr.shape} vs "
-                             f"model {tuple(leaf.shape)}")
-        arr = arr.astype(leaf.dtype)
+                             f"model {tuple(np.shape(leaf))}")
+        arr = arr.astype(np.asarray(leaf).dtype)
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 class CheckpointManager:
-    """Async bounded-history manager with crash-safe publishes."""
+    """Async bounded-history manager with crash-safe publishes.
+
+    `save` snapshots the tree's addressable shards synchronously (no
+    host-gather, no full-array buffer) and writes files on a background
+    thread; errors surface on the next `wait()`/`save()`.  `_gc` keeps
+    the newest `keep` periodic checkpoints and *always* keeps the newest
+    emergency checkpoint (an emergency save records the last good state
+    after a failure — collecting it would discard exactly the state a
+    post-mortem restart needs).
+    """
 
     def __init__(self, directory: str | pathlib.Path, keep: int = 3):
         self.directory = pathlib.Path(directory)
@@ -92,13 +467,14 @@ class CheckpointManager:
         self._error: BaseException | None = None
 
     def save(self, step: int, tree: Any, extra: dict | None = None,
-             blocking: bool = False) -> None:
+             blocking: bool = False, tag: str = "periodic") -> None:
         self.wait()                        # one in flight at a time
-        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+        snaps = snapshot_tree(tree)        # per-shard snapshot now
 
         def _run():
             try:
-                save_checkpoint(self.directory, step, host_tree, extra)
+                write_snapshot(self.directory, step, snaps, extra=extra,
+                               tag=tag)
                 self._gc()
             except BaseException as e:     # surfaced on next wait()
                 self._error = e
@@ -124,8 +500,14 @@ class CheckpointManager:
         return step, load_checkpoint(self.directory, step, like, shardings)
 
     def _gc(self) -> None:
-        steps = sorted(int(p.name.split("_")[1])
-                       for p in self.directory.glob("step_*"))
-        for s in steps[:-self.keep]:
-            shutil.rmtree(self.directory / f"step_{s:08d}",
-                          ignore_errors=True)
+        dirs = _step_dirs(self.directory)
+        periodic = sorted((p for p in dirs if not _is_emergency(p)),
+                          key=_step_of)
+        emergency = sorted((p for p in dirs if _is_emergency(p)),
+                           key=_step_of)
+        drop = periodic[:-self.keep] if self.keep > 0 else periodic
+        # the newest emergency checkpoint is never collected; older
+        # emergencies fall under the same bounded-history policy
+        drop += emergency[:-max(self.keep, 1)]
+        for p in drop:
+            shutil.rmtree(p, ignore_errors=True)

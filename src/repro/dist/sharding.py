@@ -185,6 +185,26 @@ def stage_stack_specs(specs: Tree, axis: str = "stage") -> Tree:
                         is_leaf=lambda l: isinstance(l, P))
 
 
+def pipelined_param_specs(params_abs: Tree, pipelined: bool = False,
+                          axis: str = "stage") -> Tree:
+    """`param_specs`, with every layer stack's leading repeats dim
+    stage-sharded when `pipelined`.
+
+    The one spec tree the launch layer builds per mesh — `build` uses it
+    for the initial placement and the elastic rebuild uses it to derive
+    restore/reshard shardings for a *shrunk* mesh, so both paths agree
+    by construction.  Mesh-independent like `param_specs`: a stage axis
+    the repeats dim doesn't divide sanitizes to replicated at
+    application time.
+    """
+    specs = param_specs(params_abs)
+    if pipelined:
+        specs = dict(specs)
+        specs["layers"] = [stage_stack_specs(s, axis=axis)
+                           for s in specs["layers"]]
+    return specs
+
+
 def pipeline_stage_specs(stacked_abs: Tree, mesh: Mesh,
                          axis: str = "stage") -> Tree:
     """`in_specs` for a pipeline island: `param_specs` composed with

@@ -19,8 +19,9 @@ from repro.data import DataConfig, make_dataset
 from repro.dist.compression import init_stacked_errors
 from repro.dist.context import (KERNEL_MODES, kernel_mode_flags,
                                 sharding_context)
-from repro.dist.sharding import (batch_spec, data_par_size, param_specs,
-                                 stage_stack_specs, with_shardings)
+from repro.dist.sharding import (batch_spec, data_par_size,
+                                 pipelined_param_specs, sanitize_specs,
+                                 with_shardings)
 from repro.launch.mesh import make_mesh, make_train_mesh
 from repro.models.common import tp_align
 from repro.models.transformer import init_params
@@ -32,39 +33,31 @@ from repro.train.step import make_train_step
 log = logging.getLogger("repro.train")
 
 
-def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
-          seq_len: int = 128, mesh_shape=None, axes=("data", "model"),
-          lr: float = 3e-4, grad_accum: int = 1, remat: bool = True,
-          seed: int = 0, stages: int = 1, microbatch: int = 0,
-          model_par: int = 1, schedule: str = "gpipe",
-          virtual_stages: int = 1, flags: tuple = ()):
-    cfg = get_smoke(arch) if smoke else get_config(arch)
-    if mesh_shape is not None:
-        mesh = make_mesh(tuple(mesh_shape), tuple(axes))
-    else:
-        mesh = make_train_mesh(n_stages=stages, model_par=model_par)
+def _plan(cfg, mesh, *, stages: int, microbatch: int, global_batch: int,
+          seq_len: int, schedule: str, virtual_stages: int,
+          flags: tuple = ()):
+    """The pipeline-planning block of `build`, reusable per mesh: the
+    elastic rebuild re-runs it on the shrunk mesh with the re-planned
+    knobs.  Returns a `PipelinePlan` or None (no pipeline)."""
+    if stages <= 1:
+        return None
+    if "grad_int8" in flags:
+        raise ValueError("grad_int8 and pipeline stages are mutually "
+                         "exclusive (run one A/B at a time)")
+    if "stage" not in mesh.shape or mesh.shape["stage"] != stages:
+        raise ValueError(f"mesh {dict(mesh.shape)} lacks a stage axis "
+                         f"of size {stages}")
+    # pipeline stages compose with both data and model parallelism:
+    # the islands run over the full stage × data × model mesh, with
+    # tensor-sharded blocks inside (see repro.models.pipeline)
+    dp = data_par_size(mesh)
     tp = mesh.shape.get("model", 1)
-    if tp > 1:
-        cfg = tp_align(cfg, tp)
-
-    plan = None
-    if stages > 1:
-        if "grad_int8" in flags:
-            raise ValueError("grad_int8 and pipeline stages are mutually "
-                             "exclusive (run one A/B at a time)")
-        if "stage" not in mesh.shape or mesh.shape["stage"] != stages:
-            raise ValueError(f"mesh {dict(mesh.shape)} lacks a stage axis "
-                             f"of size {stages}")
-        # pipeline stages compose with both data and model parallelism:
-        # the islands run over the full stage × data × model mesh, with
-        # tensor-sharded blocks inside (see repro.models.pipeline)
-        dp = data_par_size(mesh)
-        n_micro = microbatch or max(global_batch // max(dp, 1), 1)
-        plan = plan_pipeline(cfg, stages, n_micro,
-                             global_batch=global_batch, seq_len=seq_len,
-                             dp=dp, tp=tp, schedule=schedule,
-                             virtual_stages=virtual_stages)
-        log.info(
+    n_micro = microbatch or max(global_batch // max(dp, 1), 1)
+    plan = plan_pipeline(cfg, stages, n_micro,
+                         global_batch=global_batch, seq_len=seq_len,
+                         dp=dp, tp=tp, schedule=schedule,
+                         virtual_stages=virtual_stages)
+    log.info(
             "pipeline plan: schedule=%s stages=%d virtual=%d micro=%d "
             "tp=%d partition=%s stage_times=%s stage_time=%.3gs "
             "padding_overhead=%.1f%% bubble=%.1f%% "
@@ -76,40 +69,24 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
             100 * plan.bubble,
             plan.peak_inflight, plan.peak_activation_bytes / 1e6,
             ["%.3g" % c for c in plan.block_costs_s])
+    return plan
 
-    params = init_params(cfg, jax.random.key(seed))
-    pspecs = param_specs(params)
-    if plan is not None:
-        # stage-partition the layer stack: device s holds its repeats only.
-        # When n_repeats doesn't divide n_stages the canonical (R, ...)
-        # leading dim can't shard evenly, so sanitization drops the stage
-        # entry and storage replicates; the in-step padded (S, K, ...)
-        # view still computes stage-local (see models.pipeline.stage_stack)
-        pspecs = dict(pspecs)
-        pspecs["layers"] = [stage_stack_specs(s) for s in pspecs["layers"]]
-    params = with_shardings(params, pspecs, mesh)
-    opt_state = adamw_init(params)
-    if "grad_int8" in flags:
-        dp = data_par_size(mesh)
-        # build the residuals pre-sharded: out_shardings makes each device
-        # materialize only its (1, ...) slice instead of dp full copies
-        err_specs = jax.tree.map(
-            lambda l: batch_spec(mesh, dp, l.ndim + 1), params)
-        from jax.sharding import NamedSharding
-        err_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), err_specs)
-        opt_state["err"] = jax.jit(
-            lambda p: init_stacked_errors(p, dp),
-            out_shardings=err_sh)(params)
+
+def _assemble_step(cfg, mesh, plan, *, lr: float, grad_accum: int,
+                   remat: bool, flags: tuple):
+    """Build + jit the train step for one concrete mesh.
+
+    Returns the driver-facing ``wrapped(state, batch)`` closure: batch
+    leaves are device_put with the mesh's batch specs, the jitted step
+    runs under the mesh + sharding context.  `build` calls this once;
+    the elastic rebuild calls it again on the shrunk mesh."""
+    from jax.sharding import NamedSharding
 
     opt = AdamWConfig(lr=lr)
-    step_fn = make_train_step(cfg, opt, grad_accum=grad_accum, remat=remat,
-                              pipeline=plan)
-
-    data = make_dataset(DataConfig(
-        seq_len=seq_len, global_batch=global_batch,
-        vocab_size=cfg.vocab_size, seed=seed))
-
-    from jax.sharding import NamedSharding
+    step_fn = make_train_step(cfg, opt, grad_accum=grad_accum,
+                              remat=remat, pipeline=plan)
+    with mesh, sharding_context(mesh, flags=flags):
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
     def wrapped(state, batch):
         params, opt_state = state
@@ -134,10 +111,113 @@ def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
             params, opt_state, metrics = jitted(params, opt_state, b)
         return (params, opt_state), metrics
 
-    with mesh, sharding_context(mesh, flags=flags):
-        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    return wrapped
+
+
+def state_shardings(state, mesh, pipelined: bool = False):
+    """`NamedSharding` tree matching a ``(params, opt_state)`` train
+    state on `mesh` — the restore/reshard target the driver threads
+    through `resume_or_init`, the retry path, and the elastic rebuild.
+
+    Specs come from `pipelined_param_specs` + `train_state_specs`
+    (moments mirror the params, scalars replicate), sanitized against
+    the concrete mesh so a non-dividing stage axis degrades to
+    replicated instead of failing."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.train.step import train_state_specs
+
+    pspecs = pipelined_param_specs(state[0], pipelined=pipelined)
+    specs = sanitize_specs(state, train_state_specs(pspecs, state[1]),
+                           mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda l: isinstance(l, P))
+
+
+def build(arch: str, *, smoke: bool = False, global_batch: int = 8,
+          seq_len: int = 128, mesh_shape=None, axes=("data", "model"),
+          lr: float = 3e-4, grad_accum: int = 1, remat: bool = True,
+          seed: int = 0, stages: int = 1, microbatch: int = 0,
+          model_par: int = 1, schedule: str = "gpipe",
+          virtual_stages: int = 1, flags: tuple = ()):
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if mesh_shape is not None:
+        mesh = make_mesh(tuple(mesh_shape), tuple(axes))
+    else:
+        mesh = make_train_mesh(n_stages=stages, model_par=model_par)
+    tp = mesh.shape.get("model", 1)
+    if tp > 1:
+        cfg = tp_align(cfg, tp)
+
+    plan = _plan(cfg, mesh, stages=stages, microbatch=microbatch,
+                 global_batch=global_batch, seq_len=seq_len,
+                 schedule=schedule, virtual_stages=virtual_stages,
+                 flags=flags)
+
+    params = init_params(cfg, jax.random.key(seed))
+    # stage-partition the layer stack: device s holds its repeats only.
+    # When n_repeats doesn't divide n_stages the canonical (R, ...)
+    # leading dim can't shard evenly, so sanitization drops the stage
+    # entry and storage replicates; the in-step padded (S, K, ...)
+    # view still computes stage-local (see models.pipeline.stage_stack)
+    pspecs = pipelined_param_specs(params, pipelined=plan is not None)
+    params = with_shardings(params, pspecs, mesh)
+    opt_state = adamw_init(params)
+    if "grad_int8" in flags:
+        dp = data_par_size(mesh)
+        # build the residuals pre-sharded: out_shardings makes each device
+        # materialize only its (1, ...) slice instead of dp full copies
+        err_specs = jax.tree.map(
+            lambda l: batch_spec(mesh, dp, l.ndim + 1), params)
+        from jax.sharding import NamedSharding
+        err_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), err_specs)
+        opt_state["err"] = jax.jit(
+            lambda p: init_stacked_errors(p, dp),
+            out_shardings=err_sh)(params)
+
+    wrapped = _assemble_step(cfg, mesh, plan, lr=lr,
+                             grad_accum=grad_accum, remat=remat,
+                             flags=flags)
+    data = make_dataset(DataConfig(
+        seq_len=seq_len, global_batch=global_batch,
+        vocab_size=cfg.vocab_size, seed=seed))
 
     return cfg, mesh, (params, opt_state), wrapped, data
+
+
+def build_elastic(arch: str, *, global_batch: int = 8, seq_len: int = 128,
+                  lr: float = 3e-4, grad_accum: int = 1,
+                  remat: bool = True, flags: tuple = (), **kw):
+    """`build`, plus everything the elastic driver needs to survive a
+    stage loss.
+
+    Returns ``(cfg, mesh, state, wrapped, data, bindings, shardings)``:
+    the usual 5-tuple, an `ElasticBindings` whose ``rebuild(new_mesh,
+    candidate)`` re-plans the pipeline, re-jits the step, and hands back
+    the new step_fn + state shardings, and the `NamedSharding` tree for
+    the *initial* mesh (so the driver restores sharded from step 0)."""
+    from repro.runtime import ElasticBindings
+
+    cfg, mesh, state, wrapped, data = build(
+        arch, global_batch=global_batch, seq_len=seq_len, lr=lr,
+        grad_accum=grad_accum, remat=remat, flags=flags, **kw)
+
+    def rebuild(new_mesh, cand):
+        plan = _plan(cfg, new_mesh, stages=cand.stages,
+                     microbatch=cand.microbatch,
+                     global_batch=global_batch, seq_len=seq_len,
+                     schedule=cand.schedule,
+                     virtual_stages=cand.virtual_stages, flags=flags)
+        step_fn = _assemble_step(cfg, new_mesh, plan, lr=lr,
+                                 grad_accum=grad_accum, remat=remat,
+                                 flags=flags)
+        return step_fn, state_shardings(state, new_mesh,
+                                        pipelined=plan is not None)
+
+    bindings = ElasticBindings(cfg=cfg, global_batch=global_batch,
+                               seq_len=seq_len, rebuild=rebuild)
+    pipelined = mesh.shape.get("stage", 1) > 1
+    return (cfg, mesh, state, wrapped, data, bindings,
+            state_shardings(state, mesh, pipelined=pipelined))
 
 
 # single source of truth for axis names / rank defaults lives with the
@@ -242,6 +322,20 @@ def main() -> None:
                          "planner's MK-T002 peak-bytes warning")
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--elastic", action="store_true",
+                    help="survive stage-device loss: shrink the stage "
+                         "axis, re-plan the schedule knobs through the "
+                         "mkplan cost models (MK-R002 gated), reshard "
+                         "from the latest sharded checkpoint, resume at "
+                         "the restored data step — see "
+                         "docs/fault-tolerance.md")
+    ap.add_argument("--inject-fail-step", type=int, default=None,
+                    help="deterministic fault injection: kill one "
+                         "stage's devices at this data step "
+                         "(repro.runtime.faultinject; needs --elastic "
+                         "to survive it)")
+    ap.add_argument("--inject-fail-stage", type=int, default=0,
+                    help="which stage slice --inject-fail-step kills")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -289,23 +383,41 @@ def main() -> None:
             print(plan_report.format())
     kw = {} if mesh_shape is None else {"mesh_shape": mesh_shape,
                                         "axes": axes}
-    cfg, mesh, state, step_fn, data = build(
-        args.arch, smoke=args.smoke, global_batch=args.global_batch,
+    build_kw = dict(
+        smoke=args.smoke, global_batch=args.global_batch,
         seq_len=args.seq_len, lr=args.lr, grad_accum=args.grad_accum,
         stages=args.stages, microbatch=args.microbatch,
         model_par=args.model_par, schedule=args.schedule,
         virtual_stages=args.virtual_stages, flags=flags, **kw)
-    log.info("arch=%s params=%.1fM mesh=%s", cfg.name,
-             cfg.n_params() / 1e6, dict(mesh.shape))
+    bindings = shardings = None
+    if args.elastic:
+        cfg, mesh, state, step_fn, data, bindings, shardings = \
+            build_elastic(args.arch, **build_kw)
+    else:
+        cfg, mesh, state, step_fn, data = build(args.arch, **build_kw)
+    log.info("arch=%s params=%.1fM mesh=%s elastic=%s", cfg.name,
+             cfg.n_params() / 1e6, dict(mesh.shape), args.elastic)
+
+    injector = None
+    if args.inject_fail_step is not None:
+        from repro.runtime import FaultInjector, FaultSpec
+        injector = FaultInjector(
+            [FaultSpec(step=args.inject_fail_step,
+                       stage=args.inject_fail_stage)],
+            mesh=mesh, ckpt_dir=args.ckpt_dir)
 
     driver = TrainDriver.resume_or_init(
         step_fn, data,
-        FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
-        state)
+        FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                 elastic=args.elastic),
+        state, shardings=shardings, mesh=mesh, elastic=bindings,
+        fault_injector=injector)
     driver.run(args.steps)
     losses = [m["loss"] for m in driver.metrics_log]
     log.info("first loss %.4f → last loss %.4f over %d steps",
              losses[0], losses[-1], len(losses))
+    for ev in driver.events:
+        log.info("recovery event: %s", ev)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,12 @@
-from .elastic import reshard_tree
+from .elastic import (ElasticBindings, choose_elastic_config,
+                      reshard_tree, shrink_mesh)
+from .faultinject import (DeviceLossError, FaultInjector, FaultSpec,
+                          corrupt_shard, is_device_loss, stage_devices,
+                          truncate_manifest)
 from .ft import FTConfig, StragglerMonitor, TrainDriver
 
-__all__ = ["reshard_tree", "FTConfig", "StragglerMonitor", "TrainDriver"]
+__all__ = ["DeviceLossError", "ElasticBindings", "FTConfig",
+           "FaultInjector", "FaultSpec", "StragglerMonitor",
+           "TrainDriver", "choose_elastic_config", "corrupt_shard",
+           "is_device_loss", "reshard_tree", "shrink_mesh",
+           "stage_devices", "truncate_manifest"]

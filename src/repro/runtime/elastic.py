@@ -1,18 +1,34 @@
-"""Elastic re-meshing: move a sharded pytree onto a different mesh.
+"""Elastic re-meshing: survive device loss by shrinking and re-planning.
 
-On pod loss (or growth) the driver rebuilds the mesh from the surviving
-devices and reshards params/optimizer state; the step function re-jits
-against the new shardings.  Data parallelism re-splits by the determinism
-contract of the data pipeline, so training resumes at the same step with
-a smaller/larger global batch per the caller's policy.
+On pod loss the driver rebuilds the mesh from the surviving devices
+(`shrink_mesh` drops the stage slices containing failed devices),
+re-runs the pipeline planner on what remains (`choose_elastic_config`
+prices every schedule knob the surviving mesh admits through the
+mkplan cost models and picks the frontier's best step-time point),
+reshards params/optimizer state from the latest sharded checkpoint
+(or `reshard_tree` in memory when none exists), and re-jits the step
+function against the new shardings.  Data parallelism re-splits by the
+determinism contract of the data pipeline (`batch_at(step)` is a pure
+function of seed and step), so training resumes at the restored step
+with bit-identical batches.
+
+`ElasticBindings` is the driver's hook into the launch layer: the
+model config plus a ``rebuild(mesh, candidate) -> (step_fn,
+shardings)`` closure (`repro.launch.train.build_elastic` constructs
+one) — `TrainDriver` owns *when* to shrink, the bindings own *how* to
+rebuild, and neither imports the other's internals.
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+import logging
+from typing import Any, Callable, Sequence
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
+
+log = logging.getLogger("repro.elastic")
 
 
 def reshard_tree(tree: Any, specs: Any, new_mesh: Mesh) -> Any:
@@ -45,3 +61,106 @@ def shrink_mesh(mesh: Mesh, failed_devices: set[int],
         return None
     new_devs = np.take(devs, keep, axis=axis_idx)
     return Mesh(new_devs, mesh.axis_names)
+
+
+def choose_elastic_config(cfg, mesh_shape, *, global_batch: int,
+                          seq_len: int,
+                          schedules: Sequence[str] | None = None,
+                          max_virtual_stages: int | None = None):
+    """Re-plan the launch config for a *fixed* surviving mesh shape.
+
+    Unlike `plan_frontier` (which walks stage × tp × dp factorizations
+    of a device count), elastic re-planning cannot move devices between
+    axes — the surviving mesh's (stage, data, model) shape is a fact.
+    What is still free are the schedule knobs: microbatch count,
+    schedule, virtual stages.  This enumerates those on the fixed shape,
+    prices each with the mkplan cost models, and returns the frontier
+    candidate with the best step-time model — so the post-shrink config
+    is the planner's choice, not "the old knobs on fewer devices".
+
+    Gated by ``MK-R002`` first: a shrink no re-plan can repair (a
+    (virtual) stage would hold zero repeats) raises `DiagnosticError`
+    naming the surviving options rather than failing inside the
+    planner.  Returns a `repro.analysis.planner.LaunchCandidate`.
+    """
+    from repro.analysis.costmodel import SCHEDULES
+    from repro.analysis.diagnostics import DiagnosticError
+    from repro.analysis.elastic import check_shrink
+    from repro.analysis.planner import LaunchCandidate, frontier, score
+
+    sizes = dict(mesh_shape)
+    stages = int(sizes.get("stage", 1))
+    dp = int(sizes.get("data", 1))
+    tp = int(sizes.get("model", 1))
+    loc = f"elastic-shrink stage={stages} data={dp} model={tp}"
+
+    diags = check_shrink(cfg.n_repeats, stages, loc=loc)
+    if any(d.is_error for d in diags):
+        raise DiagnosticError([d for d in diags if d.is_error],
+                              prefix="cannot re-plan onto the "
+                                     "surviving mesh:")
+
+    if stages <= 1:
+        return LaunchCandidate(stages=max(stages, 1), microbatch=1,
+                               schedule="gpipe", tp=tp, dp=dp)
+
+    local_batch = max(global_batch // max(dp, 1), 1)
+    micros = [m for m in range(1, local_batch + 1) if local_batch % m == 0]
+    if schedules is None:
+        schedules = SCHEDULES
+    cands: list[LaunchCandidate] = []
+    for m in micros:
+        for sched in schedules:
+            if sched != "interleaved":
+                cands.append(LaunchCandidate(
+                    stages=stages, microbatch=m, schedule=sched,
+                    tp=tp, dp=dp))
+                continue
+            v_hi = cfg.n_repeats // stages
+            if max_virtual_stages is not None:
+                v_hi = min(v_hi, max_virtual_stages)
+            for v in range(2, v_hi + 1):
+                if not check_shrink(cfg.n_repeats, stages,
+                                    virtual_stages=v, loc=loc):
+                    cands.append(LaunchCandidate(
+                        stages=stages, microbatch=m,
+                        schedule="interleaved", virtual_stages=v,
+                        tp=tp, dp=dp))
+    scored = frontier([score(cfg, c, global_batch=global_batch,
+                             seq_len=seq_len) for c in cands])
+    best = min((s for s in scored if s.on_frontier),
+               key=lambda s: s.score.step_time_s)
+    log.info("elastic re-plan on mesh %s: chose %s "
+             "(step-time model %.3gs, %d candidates, %d on frontier)",
+             sizes, best.candidate.label(), best.score.step_time_s,
+             len(scored), sum(s.on_frontier for s in scored))
+    return best.candidate
+
+
+@dataclasses.dataclass
+class ElasticBindings:
+    """What `TrainDriver` needs to rebuild after a shrink.
+
+    `rebuild(mesh, candidate)` must return ``(step_fn, shardings)`` for
+    the given mesh: a jitted ``(state, batch) -> (state, metrics)`` and
+    a `NamedSharding` tree matching the train state (the restore /
+    reshard target).  `replan` picks the candidate; callers can
+    override `schedules`/`max_virtual_stages` to constrain it.
+    """
+    cfg: Any
+    global_batch: int
+    seq_len: int
+    rebuild: Callable[[Mesh, Any], tuple[Callable, Any]]
+    stage_axis: str = "stage"
+    schedules: Sequence[str] | None = None
+    max_virtual_stages: int | None = None
+
+    def replan(self, mesh: Mesh):
+        return choose_elastic_config(
+            self.cfg, dict(mesh.shape), global_batch=self.global_batch,
+            seq_len=self.seq_len, schedules=self.schedules,
+            max_virtual_stages=self.max_virtual_stages)
+
+
+__all__ = ["ElasticBindings", "choose_elastic_config", "reshard_tree",
+           "shrink_mesh"]

@@ -1,0 +1,183 @@
+"""Deterministic fault injection for the fault-tolerance stack.
+
+Real failures are non-deterministic; tests need the opposite.  A
+`FaultInjector` holds a list of `FaultSpec`s, each pinned to a *data
+step* — the `TrainDriver` pokes the injector at the top of every step,
+and a spec fires exactly once at its step (retries and
+restore-rewinds re-visit the step without re-firing, so one injected
+failure means one failure).  Three fault kinds:
+
+- ``"device_loss"``   — raise `DeviceLossError` carrying the device ids
+  of stage k's mesh slice, the signal the driver's elastic path
+  consumes (`shrink_mesh` drops exactly those slices);
+- ``"step_error"``    — raise a plain RuntimeError (a transient step
+  failure: exercises the emergency-checkpoint + restore-retry path,
+  not the elastic one);
+- ``"corrupt_shard"`` — flip bytes in one shard file of the newest
+  checkpoint (does not raise; the *next restore* must reject it).
+
+`corrupt_shard` / `truncate_manifest` are also usable directly from
+tests that want to damage a checkpoint without a driver in the loop.
+
+On CPU meshes built with ``--xla_force_host_platform_device_count`` the
+"killed" devices keep existing — the injector simulates the loss signal
+and the driver honors it, which is exactly what the end-to-end elastic
+test needs: kill stage k at step N, shrink the stage axis, re-plan,
+reshard from the v2 checkpoint, resume, and compare trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import pathlib
+import random
+from typing import Sequence
+
+log = logging.getLogger("repro.faultinject")
+
+FAULT_KINDS = ("device_loss", "step_error", "corrupt_shard")
+
+
+class DeviceLossError(RuntimeError):
+    """A (simulated or detected) loss of specific devices."""
+
+    def __init__(self, failed_devices, msg: str | None = None):
+        self.failed_devices = set(int(d) for d in failed_devices)
+        super().__init__(msg or f"lost devices {sorted(self.failed_devices)}")
+
+
+def is_device_loss(exc: BaseException) -> bool:
+    """Does `exc` look like a device loss?  `DeviceLossError` always;
+    runtime errors from the backend match on the phrases real device
+    failures produce (a heuristic — injected faults are the reliable
+    path, this catches the detected ones)."""
+    if isinstance(exc, DeviceLossError):
+        return True
+    text = str(exc).lower()
+    return isinstance(exc, RuntimeError) and any(
+        phrase in text for phrase in
+        ("device failed", "data_loss", "device unavailable",
+         "failed to enqueue"))
+
+
+def stage_devices(mesh, stage: int, axis: str = "stage") -> set[int]:
+    """Device ids of `mesh`'s stage-`stage` slice (the set a
+    ``"device_loss"`` fault reports as failed)."""
+    import numpy as np
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {dict(mesh.shape)} has no {axis!r} axis")
+    axis_idx = mesh.axis_names.index(axis)
+    if not 0 <= stage < mesh.devices.shape[axis_idx]:
+        raise ValueError(f"stage {stage} out of range for {axis!r} size "
+                         f"{mesh.devices.shape[axis_idx]}")
+    sl = np.take(mesh.devices, stage, axis=axis_idx)
+    return {d.id for d in sl.flatten()}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault: fire `kind` at data step `step`."""
+    step: int
+    kind: str = "device_loss"
+    stage: int = 0                 # device_loss: which stage slice dies
+    key: str | None = None         # corrupt_shard: leaf-key substring
+    seed: int = 0                  # corrupt_shard: which bytes flip
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"want one of {FAULT_KINDS}")
+
+
+class FaultInjector:
+    """Drives `FaultSpec`s against a `TrainDriver` run.
+
+    The driver calls `poke(step)` before executing each data step;
+    faults whose `step` matches fire once (idempotent across the
+    retries and rewinds the failure itself causes).  `mesh` is needed
+    for ``device_loss`` (to name the dead slice), `ckpt_dir` for
+    ``corrupt_shard``.
+    """
+
+    def __init__(self, faults: Sequence[FaultSpec], mesh=None,
+                 ckpt_dir: str | pathlib.Path | None = None,
+                 axis: str = "stage"):
+        self.faults = list(faults)
+        self.mesh = mesh
+        self.ckpt_dir = ckpt_dir
+        self.axis = axis
+        self._fired: set[int] = set()
+
+    def poke(self, step: int) -> None:
+        for i, f in enumerate(self.faults):
+            if i in self._fired or f.step != step:
+                continue
+            self._fired.add(i)
+            log.warning("injecting %s at step %d", f.kind, step)
+            if f.kind == "device_loss":
+                if self.mesh is None:
+                    raise ValueError("device_loss fault needs the "
+                                     "injector constructed with mesh=")
+                raise DeviceLossError(
+                    stage_devices(self.mesh, f.stage, self.axis),
+                    f"injected loss of stage {f.stage} at step {step}")
+            if f.kind == "step_error":
+                raise RuntimeError(
+                    f"injected transient step failure at step {step}")
+            # corrupt_shard: damage the newest checkpoint, don't raise
+            if self.ckpt_dir is None:
+                raise ValueError("corrupt_shard fault needs the "
+                                 "injector constructed with ckpt_dir=")
+            corrupt_shard(self.ckpt_dir, key=f.key, seed=f.seed)
+
+
+# --------------------------------------------------- checkpoint damage
+def _latest_dir(ckpt_dir: str | pathlib.Path,
+                step: int | None) -> pathlib.Path:
+    from repro.ckpt import checkpoint_path, latest_step
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    return checkpoint_path(ckpt_dir, step)
+
+
+def corrupt_shard(ckpt_dir: str | pathlib.Path, step: int | None = None,
+                  key: str | None = None, seed: int = 0) -> pathlib.Path:
+    """Flip bytes in one shard file of a (v2) checkpoint — deterministic
+    in `seed`.  `key` narrows to shards of a leaf whose manifest key
+    contains it; default is the first shard file.  Returns the damaged
+    path.  The next restore must reject the checkpoint (MK-R001)."""
+    import json
+    path = _latest_dir(ckpt_dir, step)
+    manifest = json.loads((path / "manifest.json").read_text())
+    files = [sh["file"] for rec in manifest.get("leaves", [])
+             if key is None or key in rec["key"]
+             for sh in rec["shards"]]
+    if not files:
+        raise FileNotFoundError(
+            f"no shard files matching key={key!r} in {path}")
+    target = path / files[0]
+    raw = bytearray(target.read_bytes())
+    rng = random.Random(seed)
+    # flip a handful of bytes in the payload (past the .npy header)
+    for _ in range(8):
+        pos = rng.randrange(min(128, len(raw) - 1), len(raw))
+        raw[pos] ^= 0xFF
+    target.write_bytes(bytes(raw))
+    return target
+
+
+def truncate_manifest(ckpt_dir: str | pathlib.Path,
+                      step: int | None = None,
+                      keep_bytes: int = 64) -> pathlib.Path:
+    """Truncate a checkpoint's manifest.json to `keep_bytes` — the next
+    restore must reject it as unreadable/truncated."""
+    path = _latest_dir(ckpt_dir, step) / "manifest.json"
+    path.write_bytes(path.read_bytes()[:keep_bytes])
+    return path
+
+
+__all__ = ["DeviceLossError", "FAULT_KINDS", "FaultInjector", "FaultSpec",
+           "corrupt_shard", "is_device_loss", "stage_devices",
+           "truncate_manifest"]

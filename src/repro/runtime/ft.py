@@ -1,12 +1,26 @@
 """Fault-tolerant training driver.
 
 Production behaviours, all exercised by tests on CPU:
-  - periodic async checkpoints + emergency sync checkpoint on any failure;
-  - automatic resume from the latest manifest (bit-reproducible data replay);
+  - periodic async checkpoints + emergency sync checkpoint on any failure
+    (emergency saves publish under a distinct ``step_<N>_emergency`` tag
+    so they never clobber a periodic checkpoint at the same step);
+  - automatic resume from the latest manifest (bit-reproducible data
+    replay), restoring *with the driver's shardings* so resumed state
+    lands sharded, not replicated;
   - bounded retry-with-restore on transient step failures;
+  - elastic shrink on device loss: drop the dead stage slices
+    (`shrink_mesh`), re-plan the schedule knobs on the surviving mesh
+    through the mkplan cost models (`ElasticBindings.replan`, gated by
+    MK-R002), rebuild + re-jit the step function, reshard state from the
+    latest sharded checkpoint (mesh-agnostic v2 restore) or in memory,
+    and resume — the data step replays deterministically;
   - straggler detection from a step-time EWMA (on real pods the hook
     triggers re-compilation without the slow host / re-balancing; here it
     records and reports).
+
+Failures are injectable deterministically (`repro.runtime.faultinject`):
+pass a `FaultInjector` and the driver pokes it at the top of every data
+step, so tests pin "stage 1 dies at step 7" exactly.
 """
 from __future__ import annotations
 
@@ -18,6 +32,8 @@ from typing import Any, Callable
 import jax
 
 from repro.ckpt import CheckpointManager
+from repro.runtime.elastic import ElasticBindings, shrink_mesh
+from repro.runtime.faultinject import FaultInjector, is_device_loss
 
 log = logging.getLogger("repro.ft")
 
@@ -30,6 +46,7 @@ class FTConfig:
     max_restores: int = 3
     straggler_factor: float = 3.0     # step > factor × EWMA ⇒ straggler
     ewma_alpha: float = 0.2
+    elastic: bool = False             # shrink + re-plan on device loss
 
 
 class StragglerMonitor:
@@ -53,11 +70,21 @@ class StragglerMonitor:
 
 
 class TrainDriver:
-    """Runs (state, batch) -> (state, metrics) with checkpoint/restart."""
+    """Runs (state, batch) -> (state, metrics) with checkpoint/restart.
+
+    `shardings` (a `NamedSharding` tree matching `state`) makes every
+    restore land sharded instead of replicated — the retry path and
+    `resume_or_init` both thread it through.  `mesh` + `elastic`
+    (an `ElasticBindings`) arm the device-loss path; `fault_injector`
+    injects deterministic failures for tests.
+    """
 
     def __init__(self, step_fn: Callable, dataset: Any, cfg: FTConfig,
                  state: Any, start_step: int = 0,
-                 on_straggler: Callable[[int], None] | None = None):
+                 on_straggler: Callable[[int], None] | None = None,
+                 shardings: Any = None, mesh: Any = None,
+                 elastic: ElasticBindings | None = None,
+                 fault_injector: FaultInjector | None = None):
         self.step_fn = step_fn
         self.dataset = dataset
         self.cfg = cfg
@@ -66,7 +93,12 @@ class TrainDriver:
         self.state = state
         self.step = start_step
         self.on_straggler = on_straggler
+        self.shardings = shardings
+        self.mesh = mesh
+        self.elastic = elastic
+        self.fault_injector = fault_injector
         self.metrics_log: list[dict] = []
+        self.events: list[dict] = []       # shrink / restore history
 
     @classmethod
     def resume_or_init(cls, step_fn, dataset, cfg: FTConfig, init_state,
@@ -76,9 +108,59 @@ class TrainDriver:
         if restored is not None:
             step, state = restored
             log.info("resumed from step %d", step)
-            return cls(step_fn, dataset, cfg, state, start_step=step, **kw)
-        return cls(step_fn, dataset, cfg, init_state, start_step=0, **kw)
+            return cls(step_fn, dataset, cfg, state, start_step=step,
+                       shardings=shardings, **kw)
+        return cls(step_fn, dataset, cfg, init_state, start_step=0,
+                   shardings=shardings, **kw)
 
+    # ------------------------------------------------------------ failure
+    def _rewind(self, step: int, state: Any) -> None:
+        """Adopt a restored (step, state); metrics logged at or past the
+        restored step are about to be recomputed — drop them so the log
+        stays one row per data step."""
+        self.state = state
+        if step < self.step:
+            self.metrics_log = [m for m in self.metrics_log
+                                if m["step"] < step]
+        self.step = step
+
+    def _handle_device_loss(self, exc: BaseException) -> None:
+        """Shrink the stage axis, re-plan, reshard, resume (or re-raise
+        when nothing survives / no bindings can rebuild)."""
+        if self.elastic is None or self.mesh is None:
+            raise exc
+        failed = getattr(exc, "failed_devices", set())
+        fail_step = self.step
+        new_mesh = shrink_mesh(self.mesh, set(failed),
+                               self.elastic.stage_axis)
+        if new_mesh is None:
+            log.error("device loss %s leaves no surviving %r slice",
+                      sorted(failed), self.elastic.stage_axis)
+            raise exc
+        cand = self.elastic.replan(new_mesh)      # MK-R002 gate + mkplan
+        step_fn, shardings = self.elastic.rebuild(new_mesh, cand)
+        restored = self.manager.restore_latest(self.state, shardings)
+        if restored is not None:
+            from_step = restored[0]
+            self._rewind(*restored)
+        else:
+            # no checkpoint yet: the survivors' shards still cover the
+            # tree (CPU simulation; on real pods this branch is a loss
+            # of the un-checkpointed steps) — reshard in memory
+            from_step = self.step
+            self.state = jax.tree.map(jax.device_put, self.state,
+                                      shardings)
+        self.mesh, self.step_fn, self.shardings = new_mesh, step_fn, \
+            shardings
+        self.events.append({
+            "kind": "shrink", "at_step": fail_step,
+            "resume_step": from_step, "lost": sorted(failed),
+            "mesh": dict(new_mesh.shape), "config": cand.label()})
+        log.warning("device loss at step %d: shrunk to %s, re-planned "
+                    "to %s, resuming at step %d", fail_step,
+                    dict(new_mesh.shape), cand.label(), from_step)
+
+    # --------------------------------------------------------------- run
     def run(self, num_steps: int) -> Any:
         restores = 0
         target = self.step + num_steps
@@ -86,21 +168,38 @@ class TrainDriver:
             batch = self.dataset.batch_at(self.step)
             t0 = time.perf_counter()
             try:
+                if self.fault_injector is not None:
+                    self.fault_injector.poke(self.step)
                 self.state, metrics = self.step_fn(self.state, batch)
                 jax.block_until_ready(metrics)
-            except Exception:
+            except Exception as exc:
+                if self.elastic is not None and is_device_loss(exc):
+                    # the lost devices' state is gone — restore from the
+                    # checkpoint, don't checkpoint the wreckage
+                    self._handle_device_loss(exc)
+                    continue
                 # emergency checkpoint of the last good state, then either
-                # restore-and-retry or re-raise once the budget is spent
-                self.manager.save(self.step, self.state,
-                                  extra={"emergency": True}, blocking=True)
+                # restore-and-retry or re-raise once the budget is spent.
+                # The emergency tag publishes to step_<N>_emergency, so a
+                # periodic checkpoint at the same step survives untouched.
+                fail_step = self.step
+                self.manager.save(fail_step, self.state,
+                                  extra={"emergency": True},
+                                  blocking=True, tag="emergency")
                 restores += 1
                 if restores > self.cfg.max_restores:
                     raise
-                restored = self.manager.restore_latest(self.state)
+                restored = self.manager.restore_latest(self.state,
+                                                       self.shardings)
                 if restored is not None:
-                    self.step, self.state = restored
-                log.warning("step %d failed; restored (attempt %d)",
-                            self.step, restores)
+                    self._rewind(*restored)
+                self.events.append({"kind": "restore",
+                                    "at_step": fail_step,
+                                    "resume_step": self.step,
+                                    "attempt": restores})
+                log.warning("step %d failed; restored to step %d "
+                            "(attempt %d)", fail_step, self.step,
+                            restores)
                 continue
             dt = time.perf_counter() - t0
             if self.monitor.observe(self.step, dt) and self.on_straggler:

@@ -45,6 +45,25 @@ def zero1_specs(param_specs_tree: Any, params_tree: Any, mesh: Mesh,
     return jax.tree.map(z, param_specs_tree, params_tree)
 
 
+def train_state_specs(pspecs: Any, opt_state: Any) -> tuple:
+    """Spec tree mirroring a ``(params, opt_state)`` train state.
+
+    AdamW moments shard exactly like the params they track (`m`/`v`
+    mirror `pspecs`); the step count and any other optimizer leaves
+    (e.g. the int8 error-feedback residuals) replicate.  The result has
+    the state's tree structure, so it sanitizes / converts to
+    `NamedSharding`s with one tree.map — the restore and elastic-reshard
+    target the driver threads through every recovery path.
+    """
+    opt_specs = {}
+    for k, sub in opt_state.items():
+        if k in ("m", "v"):
+            opt_specs[k] = pspecs
+        else:
+            opt_specs[k] = jax.tree.map(lambda _: P(), sub)
+    return pspecs, opt_specs
+
+
 def _compressed_grads(loss_of, params, err, batch, mesh):
     """int8 error-feedback gradient reduction over the data axes.
 

@@ -18,7 +18,8 @@ from jax.sharding import PartitionSpec as P
 from _hypothesis_compat import given, settings, st
 
 from repro.analysis import (DiagnosticError, RULES, Severity,
-                            check_mesh_cli, check_step_program,
+                            check_mesh_cli, check_restore_manifest,
+                            check_shrink, check_step_program,
                             resolve_mesh_cli, verify_launch)
 from repro.analysis.collectives import check_closed_jaxpr
 from repro.analysis.kernels import (PallasCallRecord, check_pallas_call,
@@ -494,9 +495,79 @@ def test_rule_ids_are_stable():
     # the catalog is a public contract: additions fine, renames are not
     expected = {f"MK-{fam}{i:03d}"
                 for fam, n in (("C", 5), ("P", 9), ("S", 6), ("K", 3),
-                               ("M", 6), ("L", 7))
+                               ("M", 6), ("L", 7), ("R", 2))
                 for i in range(1, n + 1)}
     assert expected <= set(RULES)
+
+
+# ---------------------------------------------------------------- MK-R
+
+V2_MANIFEST = {
+    "version": 2, "step": 10, "tag": "periodic", "extra": {},
+    "leaves": [
+        {"key": "w", "shape": [8, 4], "dtype": "float32",
+         "spec": ["stage", None],
+         "mesh": {"axes": ["stage", "data"], "shape": [4, 2]},
+         "shards": [{"file": "shards/L0000_S000.npy",
+                     "index": [[0, 8], [0, 4]], "nbytes": 128,
+                     "crc32": 0}]},
+    ],
+}
+
+
+def test_restore_manifest_good_is_clean():
+    diags = check_restore_manifest(V2_MANIFEST, like={"w": (8, 4)},
+                                   mesh={"stage": 4, "data": 2})
+    assert diags == []
+
+
+def test_restore_manifest_truncated_fires_r001():
+    diags = check_restore_manifest({"version": 2}, like={"w": (8, 4)})
+    assert errors_of(diags) == {"MK-R001"}
+
+
+def test_restore_manifest_missing_and_extra_leaves_fire_r001():
+    diags = check_restore_manifest(V2_MANIFEST,
+                                   like={"w": (8, 4), "gone": (2,)})
+    assert errors_of(diags) == {"MK-R001"}
+    diags = check_restore_manifest(V2_MANIFEST, like={})
+    assert errors_of(diags) == {"MK-R001"}
+
+
+def test_restore_manifest_shape_mismatch_fires_r001():
+    diags = check_restore_manifest(V2_MANIFEST, like={"w": (8, 8)})
+    assert errors_of(diags) == {"MK-R001"}
+    assert any("global shape" in d.msg for d in diags)
+
+
+def test_restore_manifest_malformed_leaf_record_fires_r001():
+    bad = dict(V2_MANIFEST, leaves=[{"key": "w"}])
+    diags = check_restore_manifest(bad, like=None)
+    assert errors_of(diags) == {"MK-R001"}
+
+
+def test_restore_manifest_unrealizable_spec_warns_not_errors():
+    # restore mesh has no 'stage' axis: legal, lands replicated
+    diags = check_restore_manifest(V2_MANIFEST, like={"w": (8, 4)},
+                                   mesh={"data": 2, "model": 2})
+    assert rules_of(diags) == {"MK-R001"}
+    assert not errors_of(diags)
+    # stage axis present but 8 % 3 != 0: same — warning only
+    diags = check_restore_manifest(V2_MANIFEST, like={"w": (8, 4)},
+                                   mesh={"stage": 3, "data": 2})
+    assert rules_of(diags) == {"MK-R001"} and not errors_of(diags)
+
+
+def test_elastic_shrink_too_deep_fires_r002():
+    diags = check_shrink(n_repeats=2, n_stages=3)
+    assert errors_of(diags) == {"MK-R002"}
+    assert check_shrink(n_repeats=4, n_stages=3) == []
+
+
+def test_elastic_shrink_virtual_stage_overflow_fires_r002():
+    diags = check_shrink(n_repeats=4, n_stages=2, virtual_stages=3)
+    assert errors_of(diags) == {"MK-R002"}
+    assert "--virtual-stages" in diags[0].hint
 
 
 # ------------------------------------------------- subprocess end-to-end

@@ -1,0 +1,277 @@
+"""Sharded checkpoint format v2: mesh-agnostic save/restore.
+
+The tentpole contract, pinned here:
+  - save never host-gathers: every sharded leaf publishes per-shard
+    files (one per unique shard index), replicated leaves exactly one;
+  - restore reassembles the global arrays onto a *different* mesh —
+    fewer stages, more data shards, or a single device — with numerics
+    bit-identical to the saved state;
+  - emergency saves never clobber a periodic checkpoint at the same
+    step, and GC never collects the newest emergency;
+  - corruption (flipped shard bytes, truncated manifest) is rejected
+    with MK-R001 before any state is adopted;
+  - async manager errors surface on the next wait()/save().
+
+Cross-mesh tests run in subprocesses (the fake device count must be set
+before jax initializes).
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.analysis import DiagnosticError
+from repro.ckpt import (CheckpointManager, checkpoint_path, latest_step,
+                        load_checkpoint, read_manifest, save_checkpoint,
+                        save_checkpoint_v1, snapshot_nbytes,
+                        snapshot_tree, spec_from_json)
+from repro.ckpt.checkpoint import _norm_index, _spec_to_json
+from repro.runtime import corrupt_shard, truncate_manifest
+
+
+def small_tree():
+    return {"w": jnp.arange(24.0).reshape(4, 6),
+            "b16": jnp.ones((4, 2), jnp.bfloat16) * 0.5,
+            "opt": {"count": jnp.zeros((), jnp.int32), "pyint": 3}}
+
+
+# ------------------------------------------------------------ v2 basics
+
+def test_v2_roundtrip_mixed_dtypes(tmp_path):
+    tree = small_tree()
+    save_checkpoint(tmp_path, 5, tree, extra={"note": "x"})
+    man = read_manifest(tmp_path, 5)
+    assert man["version"] == 2 and man["tag"] == "periodic"
+    assert man["extra"] == {"note": "x"}
+    out = load_checkpoint(tmp_path, 5, tree)
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["b16"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(out["b16"], np.float32),
+                          np.asarray(tree["b16"], np.float32))
+    assert int(out["opt"]["count"]) == 0 and int(out["opt"]["pyint"]) == 3
+
+
+def test_v2_layout_is_per_shard_files(tmp_path):
+    save_checkpoint(tmp_path, 1, small_tree())
+    d = checkpoint_path(tmp_path, 1)
+    assert (d / "manifest.json").exists()
+    shard_files = sorted(p.name for p in (d / "shards").iterdir())
+    assert shard_files and all(f.endswith(".npy") for f in shard_files)
+    assert not (d / "arrays.npz").exists()   # the v1 host-gather blob
+    man = json.loads((d / "manifest.json").read_text())
+    for rec in man["leaves"]:
+        for sh in rec["shards"]:
+            assert {"file", "index", "nbytes", "crc32"} <= set(sh)
+
+
+def test_v1_migration_read_path(tmp_path):
+    tree = {"w": jnp.arange(6.0), "n": jnp.ones((2, 2))}
+    save_checkpoint_v1(tmp_path, 3, tree)
+    man = read_manifest(tmp_path, 3)
+    assert "keys" in man and man.get("version", 1) == 1
+    out = load_checkpoint(tmp_path, 3, tree)
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+def test_snapshot_nbytes_counts_unique_shards():
+    tree = {"w": jnp.ones((8, 4), jnp.float32)}
+    snaps = snapshot_tree(tree)
+    assert snapshot_nbytes(snaps) == 8 * 4 * 4
+
+
+# ------------------------------------------------- emergency tag + GC
+
+def test_emergency_save_does_not_clobber_periodic(tmp_path):
+    tree = small_tree()
+    save_checkpoint(tmp_path, 7, tree)
+    bumped = dict(tree, w=tree["w"] + 1)
+    save_checkpoint(tmp_path, 7, bumped, tag="emergency")
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert names == ["step_00000007", "step_00000007_emergency"]
+    # checkpoint_path prefers the canonical periodic publish
+    out = load_checkpoint(tmp_path, 7, tree)
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert read_manifest(tmp_path, 7)["tag"] == "periodic"
+
+
+def test_gc_never_collects_newest_emergency(tmp_path):
+    tree = small_tree()
+    m = CheckpointManager(tmp_path, keep=2)
+    m.save(5, tree, blocking=True, tag="emergency")
+    for s in (10, 20, 30, 40):
+        m.save(s, tree, blocking=True)
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    # keep=2 periodic → [30, 40]; the newest (only) emergency survives
+    assert names == ["step_00000005_emergency", "step_00000030",
+                     "step_00000040"]
+
+
+def test_async_manager_error_surfaces_on_wait(tmp_path):
+    m = CheckpointManager(tmp_path / "sub", keep=1)
+    m.save(1, {"w": jnp.ones(3)})
+    # sabotage the directory: make the target path a file so the
+    # background writer's rename fails
+    m.wait()
+    (tmp_path / "sub" / "step_00000002").write_text("in the way")
+    m.save(2, {"w": jnp.ones(3)})
+    with pytest.raises(OSError):
+        m.wait()
+    # the error is consumed — the manager is usable again
+    m.save(3, {"w": jnp.ones(3)}, blocking=True)
+    assert latest_step(tmp_path / "sub") == 3
+
+
+# ------------------------------------------------- corruption rejection
+
+def test_corrupt_shard_rejected_with_mkr001(tmp_path):
+    tree = small_tree()
+    save_checkpoint(tmp_path, 2, tree)
+    corrupt_shard(tmp_path, step=2)
+    with pytest.raises(DiagnosticError) as ei:
+        load_checkpoint(tmp_path, 2, tree)
+    assert "MK-R001" in str(ei.value)
+
+
+def test_truncated_manifest_rejected_with_mkr001(tmp_path):
+    tree = small_tree()
+    save_checkpoint(tmp_path, 2, tree)
+    truncate_manifest(tmp_path, step=2, keep_bytes=40)
+    with pytest.raises(ValueError) as ei:     # DiagnosticError is one
+        load_checkpoint(tmp_path, 2, tree)
+    assert "MK-R001" in str(ei.value)
+
+
+def test_missing_shard_file_rejected(tmp_path):
+    tree = small_tree()
+    save_checkpoint(tmp_path, 2, tree)
+    d = checkpoint_path(tmp_path, 2)
+    victim = sorted((d / "shards").iterdir())[0]
+    victim.unlink()
+    with pytest.raises(DiagnosticError) as ei:
+        load_checkpoint(tmp_path, 2, tree)
+    assert "MK-R001" in str(ei.value)
+
+
+def test_tree_mismatch_rejected_before_reading_shards(tmp_path):
+    tree = small_tree()
+    save_checkpoint(tmp_path, 2, tree)
+    wrong = dict(tree, extra_leaf=jnp.zeros(2))
+    with pytest.raises(DiagnosticError) as ei:
+        load_checkpoint(tmp_path, 2, wrong)
+    assert "MK-R001" in str(ei.value)
+    wrong_shape = dict(tree, w=jnp.zeros((2, 6)))
+    with pytest.raises(DiagnosticError) as ei:
+        load_checkpoint(tmp_path, 2, wrong_shape)
+    assert "MK-R001" in str(ei.value)
+
+
+# --------------------------------------------------- property: helpers
+
+@given(entries=st.lists(
+    st.one_of(st.none(), st.sampled_from(["stage", "data", "model"]),
+              st.lists(st.sampled_from(["data", "model"]), min_size=1,
+                       max_size=2, unique=True)),
+    max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_spec_json_roundtrip(entries):
+    from jax.sharding import PartitionSpec
+    spec = PartitionSpec(*[tuple(e) if isinstance(e, list) else e
+                           for e in entries])
+    assert spec_from_json(_spec_to_json(spec)) == spec
+
+
+@given(dims=st.lists(st.integers(min_value=1, max_value=8), min_size=1,
+                     max_size=3))
+@settings(max_examples=50, deadline=None)
+def test_norm_index_full_slice_covers_shape(dims):
+    shape = tuple(dims)
+    idx = _norm_index(tuple(slice(None) for _ in shape), shape)
+    assert idx == tuple((0, d) for d in shape)
+
+
+# --------------------------------------------- cross-mesh (subprocess)
+
+CROSS_MESH = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, pathlib
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.ckpt import (checkpoint_path, load_checkpoint,
+                            read_manifest, save_checkpoint)
+    from repro.launch.mesh import make_mesh
+
+    out = pathlib.Path({out!r})
+    mesh = make_mesh((2, 2, 2), ("stage", "data", "model"))
+    tree = {{
+        "layers": jax.device_put(
+            jnp.arange(4 * 8 * 6.0).reshape(4, 8, 6),
+            NamedSharding(mesh, P("stage", None, "model"))),
+        "emb": jax.device_put(jnp.arange(16.0).reshape(4, 4),
+                              NamedSharding(mesh, P(None, "model"))),
+        "scalar": jnp.float32(7.0),
+    }}
+    save_checkpoint(out, 11, tree)
+
+    # --- acceptance: per-shard layout, no host-gather blob -----------
+    man = json.loads(
+        (checkpoint_path(out, 11) / "manifest.json").read_text())
+    recs = {{r["key"]: r for r in man["leaves"]}}
+    # stage×model-sharded leaf → 4 unique shards (2 stage × 2 model);
+    # each shard file holds 1/4 of the leaf, never the global array
+    assert len(recs["layers"]["shards"]) == 4, recs["layers"]
+    assert all(s["nbytes"] == 4 * 8 * 6 * 4 // 4
+               for s in recs["layers"]["shards"])
+    assert len(recs["emb"]["shards"]) == 2
+    assert len(recs["scalar"]["shards"]) == 1
+    assert recs["layers"]["mesh"]["axes"] == ["stage", "data", "model"]
+    assert recs["layers"]["spec"] == ["stage", None, "model"]
+
+    ref = {{k: np.asarray(v) for k, v in tree.items()}}
+
+    # --- restore onto (2, 2) — no stage axis at all ------------------
+    m2 = make_mesh((2, 2), ("data", "model"))
+    sh2 = {{"layers": NamedSharding(m2, P(None, None, "model")),
+           "emb": NamedSharding(m2, P(None, "model")),
+           "scalar": NamedSharding(m2, P())}}
+    r2 = load_checkpoint(out, 11, tree, sh2)
+    for k in ref:
+        assert np.array_equal(np.asarray(r2[k]), ref[k]), k
+    assert len(r2["layers"].sharding.device_set) == 4
+
+    # --- restore onto (4, 2) — different factorization ---------------
+    m3 = make_mesh((4, 2), ("stage", "data"))
+    sh3 = {{"layers": NamedSharding(m3, P("stage", None, None)),
+           "emb": NamedSharding(m3, P()),
+           "scalar": NamedSharding(m3, P())}}
+    r3 = load_checkpoint(out, 11, tree, sh3)
+    for k in ref:
+        assert np.array_equal(np.asarray(r3[k]), ref[k]), k
+    # the stage-sharded leaf really re-sharded 4 ways
+    uniq = {{tuple((sl.start, sl.stop) for sl in s.index)
+            for s in r3["layers"].addressable_shards}}
+    assert len(uniq) == 4, uniq
+
+    # --- restore onto a single device --------------------------------
+    r1 = load_checkpoint(out, 11, tree)
+    for k in ref:
+        assert np.array_equal(np.asarray(r1[k]), ref[k]), k
+    print("OK")
+""")
+
+
+def test_cross_mesh_roundtrips_8_devices(tmp_path):
+    script = CROSS_MESH.format(out=str(tmp_path / "ck"))
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "OK" in r.stdout

@@ -150,6 +150,47 @@ def test_resume_from_checkpoint(tmp_path):
     assert d2.step == 10
 
 
+def test_driver_retry_restores_with_shardings(tmp_path):
+    """The restore-retry path must thread the driver's shardings: after
+    a recovery, state leaves carry the driver's NamedShardings, not the
+    replicated placement a bare load gives."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    ds = SyntheticLM(DataConfig(seq_len=8, global_batch=2, vocab_size=32))
+    cfg = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=3, max_restores=2)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    state = {"step": jnp.asarray(0), "w": jnp.zeros((), jnp.float32)}
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    state = jax.tree.map(jax.device_put, state, shardings)
+    driver = TrainDriver(_FlakyStep(fail_at=5), ds, cfg, state,
+                         shardings=shardings)
+    driver.run(10)
+    assert driver.step == 10
+    assert [e["kind"] for e in driver.events] == ["restore"]
+    # the post-recovery save round-trips through restore_latest with the
+    # driver's shardings — leaves land as NamedShardings on the mesh
+    restored = driver.manager.restore_latest(state, shardings)
+    assert restored is not None
+    for leaf in jax.tree.leaves(restored[1]):
+        assert isinstance(leaf.sharding, NamedSharding), leaf.sharding
+
+
+def test_driver_emergency_save_coexists_with_periodic(tmp_path):
+    """A failure at a step that already has a periodic checkpoint must
+    not clobber it: the emergency save publishes under its own tag."""
+    ds = SyntheticLM(DataConfig(seq_len=8, global_batch=2, vocab_size=32))
+    cfg = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=3, max_restores=2,
+                   keep=5)
+    state = {"step": jnp.asarray(0), "w": jnp.zeros((), jnp.float32)}
+    driver = TrainDriver(_FlakyStep(fail_at=6), ds, cfg, state)
+    driver.run(10)
+    names = {p.name for p in tmp_path.glob("step_*")}
+    assert "step_00000006" in names            # periodic, after step 5
+    assert "step_00000006_emergency" in names  # the failure dump
+    from repro.ckpt import read_manifest
+    assert read_manifest(tmp_path, 6)["tag"] == "periodic"
+
+
 def test_straggler_monitor():
     mon = StragglerMonitor(factor=3.0, alpha=0.5)
     assert not mon.observe(0, 1.0)
